@@ -1,0 +1,52 @@
+"""Hardware constants for the roofline / speedup models.
+
+TPU v5e (the reproduction target, from the assignment):
+    197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+A100/GH200 parameters (the paper's clusters, for the speedup-projection
+benchmark that mirrors Figs. 5-8):
+    Perlmutter: 4xA100-40GB/node, NVLink3 intra-node (600 GB/s), Slingshot-11
+    (4x25 GB/s NICs/node). Vista: GH200/node, NVLink-C2C, IB NDR 400 Gbps.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Chip:
+    name: str
+    peak_flops: float  # /s (bf16)
+    hbm_bw: float  # B/s
+    intra_group_bw: float  # B/s per device, fast domain
+    inter_group_bw: float  # B/s per device, slow/global domain
+    hbm_bytes: float
+
+
+TPU_V5E = Chip(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    intra_group_bw=50e9,  # ICI per link
+    inter_group_bw=25e9,  # pod-crossing / DCN effective per device
+    hbm_bytes=16 * 2**30,
+)
+
+A100_PERLMUTTER = Chip(
+    name="a100-perlmutter",
+    peak_flops=312e12,  # bf16 dense
+    hbm_bw=1555e9,
+    intra_group_bw=300e9,  # NVLink3 effective per GPU
+    inter_group_bw=12.5e9,  # Slingshot-11 per-GPU share (4x25GB/s / 4 GPUs / 2 dir)
+    hbm_bytes=40 * 2**30,
+)
+
+GH200_VISTA = Chip(
+    name="gh200-vista",
+    peak_flops=989e12,
+    hbm_bw=4000e9,
+    intra_group_bw=450e9,  # NVLink-C2C
+    inter_group_bw=25e9,  # IB NDR 400 Gbps / 2 dir
+    hbm_bytes=96 * 2**30,
+)
+
+CHIPS = {c.name: c for c in (TPU_V5E, A100_PERLMUTTER, GH200_VISTA)}

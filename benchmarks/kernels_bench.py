@@ -1,0 +1,71 @@
+"""Kernel microbenchmarks: wall time of the interpret-mode kernels vs the
+jnp references on CPU (correctness-path timing; TPU timings come from the
+roofline model, not this host) plus the analytic FLOP/byte counts that the
+kernels claim per call."""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.pier_update import pier_update
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels import ref as REF
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args(argv)
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    B, S, H, Hkv, hd = 1, 256, 4, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    flops = 4 * B * H * S * S * hd / 2  # causal
+    t_k = _time(flash_attention, q, k, v, reps=args.reps)
+    t_r = _time(REF.flash_attention_ref, q, k, v, reps=args.reps)
+    rows.append(("flash_attention_interp", t_k, f"ref_us={t_r:.0f};flops={flops:.3g}"))
+
+    n = 1 << 20
+    a = jax.random.normal(ks[0], (n,))
+    m = jax.random.normal(ks[1], (n,))
+    d = jax.random.normal(ks[2], (n,)) * 0.01
+    mu = jnp.float32(0.9)
+    lr = jnp.float32(1.0)
+    t_k = _time(pier_update, a, m, d, mu, lr, reps=args.reps)
+    t_r = _time(lambda *x: REF.pier_update_ref(*x[:3], mu=0.9, lr=1.0),
+                a, m, d, reps=args.reps)
+    hbm_bytes = 5 * n * 4  # 3 reads + 2 writes fused
+    rows.append(("pier_update_interp", t_k,
+                 f"ref_us={t_r:.0f};hbm_bytes={hbm_bytes:.3g}"))
+
+    x = jax.random.normal(key, (512, 1024))
+    s = jnp.ones((1024,))
+    t_k = _time(rmsnorm, x, s, reps=args.reps)
+    t_r = _time(REF.rmsnorm_ref, x, s, reps=args.reps)
+    rows.append(("rmsnorm_interp", t_k, f"ref_us={t_r:.0f}"))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Generate experiments/perf/SUMMARY.md from the §Perf hillclimb records."""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from collections import defaultdict
+
+from benchmarks.hardware import TPU_V5E
+
+
+def row(rec):
+    key = next(iter(rec["fit"]))
+    f = rec["fit"][key]
+    mem = (f["argument_bytes_per_device"] + f["temp_bytes_per_device"]
+           + f["output_bytes_per_device"]) / 2**30
+    corr = mem - f.get("cpu_convert_artifact_bytes", 0) / 2**30
+    e = rec["extrapolated"]
+    coll = sum(e["collective_bytes"].values())
+    return {
+        "variant": rec["variant"],
+        "mem": mem, "mem_corr": corr,
+        "fits": corr <= 16.0,
+        "flops": e["flops"],
+        "hbm": e["bytes_accessed"],
+        "coll_gib": coll / 2**30,
+        "compute_s": e["flops"] / TPU_V5E.peak_flops,
+        "memory_s": e["bytes_accessed"] / TPU_V5E.hbm_bw,
+        "collective_s": coll / TPU_V5E.intra_group_bw,
+        "coll_by_kind": {k: v / 2**30
+                         for k, v in e["collective_bytes"].items()},
+        "outer_coll_gib": (sum(rec["fit"].get("outer", {}).get(
+            "collective_bytes", {}).values()) / 2**30
+            if "outer" in rec["fit"] else None),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/perf")
+    args = ap.parse_args(argv)
+    pairs = defaultdict(list)
+    for p in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        rec = json.load(open(p))
+        pairs[(rec["arch"], rec["shape"])].append(row(rec))
+    lines = ["# §Perf hillclimb records (auto-generated)", ""]
+    for (arch, shape), rows in pairs.items():
+        lines.append(f"## {arch} × {shape}")
+        lines.append("")
+        lines.append("| variant | mem GiB/dev (corr) | fits 16G | "
+                     "compute (ms) | memory (ms) | collective (ms) | "
+                     "coll GiB/dev | Δ vs baseline |")
+        lines.append("|---|---|---|---|---|---|---|---|")
+        base = next((r for r in rows if r["variant"] == "baseline"), rows[0])
+        for r in sorted(rows, key=lambda r: (r["variant"] != "baseline",
+                                             r["variant"])):
+            dmem = (r["mem_corr"] - base["mem_corr"]) / max(base["mem_corr"],
+                                                            1e-9) * 100
+            dcoll = (r["coll_gib"] - base["coll_gib"]) / max(base["coll_gib"],
+                                                             1e-9) * 100
+            lines.append(
+                f"| {r['variant']} | {r['mem']:.1f} ({r['mem_corr']:.1f}) "
+                f"| {'yes' if r['fits'] else 'NO'} "
+                f"| {r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} "
+                f"| {r['collective_s']*1e3:.1f} | {r['coll_gib']:.1f} "
+                f"| mem {dmem:+.0f}% / coll {dcoll:+.0f}% |")
+        lines.append("")
+    out = "\n".join(lines)
+    with open(os.path.join(args.dir, "SUMMARY.md"), "w") as f:
+        f.write(out + "\n")
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,199 @@
+"""§Roofline: derive the three-term roofline per (arch × shape) from the
+dry-run records (single-pod mesh) and emit the analysis table.
+
+    compute term    = HLO_FLOPs(dev)        / peak_FLOP/s
+    memory term     = HLO_bytes(dev)        / HBM_bw
+    collective term = collective_bytes(dev) / link_bw
+
+For train shapes the collective term is Pier's *effective* per-step cost:
+inner-step collectives (intra-group links) + outer-step collectives / H
+(H = 50, the paper's default sync interval), reported next to the AdamW
+baseline (warmup-step collectives every step). FLOPs/bytes come from the
+depth-extrapolated cost compiles (exact; see dryrun.py docstring).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from benchmarks.hardware import TPU_V5E
+
+H_DEFAULT = 50  # paper's default sync interval for amortizing the outer step
+SHAPE_TOKENS = {
+    "train_4k": 256 * 4096,
+    "prefill_32k": 32 * 32768,
+    "decode_32k": 128,
+    "long_500k": 1,
+}
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _canon_arch(a: str) -> str:
+    return a.replace("qwen3-1-7b", "qwen3-1.7b").replace(
+        "xlstm-1-3b", "xlstm-1.3b")
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    skipped: Optional[str] = None
+    flops_dev: float = 0.0
+    hbm_bytes_dev: float = 0.0
+    coll_bytes_dev: float = 0.0
+    coll_bytes_baseline: float = 0.0  # AdamW (train only)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    collective_s_baseline: float = 0.0
+    dominant: str = ""
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0
+    mem_gib_dev: float = 0.0
+    mem_gib_corrected: float = 0.0
+    fits_16g: bool = False
+    note: str = ""
+
+
+def _sum_coll(d: Dict[str, float]) -> float:
+    return float(sum(d.values()))
+
+
+def load_record(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def analyze_record(rec: dict, chip=TPU_V5E, h: int = H_DEFAULT) -> RooflineRow:
+    arch = _canon_arch(rec["arch"])
+    row = RooflineRow(arch=arch, shape=rec["shape"])
+    if "skipped" in rec:
+        row.skipped = rec["skipped"]
+        return row
+    cfg = rec["config"]
+    fit = rec["fit"]
+    key = "inner" if "inner" in fit else next(iter(fit))
+    fr = fit[key]
+    mem = fr["argument_bytes_per_device"] + fr["temp_bytes_per_device"] \
+        + fr["output_bytes_per_device"]
+    corr = fr.get("cpu_convert_artifact_bytes", 0)
+    row.mem_gib_dev = mem / 2**30
+    row.mem_gib_corrected = max(mem - corr, 0) / 2**30
+    row.fits_16g = row.mem_gib_corrected <= 16.0
+
+    ext = rec.get("extrapolated")
+    if ext:
+        row.flops_dev = ext["flops"]
+        row.hbm_bytes_dev = ext["bytes_accessed"]
+        coll = ext["collective_bytes"]
+    else:
+        row.flops_dev = fr["flops"]
+        row.hbm_bytes_dev = fr["bytes_accessed"]
+        coll = fr["collective_bytes"]
+        row.note = "fit-compile cost (scan bodies undercounted)"
+    row.coll_bytes_dev = _sum_coll(coll)
+
+    if "outer" in fit:
+        # Pier effective collectives = inner + outer/H; baseline = warmup
+        outer_coll = _sum_coll(fit["outer"]["collective_bytes"])
+        row.coll_bytes_dev += outer_coll / h
+        if "warmup" in fit:
+            # warmup per-layer collectives ~= inner's + grad allreduce; use
+            # measured fit-compile values, scaled by the inner ext/fit ratio
+            fit_inner = _sum_coll(fit["inner"]["collective_bytes"])
+            scale = (row.coll_bytes_dev - outer_coll / h) / max(fit_inner, 1.0)
+            row.coll_bytes_baseline = \
+                _sum_coll(fit["warmup"]["collective_bytes"]) * max(scale, 1.0)
+
+    row.compute_s = row.flops_dev / chip.peak_flops
+    row.memory_s = row.hbm_bytes_dev / chip.hbm_bw
+    row.collective_s = row.coll_bytes_dev / chip.intra_group_bw
+    row.collective_s_baseline = (
+        row.coll_bytes_baseline / chip.intra_group_bw
+        if row.coll_bytes_baseline else 0.0)
+    terms = {"compute": row.compute_s, "memory": row.memory_s,
+             "collective": row.collective_s}
+    row.dominant = max(terms, key=terms.get)
+
+    # MODEL_FLOPS: 6*N_active*tokens (train) / 2*N_active*tokens (inference)
+    tokens = SHAPE_TOKENS[rec["shape"]]
+    n_active = cfg["active_params"]
+    mult = 6 if rec["shape"] == "train_4k" else 2
+    row.model_flops = mult * n_active * tokens
+    chips = 256
+    total_hlo = row.flops_dev * chips
+    row.useful_ratio = row.model_flops / total_hlo if total_hlo else 0.0
+    return row
+
+
+def load_rows(dryrun_dir: str, mesh: str = "single") -> List[RooflineRow]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, f"*__{mesh}.json"))):
+        rows.append(analyze_record(load_record(path)))
+    order = {s: i for i, s in enumerate(SHAPE_ORDER)}
+    rows.sort(key=lambda r: (r.arch, order.get(r.shape, 9)))
+    return rows
+
+
+def to_markdown(rows: List[RooflineRow]) -> str:
+    out = ["| arch | shape | compute (ms) | memory (ms) | collective (ms) "
+           "| AdamW coll. (ms) | dominant | useful FLOP ratio | mem GiB/dev "
+           "(corr.) | fits 16G |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.skipped:
+            out.append(f"| {r.arch} | {r.shape} | — | — | — | — | skipped | "
+                       f"— | — | {r.skipped[:60]} |")
+            continue
+        base = (f"{r.collective_s_baseline*1e3:.2f}"
+                if r.collective_s_baseline else "—")
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.compute_s*1e3:.2f} "
+            f"| {r.memory_s*1e3:.2f} | {r.collective_s*1e3:.3f} | {base} "
+            f"| **{r.dominant}** | {min(r.useful_ratio, 9.99):.2f} "
+            f"| {r.mem_gib_dev:.1f} ({r.mem_gib_corrected:.1f}) "
+            f"| {'yes' if r.fits_16g else 'NO'} |")
+    return "\n".join(out)
+
+
+def to_csv(rows: List[RooflineRow]) -> str:
+    hdr = ("arch,shape,flops_dev,hbm_bytes_dev,coll_bytes_dev,"
+           "coll_bytes_baseline,compute_s,memory_s,collective_s,"
+           "collective_s_baseline,dominant,model_flops,useful_ratio,"
+           "mem_gib_dev,mem_gib_corrected,fits_16g,skipped")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"{r.arch},{r.shape},{r.flops_dev:.4g},{r.hbm_bytes_dev:.4g},"
+            f"{r.coll_bytes_dev:.4g},{r.coll_bytes_baseline:.4g},"
+            f"{r.compute_s:.4g},{r.memory_s:.4g},{r.collective_s:.4g},"
+            f"{r.collective_s_baseline:.4g},{r.dominant},"
+            f"{r.model_flops:.4g},{r.useful_ratio:.4g},"
+            f"{r.mem_gib_dev:.3f},{r.mem_gib_corrected:.3f},{r.fits_16g},"
+            f"\"{r.skipped or ''}\"")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/roofline")
+    args = ap.parse_args(argv)
+    rows = load_rows(args.dryrun_dir)
+    os.makedirs(args.out, exist_ok=True)
+    md = to_markdown(rows)
+    with open(os.path.join(args.out, "roofline.md"), "w") as f:
+        f.write(md + "\n")
+    with open(os.path.join(args.out, "roofline.csv"), "w") as f:
+        f.write(to_csv(rows) + "\n")
+    print(md)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Benchmark entry point: one benchmark per paper table/figure.
+
+``python -m benchmarks.run``            — quick profile (CI-sized)
+``python -m benchmarks.run --full``     — longer convergence runs
+
+Prints ``name,us_per_call,derived`` CSV lines per the harness convention;
+full artifacts land under experiments/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args(argv)
+
+    steps = 800 if args.full else 150
+    rows = []
+
+    def timed(name, fn, derive):
+        t0 = time.perf_counter()
+        out = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((name, us, derive(out)))
+        return out
+
+    # --- Fig. 1/3 + Table II proxy: convergence of AdamW / DiLoCo / Pier ---
+    from benchmarks import convergence
+    print("[convergence] (paper Figs. 1&3)", flush=True)
+    conv = timed(
+        "convergence_fig3",
+        lambda: convergence.run(size="tiny", steps=steps, groups=4,
+                                interval=10),
+        lambda p: ";".join(
+            f"{k}={v['final_val_loss']:.4f}" for k, v in p["results"].items()))
+
+    # --- Fig. 4 / Table III: weak scaling over global batch ---
+    from benchmarks import weak_scaling
+    print("[weak_scaling] (paper Fig. 4 / Table III)", flush=True)
+    token_budget = steps * 32 * 64
+    timed("weak_scaling_tab3",
+          lambda: weak_scaling.run(size="tiny", token_budget=token_budget,
+                                   batches=(16, 32, 64)),
+          lambda rows_: ";".join(
+              f"b{r['global_batch']}={r['final_val_loss']:.4f}"
+              for r in rows_))
+
+    # --- Table IV: sync-interval sweep ---
+    from benchmarks import sync_interval
+    print("[sync_interval] (paper Table IV)", flush=True)
+    timed("sync_interval_tab4",
+          lambda: sync_interval.run(size="tiny", steps=steps,
+                                    intervals=(5, 10, 25)),
+          lambda rows_: ";".join(
+              f"H{r['interval']}={r['final_val_loss']:.4f}" for r in rows_))
+
+    # --- Figs. 5-8: runtime speedup projection ---
+    from benchmarks import speedup_model
+    print("[speedup_model] (paper Figs. 5-8)", flush=True)
+    timed("speedup_fig5to8",
+          lambda: speedup_model.main([]),
+          lambda all_rows: "gpt2-xl_a100x256_speedup=%.2f" % (
+              all_rows["gpt2-xl__a100-perlmutter"][-1]["speedup"]))
+
+    # --- kernels ---
+    from benchmarks import kernels_bench
+    print("[kernels]", flush=True)
+    for name, us, derived in kernels_bench.main(["--reps", "2"]):
+        rows.append((name, us, derived))
+
+    # --- §Roofline table from the dry-run records ---
+    if not args.skip_roofline:
+        import os
+        from benchmarks import roofline
+        if os.path.isdir("experiments/dryrun") and \
+                len(os.listdir("experiments/dryrun")) > 0:
+            print("[roofline] (from dry-run records)", flush=True)
+            rl_rows = roofline.main(["--dryrun-dir", "experiments/dryrun",
+                                     "--out", "experiments/roofline"])
+            dominated = {}
+            for r in rl_rows:
+                if not r.skipped:
+                    dominated[r.dominant] = dominated.get(r.dominant, 0) + 1
+            rows.append(("roofline_table", 0.0,
+                         ";".join(f"{k}={v}" for k, v in dominated.items())))
+        else:
+            print("[roofline] skipped (no dry-run records; run "
+                  "python -m repro.launch.dryrun --all first)", flush=True)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Paper Fig. 4 / Table III: global-batch-size boundary under weak scaling.
+
+Fixed token budget: doubling the global batch halves the step count. The
+paper finds convergence degrades beyond batch 512 (8 groups); here the same
+sweep runs at CPU scale — the *shape* of the degradation (monotone val-loss
+increase with batch at fixed tokens) is the claim under test.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.config import TrainConfig
+from repro.core.simulate import SimulatedRun
+from benchmarks.convergence import model_cfg
+
+
+def run(size="tiny", token_budget=400 * 32 * 64, batches=(16, 32, 64, 128),
+        interval=10, seed=0, out_dir="experiments/weak_scaling"):
+    mc = model_cfg(size)
+    rows = []
+    for gb in batches:
+        steps = max(token_budget // (gb * 64), 20)
+        groups = max(gb // 8, 1)  # one group per 8 sequences (weak scaling)
+        tc = TrainConfig(
+            optimizer="pier", total_steps=steps, global_batch_size=gb,
+            seq_len=64, sync_interval=interval, inner_lr=1e-3,
+            inner_min_lr=1e-4, seed=seed)
+        r = SimulatedRun(mc, tc, num_groups=groups, seed=seed)
+        hist = r.run(steps, eval_every=max(steps // 10, 1))
+        rows.append({"global_batch": gb, "groups": groups, "steps": steps,
+                     "final_val_loss": hist["val_loss"][-1]})
+        print(f"  batch={gb:4d} groups={groups} steps={steps} "
+              f"val={rows[-1]['final_val_loss']:.4f}", flush=True)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"weak_scaling_{size}.json"), "w") as f:
+        json.dump(rows, f, indent=2)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", default="tiny")
+    ap.add_argument("--budget", type=int, default=400 * 32 * 64)
+    args = ap.parse_args(argv)
+    run(args.size, args.budget)
+
+
+if __name__ == "__main__":
+    main()

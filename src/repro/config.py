@@ -1,0 +1,312 @@
+"""Central configuration dataclasses for the Pier framework.
+
+Three layers of config compose a run:
+
+- :class:`ModelConfig` — architecture definition (one per assigned arch).
+- :class:`ParallelConfig` — mesh / sharding / Pier-group layout.
+- :class:`TrainConfig` — optimization hyperparameters, including every Pier
+  knob from the paper (warmup proportion ``p``, sync interval ``r``/H,
+  momentum-decay schedule, outer LR schedule, offload switch).
+
+All configs are frozen dataclasses so they can be hashed into jit caches and
+static arguments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture definition.
+
+    One decoder substrate covers dense / MoE / SSM / hybrid / VLM families;
+    encoder-decoder (audio) adds a stubbed-frontend encoder stack.
+    """
+
+    name: str = "unnamed"
+    family: str = "dense"  # dense | moe | ssm | hybrid | vlm | audio
+
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 32000
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # --- attention variants -------------------------------------------------
+    attention_kind: str = "gqa"  # gqa | mla | none (for pure-SSM layers)
+    use_qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    positional: str = "rope"  # rope | learned | none
+    max_position_embeddings: int = 8192  # only for learned positions
+    sliding_window: int = 0  # 0 -> full attention; >0 -> SWA window
+    logit_softcap: float = 0.0
+
+    # --- MLA (DeepSeek-V2) ---------------------------------------------------
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_rope_head_dim: int = 64
+    qk_nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+    # --- MoE -----------------------------------------------------------------
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0  # leading layers that use the dense MLP
+    router_aux_loss_coef: float = 0.001
+    expert_capacity_factor: float = 1.25
+
+    # --- SSM / hybrid block pattern -------------------------------------------
+    # Cycled over layers. Entries: "attn", "local_attn", "mlstm", "slstm", "rglru".
+    block_pattern: Tuple[str, ...] = ("attn",)
+    local_window: int = 2048
+    lru_width: int = 0  # 0 -> d_model
+    conv1d_width: int = 4
+    mlstm_chunk: int = 64
+
+    # --- encoder-decoder (audio) ----------------------------------------------
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq_len: int = 1500
+    frontend_dim: int = 0  # stubbed frontend embedding dim (0 -> d_model)
+
+    # --- misc ------------------------------------------------------------------
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    activation: str = "swiglu"  # swiglu | gelu
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    source: str = ""  # citation for the config
+
+    # ------------------------------------------------------------------ helpers
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def resolved_lru_width(self) -> int:
+        return self.lru_width or self.d_model
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    def block_kind(self, layer_idx: int) -> str:
+        """Mixing-block kind ("attn", "mlstm", ...) for a decoder layer."""
+        return self.block_pattern[layer_idx % len(self.block_pattern)]
+
+    def uses_kv_cache(self, layer_idx: int) -> bool:
+        return self.block_kind(layer_idx) in ("attn", "local_attn")
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if every mixing block has O(1)/O(window) decode state."""
+        kinds = {self.block_kind(i) for i in range(self.num_layers)}
+        if "attn" in kinds and self.sliding_window == 0 and self.attention_kind != "none":
+            return False
+        if self.attention_kind == "mla" and self.sliding_window == 0 and "attn" in kinds:
+            return False
+        return True
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # Parameter count (for 6ND model-FLOPs accounting). Computed analytically
+    # so benchmarks do not need to materialize weights.
+    def param_count(self) -> int:
+        from repro.models.registry import count_params  # lazy: avoid cycle
+
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.registry import count_params
+
+        return count_params(self, active_only=True)
+
+
+# ---------------------------------------------------------------------------
+# Parallel / mesh configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """Mesh layout and Pier group structure.
+
+    The production mesh is (data=16, model=16) per pod; Pier refines the data
+    axis into ``data_outer × data_inner`` where a *group* = one
+    ``(pod, data_outer)`` index (``data_inner × model`` chips). Inner-optimizer
+    collectives are confined to ``(data_inner, model)``; the outer optimizer is
+    the only thing that ever communicates across ``(pod, data_outer)``.
+    """
+
+    data_axis_size: int = 16
+    model_axis_size: int = 16
+    num_pods: int = 1
+    # Number of Pier groups along the data axis *per pod*. Groups per run =
+    # num_pods * data_outer. data_inner = data_axis_size // data_outer.
+    data_outer: int = 4
+
+    # Sharding toggles
+    fsdp: bool = True  # shard params/opt state over data_inner (ZeRO-3 in group)
+    shard_experts: bool = True  # expert-parallel over the model axis
+    remat: str = "none"  # none | full | selective  (activation checkpointing)
+    use_pallas: bool = False  # pallas kernels in the model fwd (TPU only)
+    num_microbatches: int = 1  # gradient accumulation inside the inner step
+    context_parallel: bool = False  # shard decode KV cache over seq (long_500k)
+    scan_layers: bool = False  # lax.scan over layer cycles (compile time + memory)
+
+    @property
+    def data_inner(self) -> int:
+        assert self.data_axis_size % self.data_outer == 0, (
+            f"data axis {self.data_axis_size} not divisible by "
+            f"data_outer {self.data_outer}"
+        )
+        return self.data_axis_size // self.data_outer
+
+    @property
+    def num_groups(self) -> int:
+        return self.num_pods * self.data_outer
+
+    @property
+    def group_size(self) -> int:
+        return self.data_inner * self.model_axis_size
+
+    @property
+    def num_devices(self) -> int:
+        return self.num_pods * self.data_axis_size * self.model_axis_size
+
+    def replace(self, **kw) -> "ParallelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Training / optimizer configuration (Table I of the paper + Pier §IV/§V)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "pier"  # pier | diloco | adamw
+
+    # ---- inner optimizer (AdamW, Table I) ----
+    inner_lr: float = 4e-4
+    inner_min_lr: float = 4e-5
+    adam_beta1: float = 0.9
+    adam_beta2: float = 0.999
+    adam_eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_grad: float = 1.0
+    lr_schedule: str = "cosine"  # cosine | wsd | constant
+    lr_warmup_frac: float = 0.02
+    wsd_decay_frac: float = 0.1  # for MiniCPM's WSD schedule
+
+    # ---- run shape ----
+    total_steps: int = 100_000
+    global_batch_size: int = 512
+    seq_len: int = 1024
+    seed: int = 0
+
+    # ---- Pier / DiLoCo outer optimizer ----
+    sync_interval: int = 50  # r / H in the paper
+    warmup_frac: float = 0.10  # p: lazy-start proportion
+    outer_optimizer: str = "nesterov_torch"  # nesterov_torch | nesterov_classic | sgd
+    outer_momentum: float = 0.9  # terminal mu
+    # momentum decay schedule (Alg. 2): list of (frac_lo, frac_hi, mu)
+    momentum_decay: Tuple[Tuple[float, float, float], ...] = (
+        (0.10, 0.15, 0.99),
+        (0.15, 0.20, 0.95),
+        (0.20, 1.01, 0.90),
+    )
+    # outer LR schedule (§V): warmup 0->1 over [p, outer_lr_warmup_end], then
+    # mid value until outer_lr_mid_end, then final value.
+    outer_lr_warmup_end: float = 0.20
+    outer_lr_mid: float = 1.1
+    outer_lr_mid_end: float = 0.80
+    outer_lr_final: float = 0.9
+    fixed_outer_lr: float = 0.7  # DiLoCo baseline's recommended constant
+    momentum_warmup: bool = True  # Alg. 1 (disabled for vanilla DiLoCo)
+    lazy_start: bool = True  # AdamW phase before switching (DiLoCo: off)
+
+    # ---- memory ----
+    offload_outer_state: bool = False  # host-memory offload of anchor + M (§V)
+    opt_state_dtype: str = "float32"  # float32 (paper) | bfloat16 (beyond-paper)
+
+    # ---- loss ----
+    z_loss_coef: float = 0.0
+
+    def replace(self, **kw) -> "TrainConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def warmup_steps(self) -> int:
+        return int(self.total_steps * self.warmup_frac)
+
+    def mu_at(self, step: int) -> float:
+        """Momentum-decay schedule (Algorithm 2, lines 12-18)."""
+        frac = step / max(self.total_steps, 1)
+        for lo, hi, mu in self.momentum_decay:
+            if lo <= frac < hi:
+                return mu
+        return self.outer_momentum
+
+    def outer_lr_at(self, step: int) -> float:
+        """Outer LR schedule from §V (Implementation)."""
+        frac = step / max(self.total_steps, 1)
+        p = self.warmup_frac
+        if frac < p:
+            return 0.0  # outer optimizer not applied during lazy start
+        if frac < self.outer_lr_warmup_end:
+            span = self.outer_lr_warmup_end - p
+            return (frac - p) / max(span, 1e-9)
+        if frac < self.outer_lr_mid_end:
+            return self.outer_lr_mid
+        return self.outer_lr_final
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned suite)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+INPUT_SHAPES = {
+    s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+}
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Everything needed to launch one run."""
+
+    model: ModelConfig = field(default_factory=ModelConfig)
+    parallel: ParallelConfig = field(default_factory=ParallelConfig)
+    train: TrainConfig = field(default_factory=TrainConfig)
+
+    def replace(self, **kw) -> "RunConfig":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,78 @@
+"""Architecture configuration registry.
+
+Every assigned architecture (and the paper's own GPT-2 family) registers a
+full-scale :class:`~repro.config.ModelConfig` plus a ``reduced`` smoke-test
+variant (<=2 layers, d_model<=512, <=4 experts) that runs a real step on CPU.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.config import ModelConfig
+
+# Assigned pool (10) + paper's own models.
+ARCH_MODULES = [
+    "deepseek_v2_236b",
+    "granite_8b",
+    "minicpm_2b",
+    "qwen3_14b",
+    "qwen3_1_7b",
+    "xlstm_1_3b",
+    "chameleon_34b",
+    "recurrentgemma_9b",
+    "whisper_large_v3",
+    "kimi_k2_1t_a32b",
+    # paper's evaluation models (GPT-2 family, Table I)
+    "gpt2_small",
+    "gpt2_medium",
+    "gpt2_xl",
+    "gpt2_7b",
+]
+
+# canonical display names (as in the assignment table)
+_DISPLAY = {
+    "qwen3_1_7b": "qwen3-1.7b",
+    "xlstm_1_3b": "xlstm-1.3b",
+}
+_CANONICAL = {_DISPLAY.get(m, m.replace("_", "-")): m for m in ARCH_MODULES}
+# accept a few alternate spellings
+_ALIASES = {
+    "qwen3-1-7b": "qwen3_1_7b",
+    "xlstm-1-3b": "xlstm_1_3b",
+}
+
+
+def _module_for(name: str):
+    key = name.replace("_", "-").lower()
+    mod = _ALIASES.get(key) or _CANONICAL.get(key)
+    if mod is None:
+        raise KeyError(
+            f"unknown architecture {name!r}; available: {sorted(_CANONICAL)}"
+        )
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str) -> ModelConfig:
+    """Full-scale config for ``--arch <name>``."""
+    return _module_for(name).model_config()
+
+
+def get_reduced_config(name: str) -> ModelConfig:
+    """Reduced same-family smoke variant (2 layers, d_model<=512, <=4 experts)."""
+    return _module_for(name).reduced_config()
+
+
+def list_architectures() -> List[str]:
+    return sorted(_CANONICAL)
+
+
+def assigned_architectures() -> List[str]:
+    """The ten assigned-pool architectures (excludes the GPT-2 family)."""
+    return [_DISPLAY.get(m, m.replace("_", "-"))
+            for m in ARCH_MODULES if not m.startswith("gpt2")]
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {n: get_config(n) for n in list_architectures()}

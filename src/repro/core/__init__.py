@@ -1,0 +1,7 @@
+from repro.core.outer import (  # noqa: F401
+    OuterState,
+    outer_init,
+    outer_update,
+    warmup_accumulate,
+)
+from repro.core.pier import PierSchedule  # noqa: F401

@@ -1,0 +1,70 @@
+"""Host-memory offload of the outer-optimizer state (paper §V).
+
+Between outer steps the anchor model ``θ_{t−r}`` and the momentum ``M`` are
+dead weight in HBM (they are touched once every ``r`` inner steps). The paper
+offloads them to host memory; on TPU the equivalent is JAX memory kinds:
+``device_put`` onto a sharding with ``memory_kind="pinned_host"``.
+
+Each device offloads only its own shard (the paper's "avoid redundant data
+movement" note) — this falls out for free because we offload the sharded
+arrays as-is, preserving their sharding but switching the memory kind.
+
+On backends without pinned_host support (the CPU validation backend),
+offload degrades to a no-op and ``supports_offload()`` reports False; the
+switch semantics (`TrainConfig.offload_outer_state`) are identical.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+
+
+@functools.cache
+def supports_offload() -> bool:
+    try:
+        dev = jax.devices()[0]
+        kinds = getattr(dev, "addressable_memories", lambda: [])()
+        return any(m.kind == "pinned_host" for m in kinds)
+    except Exception:
+        return False
+
+
+def _with_memory_kind(sharding, kind: str):
+    return sharding.with_memory_kind(kind)
+
+
+def to_host(tree: Any) -> Any:
+    """Move a pytree of arrays to pinned host memory (keeps sharding)."""
+    if not supports_offload():
+        return tree
+
+    def move(x):
+        if not isinstance(x, jax.Array):
+            return x
+        return jax.device_put(x, _with_memory_kind(x.sharding, "pinned_host"))
+
+    return jax.tree.map(move, tree)
+
+
+def to_device(tree: Any) -> Any:
+    """Bring an offloaded pytree back to device HBM."""
+    if not supports_offload():
+        return tree
+
+    def move(x):
+        if not isinstance(x, jax.Array):
+            return x
+        return jax.device_put(x, _with_memory_kind(x.sharding, "device"))
+
+    return jax.tree.map(move, tree)
+
+
+def offload_bytes(tree: Any) -> int:
+    """HBM bytes freed by offloading ``tree`` (for the memory report)."""
+    return sum(
+        x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)
+        if hasattr(x, "size")
+    )

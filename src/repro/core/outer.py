@@ -1,0 +1,117 @@
+"""The Pier outer optimizer (Algorithms 1 & 2 of the paper).
+
+The outer "gradient" is the averaged model delta ``Δθ = θ_t − θ_{t−r}``
+(already globally all-reduced by the caller). Three formulations:
+
+- ``nesterov_torch`` (the paper's choice, §V): PyTorch's approximated
+  Nesterov —  ``M ← μM + Δθ;  θ ← θ_anchor + lr·(μM + Δθ)``  (Alg. 2 l.20-21).
+- ``nesterov_classic``: Nesterov's original look-ahead form, which in the
+  delta-space reduces to using the *pre-update* momentum for the correction:
+  ``θ ← θ_anchor + lr·(μ·M_old + (1+μ−μ)·Δθ)`` with ``M ← μM + Δθ`` — the
+  paper implements both and reports the torch variant converges better.
+- ``sgd``: plain momentum SGD, ``θ ← θ_anchor + lr·M``.
+
+Note the **sign convention**: Δθ points in the *improvement* direction
+(it is the result of inner optimization), so the outer step *adds* it —
+equivalently the outer gradient is −Δθ fed to a standard minimizer.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class OuterState(NamedTuple):
+    momentum: Any  # M pytree (fp32 by default)
+    anchor: Any  # θ_{t-r}: model snapshot at the last sync
+    num_syncs: jax.Array  # () int32 — how many outer steps have been taken
+
+
+def outer_init(params, tc: TrainConfig) -> OuterState:
+    dt = jnp.dtype(tc.opt_state_dtype)
+    return OuterState(
+        momentum=jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params),
+        anchor=jax.tree.map(lambda p: p.astype(dt), params),
+        num_syncs=jnp.zeros((), jnp.int32),
+    )
+
+
+def warmup_accumulate(state: OuterState, params, mu) -> OuterState:
+    """Algorithm 1, lines 5-6: Δθ = θ_t − θ_{t−r};  M ← μM + Δθ.
+
+    Called every ``r`` steps during the lazy-start phase. The momentum is
+    accumulated but NOT applied; the anchor advances to the current model.
+    """
+    sdt = jax.tree.leaves(state.momentum)[0].dtype
+
+    def acc(m, p, a):
+        delta = p.astype(jnp.float32) - a.astype(jnp.float32)
+        return (mu * m.astype(jnp.float32) + delta).astype(sdt)
+
+    new_m = jax.tree.map(acc, state.momentum, params, state.anchor)
+    new_anchor = jax.tree.map(lambda p, a: p.astype(a.dtype), params, state.anchor)
+    return OuterState(momentum=new_m, anchor=new_anchor,
+                      num_syncs=state.num_syncs + 1)
+
+
+def outer_update(
+    state: OuterState,
+    delta_avg,  # globally averaged Δθ pytree (fp32)
+    tc: TrainConfig,
+    *,
+    mu,  # momentum coefficient (schedule of Alg. 2)
+    lr,  # outer LR (schedule of §V)
+    use_pallas: bool = False,
+):
+    """Algorithm 2, lines 19-21. Returns (new_params_f32, new_state).
+
+    ``new_params`` come back in fp32; the caller casts to the param dtype and
+    re-broadcasts. With ``use_pallas`` the fused update kernel is used
+    (single HBM pass over θ/M/Δθ — see kernels/pier_update.py).
+    """
+    sdt = jnp.dtype(jax.tree.leaves(state.momentum)[0].dtype)
+
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        return kops.pier_outer_update(state, delta_avg, tc, mu=mu, lr=lr)
+
+    form = tc.outer_optimizer
+
+    def upd(m, a, d):
+        mf = m.astype(jnp.float32)
+        af = a.astype(jnp.float32)
+        df = d.astype(jnp.float32)
+        m_new = mu * mf + df
+        if form == "nesterov_torch":
+            step = mu * m_new + df
+        elif form == "nesterov_classic":
+            step = mu * mf + df
+        elif form == "sgd":
+            step = m_new
+        else:
+            raise ValueError(f"unknown outer optimizer {form!r}")
+        p_new = af + lr * step
+        return p_new, m_new.astype(sdt)
+
+    flat, treedef = jax.tree_util.tree_flatten(state.momentum)
+    a_flat = treedef.flatten_up_to(state.anchor)
+    d_flat = treedef.flatten_up_to(delta_avg)
+    p_new, m_new = [], []
+    for m, a, d in zip(flat, a_flat, d_flat):
+        p, mm = upd(m, a, d)
+        p_new.append(p)
+        m_new.append(mm)
+    unf = jax.tree_util.tree_unflatten
+    new_params = unf(treedef, p_new)
+    new_state = OuterState(
+        momentum=unf(treedef, m_new),
+        anchor=jax.tree.map(lambda p: p.astype(sdt), new_params),
+        num_syncs=state.num_syncs + 1,
+    )
+    return new_params, new_state

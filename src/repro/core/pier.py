@@ -1,0 +1,86 @@
+"""Pier schedule logic: phase selection, momentum decay, outer LR.
+
+The host training loop consults :class:`PierSchedule` each step to decide
+which jitted step function to run (warmup / inner / outer) — this mirrors the
+paper's Megatron integration where the outer sync is woven into the main
+training loop at interval boundaries (§V).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Literal
+
+from repro.config import TrainConfig
+
+Phase = Literal["warmup", "inner"]
+
+
+@dataclass(frozen=True)
+class PierSchedule:
+    tc: TrainConfig
+
+    # ---------------------------------------------------------- phase logic
+    def phase(self, step: int) -> Phase:
+        """Which inner step runs at ``step`` (0-based)."""
+        if self.tc.optimizer == "adamw":
+            return "warmup"  # AdamW baseline = global sync every step
+        if self.tc.optimizer == "diloco" and not self.tc.lazy_start:
+            return "inner"
+        return "warmup" if step < self.warmup_steps else "inner"
+
+    @property
+    def warmup_steps(self) -> int:
+        if self.tc.optimizer == "adamw":
+            return self.tc.total_steps
+        if self.tc.optimizer == "diloco" and not self.tc.lazy_start:
+            return 0
+        return self.tc.warmup_steps
+
+    def is_sync_step(self, step: int) -> bool:
+        """True if an outer event fires AFTER the inner update at ``step``.
+
+        During warmup the event is momentum accumulation (Alg. 1 line 4,
+        Pier only); after warmup it is the outer optimizer step (Alg. 2).
+        """
+        if self.tc.optimizer == "adamw":
+            return False
+        if (step + 1) % self.tc.sync_interval != 0:
+            return False
+        if step < self.warmup_steps:
+            # momentum warmup accumulation — Pier only (DiLoCo lazy-starts
+            # without accumulating)
+            return self.tc.momentum_warmup
+        return True
+
+    def sync_kind(self, step: int) -> str:
+        return "accumulate" if step < self.warmup_steps else "outer"
+
+    # ------------------------------------------------------------ schedules
+    def mu_at(self, step: int) -> float:
+        """Momentum-decay schedule (Alg. 2 lines 12-18). DiLoCo: fixed 0.9."""
+        if self.tc.optimizer == "diloco":
+            return self.tc.outer_momentum
+        return self.tc.mu_at(step)
+
+    def outer_lr_at(self, step: int) -> float:
+        """Outer LR schedule (§V). DiLoCo: fixed (paper recommends 0.7)."""
+        if self.tc.optimizer == "diloco":
+            return self.tc.fixed_outer_lr
+        return self.tc.outer_lr_at(step)
+
+    # -------------------------------------------------------------- helpers
+    def num_outer_steps(self) -> int:
+        post = self.tc.total_steps - self.warmup_steps
+        return post // self.tc.sync_interval
+
+    def global_comm_fraction(self) -> float:
+        """Fraction of steps that require global (cross-group) communication.
+
+        This is the quantity Pier optimizes: AdamW = 1.0; Pier/DiLoCo = 1/r
+        after warmup (plus the warmup phase itself).
+        """
+        if self.tc.optimizer == "adamw":
+            return 1.0
+        w = self.warmup_steps / max(self.tc.total_steps, 1)
+        return w + (1 - w) / self.tc.sync_interval

@@ -1,0 +1,68 @@
+"""Deterministic synthetic language-model data.
+
+Pretraining-convergence benchmarks need data with *learnable structure* so
+that optimizer differences show up in the loss curve (pure-random tokens have
+a constant-entropy floor reached immediately). We use a sparse first-order
+Markov chain over the vocabulary: each token has ``branching`` possible
+successors with Dirichlet-distributed probabilities. The achievable loss
+floor is the chain's conditional entropy; how fast an optimizer approaches it
+mirrors the paper's validation-loss comparisons (Figs. 1, 3, 4).
+
+Everything is seeded and pure-jnp, so batches are reproducible across
+processes — group ``g`` always sees stream ``seed + g``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class MarkovLM:
+    def __init__(self, vocab_size: int, *, seed: int = 0, branching: int = 8,
+                 concentration: float = 0.5):
+        self.vocab_size = vocab_size
+        self.branching = min(branching, vocab_size)
+        rng = np.random.default_rng(seed)
+        succ = np.stack([
+            rng.choice(vocab_size, size=self.branching, replace=False)
+            for _ in range(vocab_size)
+        ])  # (V, B) successor ids
+        probs = rng.dirichlet(
+            np.full(self.branching, concentration), size=vocab_size)
+        self._succ = jnp.asarray(succ, jnp.int32)
+        self._probs = jnp.asarray(probs, jnp.float32)
+        self._logp = jnp.log(self._probs)
+
+    @property
+    def entropy(self) -> float:
+        """Conditional entropy in nats = the achievable loss floor."""
+        h = -np.sum(np.asarray(self._probs) * np.log(np.asarray(self._probs)),
+                    axis=-1)
+        return float(np.mean(h))
+
+    @functools.partial(jax.jit, static_argnums=(0, 2, 3))
+    def sample(self, key, batch: int, seq_len: int) -> jax.Array:
+        """(batch, seq_len + 1) token walk."""
+        k0, k1 = jax.random.split(key)
+        first = jax.random.randint(k0, (batch,), 0, self.vocab_size)
+
+        def step(tok, k):
+            idx = jax.random.categorical(k, self._logp[tok], axis=-1)
+            nxt = jnp.take_along_axis(
+                self._succ[tok], idx[:, None], axis=1)[:, 0]
+            return nxt, nxt
+
+        keys = jax.random.split(k1, seq_len)
+        _, walk = jax.lax.scan(step, first, keys)
+        return jnp.concatenate([first[:, None], walk.T], axis=1)
+
+
+def make_train_batch(lm: MarkovLM, key, batch: int, seq_len: int):
+    """{"tokens": (B, S), "labels": (B, S)} next-token pairs."""
+    toks = lm.sample(key, batch, seq_len)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

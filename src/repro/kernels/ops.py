@@ -1,0 +1,96 @@
+"""Jit'd wrappers: the integration surface between kernels and the system.
+
+``interpret`` defaults to True off-TPU (the kernels execute their Python
+bodies for correctness validation); on a real TPU backend it flips to False
+and the same BlockSpecs drive Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.pier_update import pier_update as _pier_update
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+
+
+@functools.cache
+def on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_supported(q, k, v, *, window: int = 0,
+                              softcap: float = 0.0) -> bool:
+    B, S, H, hd = q.shape
+    if hd % 8 != 0 or hd > 256:
+        return False
+    if k.shape[2] and q.shape[2] % k.shape[2] != 0:
+        return False
+    return S >= 16
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0):
+    return _flash(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=128, block_kv=128, interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# fused Pier outer update (over whole pytrees)
+# ---------------------------------------------------------------------------
+
+
+def pier_outer_update(state, delta_avg, tc, *, mu, lr):
+    """Drop-in replacement for core.outer.outer_update (use_pallas path).
+
+    state: OuterState; delta_avg: pytree of fp32 deltas.
+    Returns (new_params_f32_tree, new OuterState).
+    """
+    from repro.core.outer import OuterState  # local import to avoid cycle
+
+    flat_m, treedef = jax.tree_util.tree_flatten(state.momentum)
+    flat_a = treedef.flatten_up_to(state.anchor)
+    flat_d = treedef.flatten_up_to(delta_avg)
+    new_p, new_m = [], []
+    for m, a, d in zip(flat_m, flat_a, flat_d):
+        shape = m.shape
+        p1, m1 = _pier_update(
+            a.reshape(-1), m.reshape(-1), d.reshape(-1),
+            jnp.asarray(mu, jnp.float32), jnp.asarray(lr, jnp.float32),
+            formulation=tc.outer_optimizer, interpret=_interpret())
+        new_p.append(p1.reshape(shape))
+        new_m.append(m1.reshape(shape).astype(m.dtype))
+    unf = jax.tree_util.tree_unflatten
+    params_f32 = unf(treedef, new_p)
+    sdt = flat_m[0].dtype if flat_m else jnp.float32
+    new_state = OuterState(
+        momentum=unf(treedef, new_m),
+        anchor=jax.tree.map(lambda p: p.astype(sdt), params_f32),
+        num_syncs=state.num_syncs + 1,
+    )
+    return params_f32, new_state
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-5):
+    return _rmsnorm(x, scale, eps=eps, interpret=_interpret())

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are *the* reference semantics; the model's default CPU path uses them
+directly, and every kernel test sweeps shapes/dtypes asserting the Pallas
+(interpret=True) output matches.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q, k, v, *, causal: bool = True, window: int = 0, softcap: float = 0.0
+):
+    """GQA attention oracle. q: (B,S,H,hd); k/v: (B,S,Hkv,hd) -> (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, S, Hkv, G, hd)
+    scores = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / jnp.sqrt(jnp.float32(hd))
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[None, :] <= pos[:, None]
+    if window > 0:
+        mask &= pos[:, None] - pos[None, :] < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def pier_update_ref(anchor, momentum, delta, *, mu, lr, formulation="nesterov_torch"):
+    """Fused outer-update oracle (Alg. 2 lines 20-21), fp32 math.
+
+    Returns (new_params, new_momentum).
+    """
+    mf = momentum.astype(jnp.float32)
+    af = anchor.astype(jnp.float32)
+    df = delta.astype(jnp.float32)
+    m_new = mu * mf + df
+    if formulation == "nesterov_torch":
+        step = mu * m_new + df
+    elif formulation == "nesterov_classic":
+        step = mu * mf + df
+    elif formulation == "sgd":
+        step = m_new
+    else:
+        raise ValueError(formulation)
+    return af + lr * step, m_new
+
+
+def rmsnorm_ref(x, scale, *, eps: float = 1e-5):
+    """Row RMSNorm oracle. x: (..., D); scale: (D,)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,74 @@
+"""Production mesh construction and the Pier group refinement.
+
+``make_production_mesh`` builds the spec-mandated meshes:
+
+    single pod : (16, 16)      axes (data, model)   — 256 chips (v5e pod)
+    multi-pod  : (2, 16, 16)   axes (pod, data, model) — 512 chips
+
+``refine_mesh`` splits the data axis into (data_outer, data_inner) for Pier's
+group structure **without touching device order**, so shardings remain
+device-consistent: a Pier group = one (pod, data_outer) index =
+``data_inner × model`` chips, a contiguous mesh slice with full intra-group
+ICI bandwidth. All functions (not module constants) — importing this module
+never touches jax device state.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+AUTO = jax.sharding.AxisType.Auto
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AUTO,) * len(shape))
+
+
+def refine_mesh(mesh: Mesh, data_outer: int) -> Mesh:
+    """(pod?, data, model) -> (pod?, data_outer, data_inner, model)."""
+    names = mesh.axis_names
+    devs = mesh.devices
+    if "pod" in names:
+        pod, data, model = devs.shape
+        assert data % data_outer == 0, (data, data_outer)
+        new = devs.reshape(pod, data_outer, data // data_outer, model)
+        axes = ("pod", "data_outer", "data_inner", "model")
+    else:
+        data, model = devs.shape
+        assert data % data_outer == 0, (data, data_outer)
+        new = devs.reshape(data_outer, data // data_outer, model)
+        axes = ("data_outer", "data_inner", "model")
+    return Mesh(new, axes, axis_types=(AUTO,) * len(axes))
+
+
+def make_pier_mesh(
+    *,
+    multi_pod: bool = False,
+    data_outer: int = 4,
+) -> Mesh:
+    return refine_mesh(make_production_mesh(multi_pod=multi_pod), data_outer)
+
+
+def small_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh over host devices (tests / CPU runs)."""
+    return jax.make_mesh(shape, axes, axis_types=(AUTO,) * len(shape))
+
+
+def manual_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The axes Pier relaxes: everything outer to the group."""
+    return tuple(a for a in ("pod", "data_outer") if a in mesh.axis_names)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data_outer", "data_inner", "data")
+                 if a in mesh.axis_names)
+
+
+def axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,189 @@
+"""Training launcher: ``python -m repro.launch.train --arch gpt2-small ...``
+
+Runs the full Pier loop on whatever devices are available (CPU host devices
+for validation, a real TPU slice in production — the code path is identical).
+The host loop consults :class:`PierSchedule` each step: warmup (global
+AdamW) -> momentum accumulation every r steps -> switch to group-local inner
+steps -> outer Nesterov sync every r steps, with optional host offload of the
+outer state between syncs (§V).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.config import ModelConfig, ParallelConfig, RunConfig, TrainConfig
+from repro.configs import get_config, get_reduced_config
+from repro.core import offload
+from repro.core.pier import PierSchedule
+from repro.data.pipeline import synthetic_pipeline
+from repro.launch import mesh as M
+from repro.parallel.steps import build_train_steps
+
+
+class Trainer:
+    """Host-side training loop weaving inner/outer steps per the schedule."""
+
+    def __init__(self, mc: ModelConfig, tc: TrainConfig, pc: ParallelConfig,
+                 mesh, *, checkpoint_dir: Optional[str] = None):
+        self.mc, self.tc, self.pc = mc, tc, pc
+        self.mesh = mesh
+        self.sched = PierSchedule(tc)
+        self.bundle = build_train_steps(mc, tc, pc, mesh)
+        self.state = self.bundle.init_state(jax.random.PRNGKey(tc.seed))
+        self.outer = self.bundle.init_outer(self.state)
+        self.step = 0
+        self.ckpt = (CheckpointManager(checkpoint_dir)
+                     if checkpoint_dir else None)
+        self._outer_on_host = False
+        self.history = []
+        if tc.offload_outer_state:
+            self.outer = offload.to_host(self.outer)
+            self._outer_on_host = True
+
+    # ------------------------------------------------------------------
+    def _outer_to_device(self):
+        if self._outer_on_host:
+            self.outer = offload.to_device(self.outer)
+            self._outer_on_host = False
+
+    def _outer_to_host(self):
+        if self.tc.offload_outer_state and not self._outer_on_host:
+            self.outer = offload.to_host(self.outer)
+            self._outer_on_host = True
+
+    def train_step(self, batch) -> dict:
+        """One scheduled step (inner or warmup + possible outer event)."""
+        sched, tc = self.sched, self.tc
+        step = self.step
+        phase = sched.phase(step)
+        step_arr = jnp.asarray(step, jnp.int32)
+        if phase == "warmup":
+            self.state, metrics = self.bundle.warmup_step(
+                self.state, batch, step_arr)
+        else:
+            self.state, metrics = self.bundle.inner_step(
+                self.state, batch, step_arr)
+        if sched.is_sync_step(step):
+            self._outer_to_device()
+            if sched.sync_kind(step) == "accumulate":
+                self.outer = self.bundle.accumulate_step(
+                    self.state, self.outer, jnp.float32(sched.mu_at(step)))
+            else:
+                self.state, self.outer = self.bundle.outer_step(
+                    self.state, self.outer,
+                    jnp.float32(sched.mu_at(step)),
+                    jnp.float32(sched.outer_lr_at(step)))
+            self._outer_to_host()
+        self.step += 1
+        return {k: float(v) for k, v in metrics.items()}
+
+    def run(self, steps: int, pipeline, *, log_every: int = 10,
+            ckpt_every: int = 0):
+        t0 = time.time()
+        for _ in range(steps):
+            batch = next(pipeline)
+            metrics = self.train_step(batch)
+            self.history.append(metrics)
+            if log_every and self.step % log_every == 0:
+                dt = (time.time() - t0) / max(self.step, 1)
+                print(f"step {self.step:6d} loss {metrics['loss']:.4f} "
+                      f"lr {metrics['lr']:.2e} gnorm {metrics['grad_norm']:.3f} "
+                      f"({dt*1e3:.0f} ms/step avg)", flush=True)
+            if ckpt_every and self.ckpt and self.step % ckpt_every == 0:
+                self.save()
+        return self.history
+
+    def save(self):
+        self._outer_to_device()
+        self.ckpt.save(self.step, {"state": self.state, "outer": self.outer},
+                       metadata={"step": self.step,
+                                 "optimizer": self.tc.optimizer})
+        self._outer_to_host()
+
+    def restore(self, step: Optional[int] = None):
+        step = step if step is not None else self.ckpt.latest_step()
+        self._outer_to_device()
+        trees, meta = self.ckpt.restore(
+            step, {"state": self.state, "outer": self.outer},
+            shardings={
+                "state": jax.tree.map(lambda x: x.sharding, self.state),
+                "outer": jax.tree.map(lambda x: x.sharding, self.outer),
+            })
+        self.state, self.outer = trees["state"], trees["outer"]
+        self.step = meta["step"]
+        self._outer_to_host()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="Pier training launcher")
+    ap.add_argument("--arch", default="gpt2-small")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced smoke-scale config")
+    ap.add_argument("--optimizer", default="pier",
+                    choices=["pier", "diloco", "adamw"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--total-steps", type=int, default=0,
+                    help="schedule horizon (defaults to --steps)")
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--sync-interval", type=int, default=10)
+    ap.add_argument("--groups", type=int, default=2,
+                    help="Pier groups (data_outer)")
+    ap.add_argument("--mesh", default="",
+                    help="mesh shape e.g. 2,2,2 = data_outer,data_inner,model"
+                         " (default: all devices as 1D data_inner)")
+    ap.add_argument("--lr", type=float, default=4e-4)
+    ap.add_argument("--offload", action="store_true")
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    mc = (get_reduced_config(args.arch) if args.reduced
+          else get_config(args.arch))
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+    else:
+        n = jax.device_count()
+        shape = (args.groups, max(n // args.groups, 1), 1)
+    mesh = M.small_mesh(shape, ("data_outer", "data_inner", "model"))
+    pc = ParallelConfig(
+        data_axis_size=shape[0] * shape[1], model_axis_size=shape[2],
+        data_outer=shape[0])
+    tc = TrainConfig(
+        optimizer=args.optimizer,
+        total_steps=args.total_steps or args.steps,
+        global_batch_size=args.global_batch,
+        seq_len=args.seq_len,
+        sync_interval=args.sync_interval,
+        inner_lr=args.lr, inner_min_lr=args.lr / 10,
+        offload_outer_state=args.offload,
+        seed=args.seed,
+        lazy_start=args.optimizer != "diloco",
+    )
+    print(f"arch={mc.name} optimizer={tc.optimizer} mesh={shape} "
+          f"groups={pc.num_groups} devices={jax.device_count()}")
+    trainer = Trainer(mc, tc, pc, mesh,
+                      checkpoint_dir=args.checkpoint_dir or None)
+    pipeline = synthetic_pipeline(mesh, M.data_axes(mesh), mc, tc)
+    try:
+        trainer.run(args.steps, pipeline, log_every=args.log_every,
+                    ckpt_every=args.ckpt_every)
+    finally:
+        pipeline.close()
+    print(json.dumps({"final_loss": trainer.history[-1]["loss"],
+                      "steps": trainer.step}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.models.registry import (  # noqa: F401
+    count_params,
+    init_params,
+    forward,
+    loss_fn,
+    init_decode_state,
+    decode_step,
+    prefill,
+)

@@ -1,0 +1,304 @@
+"""GQA / MQA / MHA attention with RoPE, qk-norm, sliding window, KV cache.
+
+Reference (pure-jnp) math lives here; the Pallas flash-attention kernel in
+``repro.kernels`` is selected with ``use_pallas=True`` (TPU target; validated
+in interpret mode on CPU).
+
+Cache layout: ``{"k": (B, S_cache, Hkv, hd), "v": ..., "length": int32 ()}``
+where ``S_cache`` is the window size for sliding-window layers and the full
+context otherwise. Sliding-window caches are ring buffers indexed by absolute
+position mod window; every slot stores its absolute position in ``"pos"``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.parallel.axes import logical_constraint
+
+NEG_INF = -1e30
+
+# ---------------------------------------------------------------------------
+# attention chunking policy (memory-efficient q-blocked attention)
+# ---------------------------------------------------------------------------
+# "auto": chunk when S_q * S_kv exceeds _AUTO_THRESHOLD (bounds the scores
+# buffer — the XLA-visible analogue of flash attention's tiling, used when
+# the Pallas kernel is off); "never": always materialize full scores (exact
+# FLOPs accounting for the dry-run cost compiles); int: explicit chunk size.
+
+import contextlib
+import threading
+
+
+class _ChunkPolicy(threading.local):
+    def __init__(self):
+        self.value = "auto"
+
+
+_CHUNK_POLICY = _ChunkPolicy()
+_AUTO_THRESHOLD = 1 << 24  # 16M score elements
+_AUTO_CHUNK = 1024
+
+
+@contextlib.contextmanager
+def chunk_policy(value):
+    prev = _CHUNK_POLICY.value
+    _CHUNK_POLICY.value = value
+    try:
+        yield
+    finally:
+        _CHUNK_POLICY.value = prev
+
+
+def _resolve_chunk(sq: int, skv: int):
+    pol = _CHUNK_POLICY.value
+    if pol == "never":
+        return 0
+    if pol == "auto":
+        if sq > 1 and sq * skv > _AUTO_THRESHOLD:
+            return min(_AUTO_CHUNK, sq)
+        return 0
+    return min(int(pol), sq) if sq > 1 else 0
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, *, cross: bool = False):
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    pd = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": L.dense_init(ks[0], (cfg.d_model, cfg.num_heads, hd), dtype=pd),
+        "wk": L.dense_init(ks[1], (cfg.d_model, cfg.num_kv_heads, hd), dtype=pd),
+        "wv": L.dense_init(ks[2], (cfg.d_model, cfg.num_kv_heads, hd), dtype=pd),
+        "wo": L.out_proj_init(
+            ks[3], (cfg.num_heads, hd, cfg.d_model), cfg.num_layers, dtype=pd
+        ),
+    }
+    if cfg.use_qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), pd)
+        p["k_norm"] = jnp.ones((hd,), pd)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+
+def gqa_attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Skv, Hkv, hd)
+    v: jax.Array,  # (B, Skv, Hkv, hd)
+    *,
+    q_positions: jax.Array,  # (Sq,) or (B, Sq) absolute positions
+    kv_positions: jax.Array,  # (Skv,) or (B, Skv); -1 marks invalid slots
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Grouped-query attention with positional masking. Returns (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    assert H % Hkv == 0, (H, Hkv)
+    G = H // Hkv
+
+    if use_pallas and Sq > 1:
+        from repro.kernels import ops as kops
+
+        if kops.flash_attention_supported(q, k, v, window=window, softcap=softcap):
+            return kops.flash_attention(
+                q, k, v, causal=causal, window=window, softcap=softcap
+            )
+
+    qp = q_positions if q_positions.ndim == 2 else q_positions[None]
+    kp = kv_positions if kv_positions.ndim == 2 else kv_positions[None]
+    qp = jnp.broadcast_to(qp, (B, Sq))
+
+    def block(qblk, qpblk):
+        """Attention of a q block against the full K/V. (B,sq,H,hd)."""
+        sq = qblk.shape[1]
+        mask = kp[:, None, :] >= 0
+        if causal:
+            mask &= kp[:, None, :] <= qpblk[:, :, None]
+        if window > 0:
+            mask &= qpblk[:, :, None] - kp[:, None, :] < window
+        qg = qblk.reshape(B, sq, Hkv, G, hd)
+        scores = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+            k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+        if softcap > 0:
+            scores = softcap * jnp.tanh(scores / softcap)
+        scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+        return out.reshape(B, sq, H, hd).astype(q.dtype)
+
+    chunk = _resolve_chunk(Sq, k.shape[1])
+    if chunk == 0 or Sq % chunk != 0:
+        return block(q, qp)
+    # q-blocked memory-efficient path: scores buffer is (chunk, Skv)
+    nblk = Sq // chunk
+    qb = jnp.moveaxis(q.reshape(B, nblk, chunk, H, hd), 1, 0)
+    pb = jnp.moveaxis(qp.reshape(B, nblk, chunk), 1, 0)
+    outb = jax.lax.map(lambda args: block(*args), (qb, pb))
+    return jnp.moveaxis(outb, 0, 1).reshape(B, Sq, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# layer application (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(p, x, xkv, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, L.cast(p["wq"], cfg))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, L.cast(p["wk"], cfg))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, L.cast(p["wv"], cfg))
+    if "q_norm" in p:
+        q = L.rms_norm_headwise(q, p["q_norm"])
+        k = L.rms_norm_headwise(k, p["k_norm"])
+    return q, k, v
+
+
+def apply_self_attention(
+    p,
+    x,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,  # (S,) absolute positions of x's tokens
+    window: int = 0,
+    cache: Optional[dict] = None,
+    use_pallas: bool = False,
+    return_kv: bool = False,
+    causal: bool = True,
+):
+    """Self-attention over x.
+
+    - training / prefill: ``cache=None``; set ``return_kv=True`` in prefill to
+      get the (k, v) streams back for cache assembly.
+    - decode: ``cache`` given, x is the single new token (S == 1); the cache is
+      a ring buffer for sliding-window layers (slot = pos % window) and a
+      linear buffer otherwise.
+
+    Returns (out, extra) where extra is the new cache (decode), the (k, v)
+    pair (prefill with return_kv), or None.
+    """
+    q, k, v = _project_qkv(p, x, x, cfg)
+    if cfg.positional == "rope":
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    q = logical_constraint(q, "batch", None, "tp", None)
+
+    if cache is None:
+        out = gqa_attention(
+            q, k, v,
+            q_positions=positions, kv_positions=positions,
+            causal=causal, window=window, softcap=0.0, use_pallas=use_pallas,
+        )
+        extra = (k, v) if return_kv else None
+    else:
+        cache_k, cache_v, cache_pos = cache["k"], cache["v"], cache["pos"]
+        S_cache = cache_k.shape[1]
+        B = x.shape[0]
+        start = cache["length"]
+        slot = start % S_cache if window > 0 else start
+        pos_row = jnp.broadcast_to(positions[None].astype(jnp.int32), (B, 1))
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+        cache_pos = jax.lax.dynamic_update_slice(cache_pos, pos_row, (0, slot))
+        out = gqa_attention(
+            q, cache_k.astype(q.dtype), cache_v.astype(q.dtype),
+            q_positions=positions, kv_positions=cache_pos,
+            causal=True, window=window, softcap=0.0, use_pallas=False,
+        )
+        extra = {
+            "k": cache_k, "v": cache_v, "pos": cache_pos,
+            "length": start + 1,
+        }
+
+    out = logical_constraint(out, "batch", None, "tp", None)
+    out = jnp.einsum("bshk,hkd->bsd", out, L.cast(p["wo"], cfg))
+    return out, extra
+
+
+def apply_cross_attention(p, x, encoder_kv, cfg: ModelConfig):
+    """Cross-attention (whisper decoder). encoder_kv = (k, v) precomputed."""
+    q = jnp.einsum("bsd,dhk->bshk", x, L.cast(p["wq"], cfg))
+    k, v = encoder_kv
+    Skv = k.shape[1]
+    out = gqa_attention(
+        q, k, v,
+        q_positions=jnp.full((x.shape[1],), Skv, jnp.int32),  # attend to all
+        kv_positions=jnp.arange(Skv, dtype=jnp.int32),
+        causal=False,
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, L.cast(p["wo"], cfg))
+
+
+def encoder_kv(p, enc_out, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output (decode cache)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, L.cast(p["wk"], cfg))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, L.cast(p["wv"], cfg))
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+
+def cache_from_kv(
+    cfg: ModelConfig, k, v, positions, *, max_len: int, window: int = 0
+):
+    """Assemble a decode cache from prefill (k, v) streams.
+
+    For sliding-window layers only the last ``window`` tokens are kept, laid
+    out in ring order (slot = pos % window) so decode inserts continue the
+    ring seamlessly.
+    """
+    B, S = k.shape[0], k.shape[1]
+    cache = init_cache(cfg, B, max_len, window=window)
+    size = cache["k"].shape[1]
+    keep = min(S, size)
+    k_keep = k[:, S - keep:]
+    v_keep = v[:, S - keep:]
+    pos_keep = jnp.broadcast_to(
+        positions[S - keep:][None].astype(jnp.int32), (B, keep))
+    if window > 0:
+        slots = (positions[S - keep:] % size).astype(jnp.int32)
+        cache["k"] = cache["k"].at[:, slots].set(k_keep.astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[:, slots].set(v_keep.astype(cache["v"].dtype))
+        cache["pos"] = cache["pos"].at[:, slots].set(pos_keep)
+    else:
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k_keep.astype(cache["k"].dtype), (0, S - keep, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v_keep.astype(cache["v"].dtype), (0, S - keep, 0, 0))
+        cache["pos"] = jax.lax.dynamic_update_slice(
+            cache["pos"], pos_keep, (0, S - keep))
+    cache["length"] = jnp.asarray(S, jnp.int32)
+    return cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, window: int = 0):
+    """Empty KV cache. ``pos`` = -1 marks unwritten slots."""
+    hd = cfg.resolved_head_dim
+    size = min(max_len, window) if window > 0 else max_len
+    dt = L.compute_dtype(cfg)
+    return {
+        "k": jnp.zeros((batch, size, cfg.num_kv_heads, hd), dt),
+        "v": jnp.zeros((batch, size, cfg.num_kv_heads, hd), dt),
+        "pos": jnp.full((batch, size), -1, jnp.int32),
+        "length": jnp.zeros((), jnp.int32),
+    }

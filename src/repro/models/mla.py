@@ -1,0 +1,180 @@
+"""Multi-head Latent Attention (DeepSeek-V2) [arXiv:2405.04434].
+
+Training/prefill uses the decompressed formulation (materialize per-head K/V
+from the latent ``c_kv``); decode uses the *absorbed* formulation against a
+latent cache of ``kv_lora_rank + qk_rope_head_dim`` floats per token — the
+whole point of MLA (the KV cache is rank-compressed, head-count independent).
+
+Cache layout: ``{"ckv": (B, S, r), "krope": (B, S, dr), "pos": (B, S),
+"length": ()}``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models.attention import NEG_INF
+from repro.parallel.axes import logical_constraint
+
+
+def init_mla(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 10)
+    pd = jnp.dtype(cfg.param_dtype)
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    p = {}
+    if cfg.q_lora_rank > 0:
+        p["w_dq"] = L.dense_init(ks[0], (cfg.d_model, cfg.q_lora_rank), dtype=pd)
+        p["q_norm"] = jnp.ones((cfg.q_lora_rank,), pd)
+        p["w_uq"] = L.dense_init(ks[1], (cfg.q_lora_rank, H, dn + dr), dtype=pd)
+    else:
+        p["w_q"] = L.dense_init(ks[1], (cfg.d_model, H, dn + dr), dtype=pd)
+    p["w_dkv"] = L.dense_init(ks[2], (cfg.d_model, r), dtype=pd)
+    p["kv_norm"] = jnp.ones((r,), pd)
+    p["w_kr"] = L.dense_init(ks[3], (cfg.d_model, dr), dtype=pd)
+    p["w_uk"] = L.dense_init(ks[4], (r, H, dn), dtype=pd)
+    p["w_uv"] = L.dense_init(ks[5], (r, H, dv), dtype=pd)
+    p["wo"] = L.out_proj_init(ks[6], (H, dv, cfg.d_model), cfg.num_layers, dtype=pd)
+    return p
+
+
+def _norm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _queries(p, x, cfg: ModelConfig, positions):
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if "w_dq" in p:
+        cq = jnp.einsum("bsd,dr->bsr", x, L.cast(p["w_dq"], cfg))
+        cq = _norm(cq, p["q_norm"])
+        q = jnp.einsum("bsr,rhk->bshk", cq, L.cast(p["w_uq"], cfg))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, L.cast(p["w_q"], cfg))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p, x, cfg: ModelConfig, positions):
+    ckv = jnp.einsum("bsd,dr->bsr", x, L.cast(p["w_dkv"], cfg))
+    ckv = _norm(ckv, p["kv_norm"])
+    krope = jnp.einsum("bsd,dk->bsk", x, L.cast(p["w_kr"], cfg))
+    krope = L.apply_rope(krope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return ckv, krope
+
+
+def apply_mla(
+    p,
+    x,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    cache: Optional[dict] = None,
+    use_pallas: bool = False,
+    return_kv: bool = False,
+):
+    """Returns (out, extra) mirroring ``apply_self_attention``."""
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale = 1.0 / jnp.sqrt(jnp.float32(dn + dr))
+    q_nope, q_rope = _queries(p, x, cfg, positions)
+    q_nope = logical_constraint(q_nope, "batch", None, "tp", None)
+
+    if cache is None:
+        ckv, krope = _latents(p, x, cfg, positions)
+        # Decompressed training/prefill path: per-head K/V.
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv, L.cast(p["w_uk"], cfg))
+        v = jnp.einsum("bsr,rhv->bshv", ckv, L.cast(p["w_uv"], cfg))
+        B, S = x.shape[:2]
+
+        def qblock(qn, qr, qpos):
+            sq = qn.shape[1]
+            scores = (
+                jnp.einsum("bqhd,bkhd->bhqk", qn.astype(jnp.float32),
+                           k_nope.astype(jnp.float32))
+                + jnp.einsum("bqhd,bkd->bhqk", qr.astype(jnp.float32),
+                             krope.astype(jnp.float32))
+            ) * scale
+            mask = positions[None, :] <= qpos[:, None]  # causal
+            scores = jnp.where(mask[None, None], scores, NEG_INF)
+            probs = jax.nn.softmax(scores, axis=-1)
+            out = jnp.einsum("bhqk,bkhv->bqhv", probs, v.astype(jnp.float32))
+            return out.astype(x.dtype)
+
+        from repro.models.attention import _resolve_chunk
+        chunk = _resolve_chunk(S, S)
+        if chunk == 0 or S % chunk != 0:
+            out = qblock(q_nope, q_rope, positions)
+        else:
+            nb = S // chunk
+            qnb = jnp.moveaxis(q_nope.reshape(B, nb, chunk, *q_nope.shape[2:]), 1, 0)
+            qrb = jnp.moveaxis(q_rope.reshape(B, nb, chunk, *q_rope.shape[2:]), 1, 0)
+            ppb = positions.reshape(nb, chunk)
+            out = jax.lax.map(lambda a: qblock(*a), (qnb, qrb, ppb))
+            out = jnp.moveaxis(out, 0, 1).reshape(B, S, *out.shape[3:])
+        extra = (ckv, krope) if return_kv else None
+    else:
+        # Absorbed decode path against the latent cache.
+        ckv_new, krope_new = _latents(p, x, cfg, positions)
+        start = cache["length"]
+        B = x.shape[0]
+        cache_ckv = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, start, 0))
+        cache_kr = jax.lax.dynamic_update_slice(
+            cache["krope"], krope_new.astype(cache["krope"].dtype), (0, start, 0))
+        pos_row = jnp.broadcast_to(positions[None].astype(jnp.int32), (B, 1))
+        cache_pos = jax.lax.dynamic_update_slice(cache["pos"], pos_row, (0, start))
+
+        # absorb W_UK into q:  q_eff (B, 1, H, r)
+        q_eff = jnp.einsum(
+            "bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+            p["w_uk"].astype(jnp.float32))
+        scores = (
+            jnp.einsum("bqhr,bkr->bhqk", q_eff, cache_ckv.astype(jnp.float32))
+            + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                         cache_kr.astype(jnp.float32))
+        ) * scale
+        valid = (cache_pos >= 0) & (cache_pos[:, :] <= positions[None, :])
+        scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhqk,bkr->bqhr", probs, cache_ckv.astype(jnp.float32))
+        out = jnp.einsum("bqhr,rhv->bqhv", o_lat, p["w_uv"].astype(jnp.float32))
+        out = out.astype(x.dtype)
+        extra = {
+            "ckv": cache_ckv, "krope": cache_kr, "pos": cache_pos,
+            "length": start + 1,
+        }
+
+    out = logical_constraint(out, "batch", None, "tp", None)
+    out = jnp.einsum("bshv,hvd->bsd", out, L.cast(p["wo"], cfg))
+    return out, extra
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dt = L.compute_dtype(cfg)
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dt),
+        "krope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dt),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_cache_from_kv(cfg: ModelConfig, ckv, krope, positions, *, max_len: int):
+    B, S = ckv.shape[0], ckv.shape[1]
+    cache = init_mla_cache(cfg, B, max_len)
+    cache["ckv"] = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0))
+    cache["krope"] = jax.lax.dynamic_update_slice(
+        cache["krope"], krope.astype(cache["krope"].dtype), (0, 0, 0))
+    cache["pos"] = cache["pos"].at[:, :S].set(
+        jnp.broadcast_to(positions[None].astype(jnp.int32), (B, S)))
+    cache["length"] = jnp.asarray(S, jnp.int32)
+    return cache

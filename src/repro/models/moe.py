@@ -1,0 +1,162 @@
+"""Mixture-of-Experts layer: top-k routing, shared experts, expert parallel.
+
+Dispatch uses the sort-based "expert slots" formulation rather than GShard's
+one-hot einsum: the (tokens, experts, capacity) dispatch tensor is never
+materialized (it would be ~3e13 elements at the DeepSeek-V2 production shape).
+Instead token->slot indices are computed with an argsort + searchsorted, and
+tokens are scattered into a (experts, capacity, d_model) buffer that is
+sharded over the ``experts`` logical axis (the model mesh axis) — GSPMD turns
+the scatter/gather into the expert-parallel all-to-all.
+
+Aux losses: switch-style load-balance loss + router z-loss, returned so the
+train step can add them to the LM loss.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.parallel.axes import logical_constraint
+
+
+class _DispatchMode(threading.local):
+    def __init__(self):
+        # "flat": sentinel-slot scatter into a flat (E*C+1, D) buffer — the
+        #   only formulation whose GRADIENT survives XLA's SPMD partitioner
+        #   (2D-indexed scatter-add into an expert-sharded operand
+        #   CHECK-fails in spmd_partitioner_util.cc) -> training default.
+        # "indexed": 2D (expert, position) scatter/gather against the
+        #   (E, C, D) buffer kept expert-sharded end to end — no flat
+        #   replicated buffer, much cheaper dispatch. Inference-only
+        #   (forward gathers partition fine).
+        self.value = "flat"
+
+
+_DISPATCH = _DispatchMode()
+
+
+@contextlib.contextmanager
+def dispatch_mode(value: str):
+    prev = _DISPATCH.value
+    _DISPATCH.value = value
+    try:
+        yield
+    finally:
+        _DISPATCH.value = prev
+
+
+def init_moe(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    pd = jnp.dtype(cfg.param_dtype)
+    E, D, F = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    p = {
+        "router": L.dense_init(ks[0], (D, E), scale=0.02 / math.sqrt(D / 768), dtype=pd),
+        "w_gate": L.dense_init(ks[1], (E, D, F), dtype=pd),
+        "w_up": L.dense_init(ks[2], (E, D, F), dtype=pd),
+        "w_down": L.out_proj_init(ks[3], (E, F, D), cfg.num_layers, dtype=pd),
+    }
+    if cfg.num_shared_experts > 0:
+        shared_ff = cfg.moe_d_ff * cfg.num_shared_experts
+        p["shared"] = L.init_mlp(ks[4], cfg, d_ff=shared_ff)
+    return p
+
+
+def expert_capacity(num_tokens: int, cfg: ModelConfig) -> int:
+    """Per-expert slot count, rounded up to a multiple of 8 for TPU layout."""
+    raw = num_tokens * cfg.num_experts_per_tok / cfg.num_experts
+    cap = int(math.ceil(raw * cfg.expert_capacity_factor))
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def apply_moe(p, x, cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+    """x: (B, S, D) -> (out, {"aux_loss", "z_loss", "load"})."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    C = expert_capacity(T, cfg)
+    xf = x.reshape(T, D)
+
+    # ---- routing (fp32) ----
+    logits = jnp.einsum(
+        "td,de->te", xf.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_probs, topk_idx = jax.lax.top_k(probs, K)  # (T, K)
+    topk_probs = topk_probs / jnp.clip(
+        jnp.sum(topk_probs, axis=-1, keepdims=True), 1e-9)
+
+    # ---- aux losses ----
+    # Switch-Transformer load-balance loss: E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)  # mean router prob per expert
+    assign = jnp.zeros((E,), jnp.float32).at[topk_idx.reshape(-1)].add(
+        jnp.ones((T * K,), jnp.float32))
+    fe = assign / (T * K)
+    aux_loss = E * jnp.sum(fe * me)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    # ---- slot assignment (sort-based) ----
+    flat_expert = topk_idx.reshape(-1)  # (T*K,)
+    sort_idx = jnp.argsort(flat_expert, stable=True)  # (T*K,)
+    sorted_expert = flat_expert[sort_idx]
+    # first index of each expert in the sorted order
+    first = jnp.searchsorted(sorted_expert, jnp.arange(E), side="left")
+    pos_in_expert = jnp.arange(T * K) - first[sorted_expert]
+    token_of_assign = jnp.arange(T * K) // K
+    indexed = _DISPATCH.value == "indexed"
+    if indexed:
+        # inference dispatch: (expert, position) scatter/gather against the
+        # expert-sharded (E, C, D) buffer (see dispatch_mode docstring)
+        pos = jnp.zeros((T * K,), jnp.int32).at[sort_idx].set(
+            pos_in_expert.astype(jnp.int32))
+        eid = flat_expert.astype(jnp.int32)
+        buf = jnp.zeros((E, C, D), x.dtype)
+        buf = logical_constraint(buf, "experts", None, None)
+        buf = buf.at[eid, pos].set(xf[token_of_assign], mode="drop")
+        expert_in = logical_constraint(buf, "experts", None, None)
+    else:
+        kept = pos_in_expert < C
+        slot_sorted = jnp.where(kept, sorted_expert * C + pos_in_expert,
+                                E * C)
+        # invert the sort: slot per assignment; E*C = dropped sentinel.
+        # (flat scatter + reshape: the only formulation whose gradient
+        # survives XLA's SPMD partitioner — see dispatch_mode docstring)
+        slot = jnp.zeros((T * K,), jnp.int32).at[sort_idx].set(
+            slot_sorted.astype(jnp.int32))
+        buf = jnp.zeros((E * C + 1, D), x.dtype)
+        buf = buf.at[slot].set(xf[token_of_assign], mode="drop")
+        expert_in = buf[: E * C].reshape(E, C, D)
+        expert_in = logical_constraint(expert_in, "experts", None, None)
+
+    # ---- expert computation (SwiGLU) ----
+    gate = jnp.einsum("ecd,edf->ecf", expert_in, L.cast(p["w_gate"], cfg))
+    up = jnp.einsum("ecd,edf->ecf", expert_in, L.cast(p["w_up"], cfg))
+    h = jax.nn.silu(gate) * up
+    h = logical_constraint(h, "experts", None, None)
+    expert_out = jnp.einsum("ecf,efd->ecd", h, L.cast(p["w_down"], cfg))
+
+    # ---- combine: gather back and weight by router prob ----
+    if indexed:
+        per_assign = expert_out.at[eid, pos].get(
+            mode="fill", fill_value=0)  # (T*K, D); dropped -> zeros
+    else:
+        out_buf = jnp.concatenate(
+            [expert_out.reshape(E * C, D), jnp.zeros((1, D), x.dtype)],
+            axis=0)
+        per_assign = out_buf[slot]  # (T*K, D); dropped -> zero row
+    weighted = per_assign * topk_probs.reshape(-1)[:, None].astype(x.dtype)
+    out = jnp.sum(weighted.reshape(T, K, D), axis=1).astype(x.dtype)
+    out = out.reshape(B, S, D)
+    out = logical_constraint(out, "batch", None, None)
+
+    if "shared" in p:
+        out = out + L.apply_mlp(p["shared"], x, cfg)
+
+    stats = {"aux_loss": aux_loss, "z_loss": z_loss, "load": fe}
+    return out, stats

@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)            # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            # input gate
+    log a_t = -c * softplus(Lambda) * r_t   # c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill parallelizes the linear recurrence with
+``jax.lax.associative_scan``; decode keeps O(1) state — so long_500k runs
+natively. Block layout (Griffin recurrent block): two input linears, a
+short causal conv, the RG-LRU, a GeLU gate branch, and an output linear.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models.ssm import _causal_conv1d
+
+_C = 8.0  # Griffin's fixed gate sharpness
+_MAX_SQRT_GRADIENT = 1000.0
+
+
+def init_rglru(key, cfg: ModelConfig):
+    D = cfg.d_model
+    W = cfg.resolved_lru_width
+    ks = jax.random.split(key, 8)
+    pd = jnp.dtype(cfg.param_dtype)
+    # Lambda init so that a^c is uniform-ish in [0.9, 0.999] (Griffin A.2)
+    u = jax.random.uniform(ks[5], (W,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log(u)/c)
+    return {
+        "w_x": L.dense_init(ks[0], (D, W), dtype=pd),  # recurrent branch in
+        "w_y": L.dense_init(ks[1], (D, W), dtype=pd),  # gate branch in
+        "conv": L.dense_init(ks[2], (cfg.conv1d_width, W), scale=0.1, dtype=pd),
+        "w_a": L.dense_init(ks[3], (W, W), scale=0.01, dtype=pd),
+        "b_a": jnp.zeros((W,), pd),
+        "w_i": L.dense_init(ks[4], (W, W), scale=0.01, dtype=pd),
+        "b_i": jnp.zeros((W,), pd),
+        "lambda": lam.astype(pd),
+        "w_down": L.out_proj_init(ks[6], (W, D), cfg.num_layers, dtype=pd),
+    }
+
+
+def _rglru_gates(p, u):
+    """u: (B, S, W) conv output (fp32). Returns (log_a, gated_input)."""
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", u, p["w_a"].astype(jnp.float32))
+        + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", u, p["w_i"].astype(jnp.float32))
+        + p["b_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r
+    a2 = jnp.exp(2 * log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - a2, 1.0 / _MAX_SQRT_GRADIENT**2, 1.0))
+    return log_a, beta * (i * u)
+
+
+def _linear_scan(log_a, x0, h0: Optional[jax.Array]):
+    """h_t = a_t h_{t-1} + x0_t via associative scan. log_a/x0: (B,S,W)."""
+    if h0 is not None:
+        x0 = x0.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(left, right):
+        la_l, x_l = left
+        la_r, x_r = right
+        return la_l + la_r, jnp.exp(la_r) * x_l + x_r
+
+    _, h = jax.lax.associative_scan(combine, (log_a, x0), axis=1)
+    return h
+
+
+def apply_rglru(p, x, cfg: ModelConfig, *, state=None, return_state=False):
+    """Griffin recurrent block. state=None -> parallel scan; else one step."""
+    B, S, D = x.shape
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, L.cast(p["w_y"], cfg)))
+    u = jnp.einsum("bsd,dw->bsw", x, L.cast(p["w_x"], cfg))
+    if state is None:
+        uc, _ = _causal_conv1d(u, L.cast(p["conv"], cfg))
+        log_a, x0 = _rglru_gates(p, uc.astype(jnp.float32))
+        h = _linear_scan(log_a, x0, None)
+        new_state = None
+        if return_state:
+            W = p["conv"].shape[0]
+            new_state = {
+                "hidden": h[:, -1].astype(jnp.float32),
+                "conv": u[:, -(W - 1):].astype(L.compute_dtype(cfg)),
+            }
+    else:
+        uc, new_conv = _causal_conv1d(u, L.cast(p["conv"], cfg), state["conv"])
+        log_a, x0 = _rglru_gates(p, uc.astype(jnp.float32))
+        h = jnp.exp(log_a[:, 0]) * state["hidden"] + x0[:, 0]
+        new_state = {"hidden": h, "conv": new_conv}
+        h = h[:, None]
+    out = jnp.einsum("bsw,wd->bsd", (h.astype(x.dtype) * gate),
+                     L.cast(p["w_down"], cfg))
+    return out, new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int):
+    W = cfg.resolved_lru_width
+    return {
+        "hidden": jnp.zeros((batch, W), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, W), L.compute_dtype(cfg)),
+    }

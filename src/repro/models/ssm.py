@@ -1,0 +1,370 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory)
+[arXiv:2405.04517].
+
+mLSTM supports two equivalent formulations (equivalence is tested):
+  - *parallel* (training/prefill): quadratic attention-like form with a
+    stabilized log-gate decay matrix — this is the compute hot spot and the
+    target of the ``mlstm_chunk`` Pallas kernel;
+  - *recurrent* (decode): O(1) state ``(C: (B,H,dh,dh), n: (B,H,dh),
+    m: (B,H))`` per layer -> long_500k decode runs natively.
+
+sLSTM has recurrent (previous-h) connections, so training also scans.
+Both use exponential gating with the max-tracker stabilizer from the paper.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.parallel.axes import logical_constraint
+
+PF = 2  # mLSTM up-projection factor
+
+
+def _group_norm(h, scale, eps=1e-6):
+    """Per-head RMS norm. h: (..., H, dh), scale: (H, dh)."""
+    hf = h.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(hf), axis=-1, keepdims=True)
+    return (hf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(h.dtype)
+
+
+def _causal_conv1d(x, kernel, state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: (B, S, C); kernel: (W, C).
+
+    With ``state`` ((B, W-1, C) trailing inputs) performs a streaming step and
+    returns (y, new_state).
+    """
+    W = kernel.shape[0]
+    if state is not None:
+        ctx = jnp.concatenate([state, x], axis=1)  # (B, W-1+S, C)
+        y = sum(
+            ctx[:, i : i + x.shape[1]] * kernel[i][None, None]
+            for i in range(W)
+        )
+        new_state = ctx[:, -(W - 1):] if W > 1 else state
+        return y, new_state
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    y = sum(pad[:, i : i + x.shape[1]] * kernel[i][None, None] for i in range(W))
+    return y, None
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+
+def init_mlstm(key, cfg: ModelConfig):
+    D = cfg.d_model
+    Di = PF * D
+    H = cfg.num_heads
+    dh = Di // H
+    ks = jax.random.split(key, 10)
+    pd = jnp.dtype(cfg.param_dtype)
+    return {
+        "w_up": L.dense_init(ks[0], (D, 2 * Di), dtype=pd),
+        "conv": L.dense_init(ks[1], (cfg.conv1d_width, Di), scale=0.1, dtype=pd),
+        # block-diagonal (per-head) q/k/v projections, as in official xLSTM
+        "wq": L.dense_init(ks[2], (H, dh, dh), dtype=pd),
+        "wk": L.dense_init(ks[3], (H, dh, dh), dtype=pd),
+        "wv": L.dense_init(ks[4], (H, dh, dh), dtype=pd),
+        "w_igate": L.dense_init(ks[5], (Di, H), scale=0.01, dtype=pd),
+        "b_igate": jnp.full((H,), -3.0, pd),  # bias low: mostly-closed input gate
+        "w_fgate": L.dense_init(ks[6], (Di, H), scale=0.01, dtype=pd),
+        "b_fgate": jnp.full((H,), 3.0, pd),  # bias high: mostly-open forget gate
+        "out_norm": jnp.ones((H, dh), pd),
+        "w_down": L.out_proj_init(ks[7], (Di, D), cfg.num_layers, dtype=pd),
+    }
+
+
+def _mlstm_qkv_gates(p, x, cfg: ModelConfig, conv_state=None):
+    Di = PF * cfg.d_model
+    H = cfg.num_heads
+    up = jnp.einsum("bsd,de->bse", x, L.cast(p["w_up"], cfg))
+    z, m_in = up[..., :Di], up[..., Di:]
+    m_c, new_conv_state = _causal_conv1d(m_in, L.cast(p["conv"], cfg), conv_state)
+    m_c = jax.nn.silu(m_c)
+    B, S = x.shape[:2]
+    dh = Di // H
+    m_c_h = m_c.reshape(B, S, H, dh)
+    m_in_h = m_in.reshape(B, S, H, dh)
+    q = jnp.einsum("bshe,hef->bshf", m_c_h, L.cast(p["wq"], cfg))
+    k = jnp.einsum("bshe,hef->bshf", m_c_h, L.cast(p["wk"], cfg))
+    v = jnp.einsum("bshe,hef->bshf", m_in_h, L.cast(p["wv"], cfg))
+    # gate pre-activations (fp32 for stability)
+    ig = (jnp.einsum("bse,eh->bsh", m_c.astype(jnp.float32),
+                     p["w_igate"].astype(jnp.float32))
+          + p["b_igate"].astype(jnp.float32))
+    fg = (jnp.einsum("bse,eh->bsh", m_c.astype(jnp.float32),
+                     p["w_fgate"].astype(jnp.float32))
+          + p["b_fgate"].astype(jnp.float32))
+    return z, q, k, v, ig, fg, new_conv_state
+
+
+def mlstm_parallel(q, k, v, ig, fg):
+    """Stabilized quadratic mLSTM. q/k/v: (B,S,H,dh); ig/fg: (B,S,H) logits.
+
+    Returns h: (B,S,H,dh). This is the pure-jnp oracle for the chunkwise
+    Pallas kernel.
+    """
+    B, S, H, dh = q.shape
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32) / jnp.sqrt(jnp.float32(dh))
+    vf = v.astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(fg)  # (B,S,H)
+    F = jnp.cumsum(log_f, axis=1)  # (B,S,H) inclusive cumulative log-forget
+    # D_ij = F_i - F_j + i~_j for j <= i
+    Dm = F[:, :, None, :] - F[:, None, :, :] + ig[:, None, :, :]  # (B,Si,Sj,H)
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    Dm = jnp.where(causal[None, :, :, None], Dm, -jnp.inf)
+    m = jnp.max(Dm, axis=2)  # (B,Si,H) row-stabilizer
+    Dp = jnp.exp(Dm - m[:, :, None, :])  # (B,Si,Sj,H)
+    scores = jnp.einsum("bihd,bjhd->bijh", qf, kf) * Dp
+    norm = jnp.maximum(
+        jnp.abs(jnp.sum(scores, axis=2)), jnp.exp(-m))  # (B,Si,H)
+    h = jnp.einsum("bijh,bjhd->bihd", scores, vf) / norm[..., None]
+    return h.astype(q.dtype)
+
+
+def mlstm_recurrent_step(state, q, k, v, ig, fg):
+    """One decode step. state = (C, n, m); q/k/v: (B,H,dh); ig/fg: (B,H)."""
+    C, n, m_prev = state
+    dh = q.shape[-1]
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32) / jnp.sqrt(jnp.float32(dh))
+    vf = v.astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(fg.astype(jnp.float32))
+    m_new = jnp.maximum(log_f + m_prev, ig.astype(jnp.float32))
+    f_sc = jnp.exp(log_f + m_prev - m_new)[..., None]
+    i_sc = jnp.exp(ig - m_new)[..., None]
+    C_new = f_sc[..., None] * C + i_sc[..., None] * (
+        kf[..., :, None] * vf[..., None, :])  # (B,H,dh_k,dh_v)
+    n_new = f_sc * n + i_sc * kf
+    num = jnp.einsum("bhkv,bhk->bhv", C_new, qf)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, qf)), jnp.exp(-m_new))
+    h = (num / den[..., None]).astype(q.dtype)
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_final_state(q, k, v, ig, fg):
+    """Closed-form end-of-sequence recurrent state (C, n, m).
+
+    Exactly equals running :func:`mlstm_recurrent_step` over the sequence:
+    m_S = max_j (F_S - F_j + i_j); C_S = sum_j e^{b_j - m_S} k_j v_j^T.
+    """
+    dh = q.shape[-1]
+    kf = k.astype(jnp.float32) / jnp.sqrt(jnp.float32(dh))
+    vf = v.astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(fg.astype(jnp.float32))
+    F = jnp.cumsum(log_f, axis=1)  # (B,S,H)
+    b = F[:, -1:, :] - F + ig.astype(jnp.float32)  # (B,S,H)
+    m = jnp.max(b, axis=1)  # (B,H)
+    w = jnp.exp(b - m[:, None, :])  # (B,S,H)
+    C = jnp.einsum("bsh,bshd,bshk->bhdk", w, kf, vf)
+    n = jnp.einsum("bsh,bshd->bhd", w, kf)
+    return (C, n, m)
+
+
+def apply_mlstm(p, x, cfg: ModelConfig, *, state=None, return_state=False):
+    """mLSTM block. state=None -> parallel training form; else decode step."""
+    if state is None:
+        z, q, k, v, ig, fg, _ = _mlstm_qkv_gates(p, x, cfg)
+        if (cfg.mlstm_chunk > 0 and x.shape[1] > cfg.mlstm_chunk
+                and x.shape[1] % cfg.mlstm_chunk == 0):
+            h = mlstm_chunkwise(q, k, v, ig, fg, chunk=cfg.mlstm_chunk)
+        else:
+            h = mlstm_parallel(q, k, v, ig, fg)
+        new_state = None
+        if return_state:
+            Di = PF * cfg.d_model
+            W = cfg.conv1d_width
+            up = jnp.einsum("bsd,de->bse", x, L.cast(p["w_up"], cfg))
+            m_in = up[..., Di:]
+            new_state = {
+                "cell": mlstm_final_state(q, k, v, ig, fg),
+                "conv": m_in[:, -(W - 1):].astype(L.compute_dtype(cfg)),
+            }
+    else:
+        cell_state, conv_state = state["cell"], state["conv"]
+        z, q, k, v, ig, fg, new_conv = _mlstm_qkv_gates(
+            p, x, cfg, conv_state=conv_state)
+        cell_state, h = mlstm_recurrent_step(
+            cell_state, q[:, 0], k[:, 0], v[:, 0], ig[:, 0], fg[:, 0])
+        h = h[:, None]
+        new_state = {"cell": cell_state, "conv": new_conv}
+    B, S = x.shape[:2]
+    h = _group_norm(h, p["out_norm"])
+    h = h.reshape(B, S, -1)
+    h = h * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", h, L.cast(p["w_down"], cfg))
+    return out, new_state
+
+
+def mlstm_chunkwise(q, k, v, ig, fg, *, chunk: int):
+    """Chunkwise-parallel mLSTM: intra-chunk quadratic + inter-chunk scan.
+
+    Mathematically equal to :func:`mlstm_parallel` (tested); O(S·c + S·dh²/c)
+    instead of O(S²), and the layout the TPU kernel tiles.
+    """
+    B, S, H, dh = q.shape
+    c = chunk
+    assert S % c == 0, (S, c)
+    N = S // c
+    qf = q.astype(jnp.float32).reshape(B, N, c, H, dh)
+    kf = (k.astype(jnp.float32) / jnp.sqrt(jnp.float32(dh))).reshape(B, N, c, H, dh)
+    vf = v.astype(jnp.float32).reshape(B, N, c, H, dh)
+    igf = ig.astype(jnp.float32).reshape(B, N, c, H)
+    log_f = jax.nn.log_sigmoid(fg.astype(jnp.float32)).reshape(B, N, c, H)
+
+    Fc = jnp.cumsum(log_f, axis=2)  # within-chunk cumulative log-forget
+    f_total = Fc[:, :, -1]  # (B,N,H) total chunk decay
+    # per-position quantities
+    # b_j = F_total - F_j + i_j : weight of token j's contribution to the
+    #       end-of-chunk state; a_i = F_i : decay of carry-in at position i.
+    b = f_total[:, :, None] - Fc + igf  # (B,N,c,H)
+    a = Fc  # (B,N,c,H)
+
+    def scan_body(carry, xs):
+        C_prev, n_prev, m_prev = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+        qc, kc, vc, ac, bc, ftot, igc, Fcc = xs
+        # ---- intra-chunk (as in parallel form, local stabilizer) ----
+        Dm = Fcc[:, :, None, :] - Fcc[:, None, :, :] + igc[:, None, :, :]
+        causal = jnp.tril(jnp.ones((c, c), bool))
+        Dm = jnp.where(causal[None, :, :, None], Dm, -jnp.inf)
+        m_local = jnp.max(Dm, axis=2)  # (B,c,H)
+        # ---- inter-chunk: carry-in contribution ----
+        m_in = ac + m_prev[:, None, :]  # (B,c,H) stabilizer of carry term
+        m_i = jnp.maximum(m_local, m_in)
+        Dp = jnp.exp(Dm - m_i[:, :, None, :])
+        scores = jnp.einsum("bihd,bjhd->bijh", qc, kc) * Dp
+        inter_q = qc * jnp.exp(m_in - m_i)[..., None]  # decayed queries
+        num = (jnp.einsum("bijh,bjhd->bihd", scores, vc)
+               + jnp.einsum("bihd,bhdk->bihk", inter_q, C_prev))
+        den_local = jnp.sum(scores, axis=2)  # (B,c,H)
+        den_inter = jnp.einsum("bihd,bhd->bih", inter_q, n_prev)
+        den = jnp.maximum(jnp.abs(den_local + den_inter), jnp.exp(-m_i))
+        h = num / den[..., None]
+        # ---- state update to end of chunk ----
+        m_next = jnp.maximum(ftot + m_prev, jnp.max(bc, axis=1))  # (B,H)
+        carry_scale = jnp.exp(ftot + m_prev - m_next)  # (B,H)
+        token_w = jnp.exp(bc - m_next[:, None, :])  # (B,c,H)
+        C_new = (carry_scale[..., None, None] * C_prev
+                 + jnp.einsum("bjh,bjhd,bjhk->bhdk", token_w, kc, vc))
+        n_new = (carry_scale[..., None] * n_prev
+                 + jnp.einsum("bjh,bjhd->bhd", token_w, kc))
+        return (C_new, n_new, m_next), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    C0, n0, m0 = L.vary_like((C0, n0, m0), qf)
+    xs = tuple(
+        jnp.moveaxis(t, 1, 0)
+        for t in (qf, kf, vf, a, b, f_total, igf, Fc))
+    _, hs = jax.lax.scan(scan_body, (C0, n0, m0), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, dh)
+    return h.astype(q.dtype)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    Di = PF * cfg.d_model
+    H = cfg.num_heads
+    dh = Di // H
+    return {
+        "cell": (
+            jnp.zeros((batch, H, dh, dh), jnp.float32),
+            jnp.zeros((batch, H, dh), jnp.float32),
+            jnp.full((batch, H), -jnp.inf, jnp.float32),
+        ),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, Di),
+                          L.compute_dtype(cfg)),
+    }
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+
+def init_slstm(key, cfg: ModelConfig):
+    D = cfg.d_model
+    H = cfg.num_heads
+    dh = D // H
+    ks = jax.random.split(key, 10)
+    pd = jnp.dtype(cfg.param_dtype)
+    def gate(k):
+        return L.dense_init(k, (D, D), dtype=pd)
+    return {
+        "w_i": gate(ks[0]), "w_f": gate(ks[1]),
+        "w_z": gate(ks[2]), "w_o": gate(ks[3]),
+        # block-diagonal (per-head) recurrent matrices
+        "r_i": L.dense_init(ks[4], (H, dh, dh), scale=0.05, dtype=pd),
+        "r_f": L.dense_init(ks[5], (H, dh, dh), scale=0.05, dtype=pd),
+        "r_z": L.dense_init(ks[6], (H, dh, dh), scale=0.05, dtype=pd),
+        "r_o": L.dense_init(ks[7], (H, dh, dh), scale=0.05, dtype=pd),
+        "b_i": jnp.full((D,), -3.0, pd), "b_f": jnp.full((D,), 3.0, pd),
+        "b_z": jnp.zeros((D,), pd), "b_o": jnp.zeros((D,), pd),
+        "out_norm": jnp.ones((H, dh), pd),
+        "w_down": L.out_proj_init(ks[8], (D, D), cfg.num_layers, dtype=pd),
+    }
+
+
+def slstm_cell(p, cfg: ModelConfig, state, xi, xf, xz, xo):
+    """One sLSTM step. state=(c,n,m,h) each (B,H,dh); x*: (B,H,dh) projections."""
+    c, n, m_prev, h_prev = state
+    def rec(r, h):
+        return jnp.einsum("bhk,hkd->bhd", h, r.astype(jnp.float32))
+    it = xi + rec(p["r_i"], h_prev)
+    ft = xf + rec(p["r_f"], h_prev)
+    zt = xz + rec(p["r_z"], h_prev)
+    ot = xo + rec(p["r_o"], h_prev)
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + m_prev, it)
+    i_sc = jnp.exp(it - m_new)
+    f_sc = jnp.exp(log_f + m_prev - m_new)
+    c_new = f_sc * c + i_sc * jnp.tanh(zt)
+    n_new = f_sc * n + i_sc
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def apply_slstm(p, x, cfg: ModelConfig, *, state=None, return_state=False):
+    """sLSTM block: scan over time (training) or one step (decode)."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dh = D // H
+    xf32 = x.astype(jnp.float32)
+    def proj(w, b):
+        return (jnp.einsum("bsd,de->bse", xf32, w.astype(jnp.float32))
+                + b.astype(jnp.float32)).reshape(B, S, H, dh)
+    xi, xf_, xz, xo = (proj(p[w], p[b]) for w, b in
+                       (("w_i", "b_i"), ("w_f", "b_f"),
+                        ("w_z", "b_z"), ("w_o", "b_o")))
+    if state is None:
+        s0 = L.vary_like(init_slstm_state(cfg, B)["cell"], xi)
+        def body(s, inputs):
+            return slstm_cell(p, cfg, s, *inputs)
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xi, xf_, xz, xo))
+        carry, hs = jax.lax.scan(body, s0, xs)
+        h = jnp.moveaxis(hs, 0, 1)  # (B,S,H,dh)
+        new_state = {"cell": carry} if return_state else None
+    else:
+        cell, h = slstm_cell(
+            p, cfg, state["cell"], xi[:, 0], xf_[:, 0], xz[:, 0], xo[:, 0])
+        h = h[:, None]
+        new_state = {"cell": cell}
+    h = _group_norm(h, p["out_norm"]).reshape(B, S, D)
+    out = jnp.einsum("bsd,de->bse", h, L.cast(p["w_down"], cfg))
+    return out.astype(x.dtype), new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    z = lambda: jnp.zeros((batch, H, dh), jnp.float32)
+    return {"cell": (z(), z(), jnp.full((batch, H, dh), -30.0, jnp.float32), z())}

@@ -1,0 +1,92 @@
+"""AdamW from scratch (optax is not available in this environment).
+
+Matches the decoupled-weight-decay formulation used by Megatron-LM / PyTorch:
+
+    m <- b1 m + (1-b1) g           v <- b2 v + (1-b2) g^2
+    m_hat = m / (1-b1^t)           v_hat = v / (1-b2^t)
+    theta <- theta - lr * (m_hat / (sqrt(v_hat) + eps) + wd * theta)
+
+Optimizer state dtype is configurable (paper: fp32 state with bf16 model;
+``bfloat16`` state is the beyond-paper memory lever for the 1T configs).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array  # () int32
+    mu: Any  # first-moment pytree
+    nu: Any  # second-moment pytree
+
+
+def adamw_init(params, tc: TrainConfig) -> AdamWState:
+    dt = jnp.dtype(tc.opt_state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(
+        count=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def _decay_mask(path) -> bool:
+    """True if this parameter gets weight decay (matmuls yes; norms/bias no)."""
+    keys = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+    name = keys[-1] if keys else ""
+    if name in ("scale", "bias") or name.startswith("b_"):
+        return False
+    if "norm" in name or name == "lambda":
+        return False
+    if name == "positions":  # positional embeddings: no decay (GPT-2 convention)
+        return False
+    return True
+
+
+def adamw_update(
+    grads, state: AdamWState, params, tc: TrainConfig, lr: jax.Array
+):
+    """One AdamW step. Returns (new_params, new_state).
+
+    Params/grads may be any matching pytrees; moments are stored in
+    ``tc.opt_state_dtype`` and the update math runs in fp32.
+    """
+    b1, b2, eps = tc.adam_beta1, tc.adam_beta2, tc.adam_eps
+    count = state.count + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+    sdt = jnp.dtype(tc.opt_state_dtype)
+
+    decay_flags = {}
+
+    def upd(path, p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        m_hat = mf / c1
+        v_hat = vf / c2
+        step = m_hat / (jnp.sqrt(v_hat) + eps)
+        if _decay_mask(path):
+            step = step + tc.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, mf.astype(sdt), vf.astype(sdt)
+
+    p_leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    m_leaves = treedef.flatten_up_to(state.mu)
+    v_leaves = treedef.flatten_up_to(state.nu)
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m, v in zip(p_leaves, g_leaves, m_leaves, v_leaves):
+        np_, nm, nv = upd(path, p, g, m, v)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+    unf = jax.tree_util.tree_unflatten
+    return unf(treedef, new_p), AdamWState(
+        count=count, mu=unf(treedef, new_m), nu=unf(treedef, new_v))

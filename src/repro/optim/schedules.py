@@ -1,0 +1,37 @@
+"""Inner learning-rate schedules: cosine (Table I), WSD (MiniCPM), constant.
+
+All schedules are pure jnp functions of the step so they can live inside the
+jitted train step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def lr_at(tc: TrainConfig, step: jax.Array) -> jax.Array:
+    """Inner LR at ``step`` (0-based), as a traced fp32 scalar."""
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    total = jnp.float32(tc.total_steps)
+    warm = jnp.maximum(jnp.float32(tc.lr_warmup_frac) * total, 1.0)
+    peak = jnp.float32(tc.inner_lr)
+    floor = jnp.float32(tc.inner_min_lr)
+
+    warm_lr = peak * (s + 1.0) / warm
+
+    if tc.lr_schedule == "constant":
+        main_lr = peak
+    elif tc.lr_schedule == "wsd":
+        # warmup -> stable -> decay (MiniCPM): exponential-ish linear decay
+        decay_start = total * (1.0 - tc.wsd_decay_frac)
+        frac = jnp.clip((s - decay_start) / jnp.maximum(total - decay_start, 1.0),
+                        0.0, 1.0)
+        main_lr = peak + (floor - peak) * frac
+    else:  # cosine
+        prog = jnp.clip((s - warm) / jnp.maximum(total - warm, 1.0), 0.0, 1.0)
+        main_lr = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * prog))
+
+    return jnp.where(s < warm, warm_lr, main_lr)

@@ -1,0 +1,6 @@
+from repro.parallel.axes import (  # noqa: F401
+    LogicalAxisRules,
+    current_rules,
+    logical_constraint,
+    use_rules,
+)

@@ -1,0 +1,146 @@
+"""Logical-axis sharding rules and the activation-constraint hook.
+
+Model code never mentions mesh axes. It annotates activations with *logical*
+axes ("batch", "seq", "embed", "heads", "ffn", "experts", "vocab") via
+:func:`logical_constraint`. Step builders install a :class:`LogicalAxisRules`
+mapping logical axes to (tuples of) physical mesh axes; outside any rules
+context (e.g. single-device unit tests) the hook is a no-op.
+
+This is the same pattern MaxText/T5X use, reduced to what the Pier mesh needs:
+
+    batch   -> (data_outer, data_inner)       # manual + auto data axes
+    fsdp    -> data_inner                     # in-group ZeRO-3 sharding
+    tp      -> model                          # Megatron tensor parallel
+    experts -> model                          # expert parallel (MoE)
+    seq     -> data (decode long-context)     # context-parallel KV cache
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class LogicalAxisRules:
+    """Mapping from logical axis names to physical mesh axes."""
+
+    rules: Dict[str, AxisVal] = field(default_factory=dict)
+    # physical axis name -> size, for divisibility guards (a dim is only
+    # constrained if the axis size divides it — XLA's SPMD partitioner
+    # CHECK-fails on some non-divisible scatter/gather shardings)
+    axis_sizes: Dict[str, int] = field(default_factory=dict)
+    # When False (e.g. a mesh axis is absent), constraints are skipped.
+    enabled: bool = True
+
+    def _fits(self, axes: AxisVal, dim: int) -> bool:
+        if not self.axis_sizes:
+            return True
+        names = (axes,) if isinstance(axes, str) else tuple(axes)
+        size = 1
+        for n in names:
+            size *= self.axis_sizes.get(n, 1)
+        return dim % size == 0
+
+    def resolve_for_shape(self, shape, logical_axes) -> P:
+        out = []
+        for dim, ax in zip(shape, logical_axes):
+            phys = None if ax is None else self.rules.get(ax)
+            if phys is not None and not self._fits(phys, dim):
+                phys = None
+            out.append(phys)
+        return P(*out)
+
+    def resolve(self, *logical_axes: Optional[str]) -> P:
+        out = []
+        for ax in logical_axes:
+            out.append(None if ax is None else self.rules.get(ax))
+        return P(*out)
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.rules: Optional[LogicalAxisRules] = None
+
+
+_STATE = _State()
+
+
+def current_rules() -> Optional[LogicalAxisRules]:
+    return _STATE.rules
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[LogicalAxisRules]):
+    prev = _STATE.rules
+    _STATE.rules = rules
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def logical_constraint(x, *logical_axes: Optional[str]):
+    """Apply ``with_sharding_constraint`` if rules are installed; else no-op.
+
+    ``logical_axes`` has one entry per dimension of ``x`` (None = replicated /
+    unconstrained dimension).
+    """
+    rules = _STATE.rules
+    if rules is None or not rules.enabled:
+        return x
+    if x.ndim != len(logical_axes):
+        raise ValueError(
+            f"logical_constraint got {len(logical_axes)} axes for rank-{x.ndim} array"
+        )
+    spec = rules.resolve_for_shape(x.shape, logical_axes)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, TypeError, RuntimeError):
+        # No mesh in scope (eager single-device execution) -> no-op.
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Standard rule sets for the Pier mesh
+# ---------------------------------------------------------------------------
+
+
+def pier_rules(
+    *,
+    have_pod: bool,
+    fsdp: bool = True,
+    shard_experts: bool = True,
+    inside_manual: bool = True,
+    context_parallel_seq: bool = False,
+    axis_sizes: Optional[Dict[str, int]] = None,
+) -> LogicalAxisRules:
+    """Rules for code running *inside* the shard_map manual region.
+
+    Inside the manual region only the auto axes (data_inner, model) are
+    visible to GSPMD, so "batch" maps to data_inner only; the data_outer/pod
+    factor of the batch was already consumed by the shard_map in_specs.
+    """
+    batch: AxisVal
+    if inside_manual:
+        batch = "data_inner"
+    else:
+        names = (("pod",) if have_pod else ()) + ("data_outer", "data_inner")
+        batch = names
+    return LogicalAxisRules(
+        rules={
+            "batch": batch,
+            "fsdp": "data_inner" if fsdp else None,
+            "tp": "model",
+            "experts": "model" if shard_experts else None,
+            "seq": "data_inner" if context_parallel_seq else None,
+        },
+        axis_sizes=axis_sizes or {},
+    )

@@ -1,0 +1,251 @@
+"""Per-parameter PartitionSpec rules (Megatron TP × in-group FSDP × EP).
+
+Rules are name-based over the param tree path, with a divisibility guard:
+a dimension is only sharded if its size divides the mesh-axis size (e.g.
+GQA kv-head projections with 8 kv heads fall back to replicated on a
+16-wide model axis — recorded as a roofline consideration, not an error).
+
+The same spec applies to AdamW moments and the Pier outer state (they mirror
+the param tree). Group-stacked trees (leading G axis) get the manual axes
+prepended via :func:`stack_spec`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ParallelConfig
+
+# logical axes used in the tables below
+TP = "tp"
+FSDP = "fsdp"
+EXP = "experts"
+
+
+def _physical(logical: Optional[str], *, fsdp: bool, experts: bool):
+    if logical is None:
+        return None
+    if logical == TP:
+        return "model"
+    if logical == FSDP:
+        return "data_inner" if fsdp else None
+    if logical == EXP:
+        return "model" if experts else None
+    raise ValueError(logical)
+
+
+def _param_logical_spec(path_keys, shape) -> Tuple[Optional[str], ...]:
+    """Logical axes per dim for one parameter, from its tree path."""
+    name = path_keys[-1] if path_keys else ""
+    in_moe = "mlp" in path_keys and len(shape) == 3  # stacked expert weights
+    in_mlstm_qkv = name in ("wq", "wk", "wv") and len(shape) == 3
+
+    # Embedding tables are *gathered* (jnp.take); sharding a gathered table
+    # over the in-group FSDP axis trips an XLA SPMD-partitioner CHECK inside
+    # partial-manual shard_map (spmd_partitioner_util.cc:504), so they are
+    # TP-sharded only. Documented in DESIGN.md §Hardware-adaptation.
+    if name == "tokens":  # (V, D) embedding
+        return (TP, None)
+    if name == "positions":  # (P, D)
+        return (None, None)
+    if name == "lm_head":  # (D, V)
+        return (FSDP, TP)
+    if name in ("scale", "bias") or name.startswith("b_"):
+        return (None,) * len(shape)
+    if name in ("q_norm", "k_norm", "kv_norm", "out_norm", "lambda"):
+        return (None,) * len(shape)
+
+    # ---- attention ----
+    if name == "wq" and len(shape) == 3 and not in_mlstm_qkv:
+        return (FSDP, TP, None)
+    if name in ("wk", "wv") and len(shape) == 3 and not in_mlstm_qkv:
+        return (FSDP, TP, None)
+    if name == "wo":  # (H, hd, D)
+        return (TP, None, FSDP)
+
+    # ---- MLA ----
+    if name in ("w_dq", "w_dkv", "w_kr"):  # (D, r)
+        return (FSDP, None)
+    if name in ("w_uq",):  # (r, H, d)
+        return (None, TP, None)
+    if name in ("w_uk", "w_uv"):  # (r, H, d)
+        return (None, TP, None)
+
+    # ---- MoE ----
+    if in_moe and name in ("w_gate", "w_up"):  # (E, D, F)
+        return (EXP, FSDP, None)
+    if in_moe and name == "w_down":  # (E, F, D)
+        return (EXP, None, FSDP)
+    if name == "router":  # (D, E)
+        return (FSDP, None)
+
+    # ---- dense MLP ----
+    if name in ("w_gate", "w_up"):  # (D, F)
+        return (FSDP, TP)
+    if name == "w_down":  # (F, D)
+        return (TP, FSDP)
+
+    # ---- mLSTM / sLSTM / RG-LRU ----
+    if in_mlstm_qkv:  # (H, dh, dh) block-diagonal
+        return (TP, None, None)
+    if name == "conv":  # (W, C)
+        return (None, TP)
+    if name in ("w_igate", "w_fgate"):  # (Di, H)
+        return (TP, None)
+    if name in ("w_i", "w_f", "w_z", "w_o"):  # sLSTM (D, D)
+        return (FSDP, TP)
+    if name.startswith("r_"):  # (H, dh, dh)
+        return (TP, None, None)
+    if name in ("w_x", "w_y"):  # RG-LRU (D, W)
+        return (FSDP, TP)
+    if name in ("w_a",):  # (W, W)
+        return (None, TP)
+    # mLSTM w_up (D, 2Di) / w_down (Di or W, D)
+    if name == "w_up" and len(shape) == 2:
+        return (FSDP, TP)
+    if name == "w_down" and len(shape) == 2:
+        return (TP, FSDP)
+
+    return (None,) * len(shape)
+
+
+def param_spec(
+    path_keys,
+    shape,
+    mesh_sizes: Dict[str, int],
+    pc: ParallelConfig,
+) -> P:
+    logical = _param_logical_spec(tuple(path_keys), tuple(shape))
+    phys = []
+    for dim, lg in zip(shape, logical):
+        ax = _physical(lg, fsdp=pc.fsdp, experts=pc.shard_experts)
+        if ax is None or ax not in mesh_sizes or dim % mesh_sizes[ax] != 0:
+            phys.append(None)
+        else:
+            phys.append(ax)
+    return P(*phys)
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        k = getattr(p, "key", None)
+        if k is None:
+            k = getattr(p, "name", None)
+        if k is None:
+            k = str(getattr(p, "idx", ""))
+        out.append(str(k))
+    return tuple(out)
+
+
+def param_specs(params_shape, mesh: Mesh, pc: ParallelConfig):
+    """PartitionSpec pytree for a (non-stacked) param/state tree.
+
+    Scan-stacked segments (path contains "scan") carry a leading layer-cycle
+    dimension which is never sharded: the per-layer spec shifts right by one.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def spec(path, leaf):
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return P()
+        keys = _path_keys(path)
+        if "scan" in keys and leaf.ndim >= 1:
+            inner = param_spec(keys, leaf.shape[1:], sizes, pc)
+            return P(None, *tuple(inner))
+        return param_spec(keys, leaf.shape, sizes, pc)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+def stack_spec(spec_tree, manual: Tuple[str, ...]):
+    """Prepend the group axes to every spec (for G-stacked trees)."""
+    return jax.tree.map(
+        lambda s: P(manual, *tuple(s)), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# activations / batch / decode-state specs
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(mesh: Mesh) -> P:
+    axes = tuple(a for a in ("pod", "data_outer", "data_inner", "data")
+                 if a in mesh.axis_names)
+    return P(axes)
+
+
+def decode_state_specs(state_shape, mesh: Mesh, pc: ParallelConfig,
+                       *, context_parallel: bool = False):
+    """Sharding for the serving state: KV caches over (batch|seq, heads)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    daxes = tuple(a for a in ("pod", "data_outer", "data_inner", "data")
+                  if a in mesh.axis_names)
+    dsize = int(np.prod([sizes[a] for a in daxes])) if daxes else 1
+
+    def spec(path, leaf):
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return P()
+        keys = _path_keys(path)
+        name = keys[-1]
+        shape = leaf.shape
+        if "scan" in keys and len(shape) >= 1:
+            # stacked layer-cycle dim first: spec for shape[1:], then shift
+            inner = spec_inner(keys, shape[1:])
+            return P(None, *tuple(inner))
+        return spec_inner(keys, shape)
+
+    def spec_inner(keys, shape):
+        name = keys[-1]
+        # batch-first arrays
+        batch_ok = shape[0] % dsize == 0 if len(shape) else False
+        b = daxes if batch_ok else None
+        msize = sizes.get("model", 1)
+
+        def seq_axis(seq_dim, heads_sharded):
+            """Context-parallel fallbacks for the cache sequence dim:
+            over the data axes when the batch can't shard (long_500k), and
+            over the model axis when the kv heads can't (GQA kv < model)."""
+            if context_parallel and not batch_ok and seq_dim % dsize == 0:
+                return daxes
+            if not heads_sharded and seq_dim % msize == 0:
+                return "model"
+            return None
+
+        if "cross_kv" in keys and len(shape) == 4:  # (B, S_enc, Hkv, hd)
+            h = "model" if shape[2] % msize == 0 else None
+            return P(b, None, h, None)
+        if name in ("k", "v"):  # (B, S, Hkv, hd)
+            h = "model" if shape[2] % msize == 0 else None
+            return P(b, seq_axis(shape[1], h is not None), h, None)
+        if name in ("ckv", "krope"):  # (B, S, r)
+            return P(b, seq_axis(shape[1], False), None)
+        if name == "pos":  # (B, S)
+            return P(b, seq_axis(shape[1], False))
+        if name == "conv":  # (B, W-1, C)
+            c = "model" if shape[-1] % sizes.get("model", 1) == 0 else None
+            return P(b, None, c)
+        if name == "hidden":  # (B, W)
+            c = "model" if shape[-1] % sizes.get("model", 1) == 0 else None
+            return P(b, c)
+        # mLSTM/sLSTM cell tuples: (B,H,dh,dh) / (B,H,dh) / (B,H)
+        if len(shape) >= 2:
+            rest = [None] * (len(shape) - 1)
+            if len(shape) >= 3 and shape[1] % sizes.get("model", 1) == 0 \
+                    and name not in ("pos",):
+                rest[0] = "model"
+            return P(b, *rest)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, state_shape)

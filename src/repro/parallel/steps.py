@@ -1,0 +1,385 @@
+"""Distributed step functions: the Pier runtime on a real mesh.
+
+Layout invariants (see DESIGN.md §3):
+
+- **Manual axes** ``(pod, data_outer)``: Pier's relaxed axes. Params and
+  AdamW state carry a leading group axis ``G = num_pods * data_outer``
+  sharded over them — each group owns a (possibly divergent) model replica,
+  stored sharded over its own ``data_inner × model`` slice.
+- **Auto axes** ``(data_inner, model)``: GSPMD inserts all in-group
+  communication (FSDP param all-gathers, gradient reduce-scatters over the
+  in-group batch, TP collectives, MoE all-to-all) from sharding constraints.
+
+Step functions:
+
+- ``inner_step``   — Alg. 2 lines 5-8: group-local AdamW. Provably free of
+  (pod, data_outer) collectives (asserted by tests on the lowered HLO).
+- ``warmup_step``  — lazy-start/AdamW baseline: + global grad pmean.
+- ``accumulate_step`` — Alg. 1 lines 4-7: outer-momentum accumulation.
+- ``outer_step``   — Alg. 2 lines 10-21: global Δθ pmean + Nesterov.
+- ``serve_step`` / ``prefill_step`` — inference (plain GSPMD, no groups).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ParallelConfig, TrainConfig
+from repro.core.outer import OuterState, outer_init, outer_update, warmup_accumulate
+from repro.launch import mesh as M
+from repro.models import registry as R
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.clip import clip_by_global_norm
+from repro.optim.schedules import lr_at
+from repro.parallel import sharding as S
+from repro.parallel.axes import pier_rules, use_rules
+
+
+class TrainState(NamedTuple):
+    params: Any  # (G,)-stacked param tree
+    opt: AdamWState  # (G,)-stacked
+
+
+@dataclass
+class StepBundle:
+    mesh: Mesh
+    manual: Tuple[str, ...]
+    num_groups: int
+    pspec: Any  # unstacked param specs
+    stacked_pspec: Any
+    state_shardings: Any
+    outer_shardings: Any
+    batch_sharding: Callable[[Any], Any]
+    init_state: Callable
+    init_outer: Callable
+    inner_step: Callable
+    warmup_step: Callable
+    accumulate_step: Callable
+    outer_step: Callable
+    eval_step: Callable
+
+
+def _param_shapes(mc: ModelConfig, scan_layers: bool = False):
+    return jax.eval_shape(
+        lambda k: R.init_params(k, mc, scan_layers=scan_layers),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def _stack(tree, g: int):
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (g, *x.shape)), tree)
+
+
+def build_train_steps(
+    mc: ModelConfig, tc: TrainConfig, pc: ParallelConfig, mesh: Mesh
+) -> StepBundle:
+    manual = M.manual_axes(mesh)
+    sizes = M.axis_sizes(mesh)
+    G = 1
+    for a in manual:
+        G *= sizes[a]
+
+    rules = pier_rules(
+        have_pod="pod" in sizes, fsdp=pc.fsdp,
+        shard_experts=pc.shard_experts, inside_manual=True,
+        axis_sizes=sizes)
+
+    # ---- sharding specs -------------------------------------------------
+    pshapes = _param_shapes(mc, pc.scan_layers)
+    pspec = S.param_specs(pshapes, mesh, pc)
+    stacked_pspec = S.stack_spec(pspec, manual)
+    opt_shapes = jax.eval_shape(lambda: adamw_init(pshapes, tc))
+    opt_spec = AdamWState(
+        count=P(manual),
+        mu=S.param_specs(opt_shapes.mu, mesh, pc),
+        nu=S.param_specs(opt_shapes.nu, mesh, pc))
+    stacked_opt_spec = AdamWState(
+        count=P(manual),
+        mu=S.stack_spec(opt_spec.mu, manual),
+        nu=S.stack_spec(opt_spec.nu, manual))
+    state_spec = TrainState(params=stacked_pspec, opt=stacked_opt_spec)
+    state_shardings = S.shardings(state_spec, mesh)
+    outer_spec = OuterState(
+        momentum=S.param_specs(pshapes, mesh, pc),
+        anchor=S.param_specs(pshapes, mesh, pc),
+        num_syncs=P())
+    outer_shardings = S.shardings(outer_spec, mesh)
+    bspec = S.batch_spec(mesh)
+
+    def batch_sharding(batch_shapes):
+        return jax.tree.map(
+            lambda x: NamedSharding(mesh, P(bspec[0], *([None] * (x.ndim - 1)))),
+            batch_shapes)
+
+    # ---- init ------------------------------------------------------------
+    def init_state(rng) -> TrainState:
+        def f(rng):
+            params = R.init_params(rng, mc, scan_layers=pc.scan_layers)
+            opt = adamw_init(params, tc)
+            return TrainState(params=_stack(params, G), opt=AdamWState(
+                count=jnp.zeros((G,), jnp.int32),
+                mu=_stack(opt.mu, G), nu=_stack(opt.nu, G)))
+        return jax.jit(f, out_shardings=state_shardings)(rng)
+
+    def init_outer(state: TrainState) -> OuterState:
+        def f(state):
+            params = jax.tree.map(lambda x: x[0], state.params)
+            return outer_init(params, tc)
+        return jax.jit(f, out_shardings=outer_shardings)(state)
+
+    # ---- the shared inner/warmup body -------------------------------------
+    def grads_and_loss(params, batch, step):
+        nm = pc.num_microbatches
+
+        def lfn(p, b):
+            return R.loss_fn(p, mc, b, use_pallas=pc.use_pallas,
+                             remat=pc.remat)
+
+        if nm == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                lfn, has_aux=True)(params, batch)
+            return grads, loss
+        micro = jax.tree.map(
+            lambda x: x.reshape(nm, x.shape[0] // nm, *x.shape[1:]), batch)
+
+        def mb_body(acc, b):
+            g_acc, l_acc = acc
+            (loss, _), grads = jax.value_and_grad(lfn, has_aux=True)(params, b)
+            return (jax.tree.map(jnp.add, g_acc, grads), l_acc + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        acc0 = (zeros, jnp.float32(0))
+        if manual:
+            # grads are varying over the manual (group) axes; the zero init
+            # must carry the same varying-mesh-axes annotation for the scan
+            acc0 = jax.lax.pvary(acc0, tuple(manual))
+        (gsum, lsum), _ = jax.lax.scan(mb_body, acc0, micro)
+        inv = 1.0 / nm
+        return jax.tree.map(lambda g: g * inv, gsum), lsum * inv
+
+    def make_sgd_body(global_sync: bool):
+        def body(state: TrainState, batch, step):
+            with use_rules(rules):
+                params = jax.tree.map(lambda x: x[0], state.params)
+                opt = jax.tree.map(lambda x: x[0], state.opt)
+                grads, loss = grads_and_loss(params, batch, step)
+                if global_sync and manual:
+                    grads = jax.lax.pmean(grads, manual)
+                grads, gnorm = clip_by_global_norm(grads, tc.clip_grad)
+                lr = lr_at(tc, step)
+                new_params, new_opt = adamw_update(grads, opt, params, tc, lr)
+                metrics = {
+                    "loss": jax.lax.pmean(loss, manual) if manual else loss,
+                    "grad_norm": (jax.lax.pmean(gnorm, manual)
+                                  if manual else gnorm),
+                    "lr": lr,
+                }
+                new_state = TrainState(
+                    params=jax.tree.map(lambda x: x[None], new_params),
+                    opt=jax.tree.map(lambda x: x[None], new_opt))
+                return new_state, metrics
+        return body
+
+    def wrap_state_step(body):
+        in_specs = (
+            TrainState(
+                params=jax.tree.map(lambda _: P(manual), state_spec.params,
+                                    is_leaf=lambda s: isinstance(s, P)),
+                opt=jax.tree.map(lambda _: P(manual), state_spec.opt,
+                                 is_leaf=lambda s: isinstance(s, P))),
+            P(manual),  # batch dim 0 (manual part; data_inner rides auto)
+            P(),  # step
+        )
+        out_specs = (in_specs[0], P())
+
+        def stepfn(state, batch, step):
+            batch_specs = jax.tree.map(
+                lambda x: P(manual, *([None] * (x.ndim - 1))), batch)
+            f = jax.shard_map(
+                body, mesh=mesh,
+                in_specs=(in_specs[0], batch_specs, P()),
+                out_specs=out_specs,
+                axis_names=set(manual))
+            return f(state, batch, step)
+
+        return jax.jit(stepfn, donate_argnums=(0,))
+
+    inner_step = wrap_state_step(make_sgd_body(global_sync=False))
+    warmup_step = wrap_state_step(make_sgd_body(global_sync=True))
+
+    # ---- outer events -----------------------------------------------------
+    def accumulate_body(state, outer, mu):
+        with use_rules(rules):
+            params = jax.tree.map(lambda x: x[0], state.params)
+            if manual:
+                # During warmup all groups hold identical params (they run
+                # globally synced AdamW), but the VMA checker cannot prove
+                # it — pmean is the identity here and makes it explicit.
+                params = jax.lax.pmean(params, manual)
+            return warmup_accumulate(outer, params, mu)
+
+    def accumulate_fn(state, outer, mu):
+        sspec = TrainState(
+            params=jax.tree.map(lambda _: P(manual), state_spec.params,
+                                is_leaf=lambda s: isinstance(s, P)),
+            opt=jax.tree.map(lambda _: P(manual), state_spec.opt,
+                             is_leaf=lambda s: isinstance(s, P)))
+        ospec = jax.tree.map(lambda _: P(), outer_spec,
+                             is_leaf=lambda s: isinstance(s, P))
+        f = jax.shard_map(
+            accumulate_body, mesh=mesh,
+            in_specs=(sspec, ospec, P()),
+            out_specs=ospec,
+            axis_names=set(manual))
+        return f(state, outer, mu)
+
+    accumulate_step = jax.jit(accumulate_fn, donate_argnums=(1,))
+
+    def outer_body(state, outer, mu, olr):
+        with use_rules(rules):
+            params = jax.tree.map(lambda x: x[0], state.params)
+            delta = jax.tree.map(
+                lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32),
+                params, outer.anchor)
+            if manual:
+                delta = jax.lax.pmean(delta, manual)  # THE global collective
+            new_params_f32, new_outer = outer_update(
+                outer, delta, tc, mu=mu, lr=olr, use_pallas=pc.use_pallas)
+            new_params = jax.tree.map(
+                lambda f32, p: f32.astype(p.dtype)[None],
+                new_params_f32, params)
+            new_state = TrainState(params=new_params, opt=state.opt)
+            return new_state, new_outer
+
+    def outer_fn(state, outer, mu, olr):
+        sspec = TrainState(
+            params=jax.tree.map(lambda _: P(manual), state_spec.params,
+                                is_leaf=lambda s: isinstance(s, P)),
+            opt=jax.tree.map(lambda _: P(manual), state_spec.opt,
+                             is_leaf=lambda s: isinstance(s, P)))
+        ospec = jax.tree.map(lambda _: P(), outer_spec,
+                             is_leaf=lambda s: isinstance(s, P))
+        f = jax.shard_map(
+            outer_body, mesh=mesh,
+            in_specs=(sspec, ospec, P(), P()),
+            out_specs=(sspec, ospec),
+            axis_names=set(manual))
+        return f(state, outer, mu, olr)
+
+    outer_step = jax.jit(outer_fn, donate_argnums=(0, 1))
+
+    # ---- eval --------------------------------------------------------------
+    def eval_body(state, batch):
+        with use_rules(rules):
+            params = jax.tree.map(lambda x: x[0], state.params)
+            loss, _ = R.loss_fn(params, mc, batch, use_pallas=pc.use_pallas)
+            return jax.lax.pmean(loss, manual) if manual else loss
+
+    def eval_fn(state, batch):
+        sspec = TrainState(
+            params=jax.tree.map(lambda _: P(manual), state_spec.params,
+                                is_leaf=lambda s: isinstance(s, P)),
+            opt=jax.tree.map(lambda _: P(manual), state_spec.opt,
+                             is_leaf=lambda s: isinstance(s, P)))
+        batch_specs = jax.tree.map(
+            lambda x: P(manual, *([None] * (x.ndim - 1))), batch)
+        f = jax.shard_map(eval_body, mesh=mesh,
+                          in_specs=(sspec, batch_specs), out_specs=P(),
+                          axis_names=set(manual))
+        return f(state, batch)
+
+    eval_step = jax.jit(eval_fn)
+
+    return StepBundle(
+        mesh=mesh, manual=manual, num_groups=G,
+        pspec=pspec, stacked_pspec=stacked_pspec,
+        state_shardings=state_shardings, outer_shardings=outer_shardings,
+        batch_sharding=batch_sharding,
+        init_state=init_state, init_outer=init_outer,
+        inner_step=inner_step, warmup_step=warmup_step,
+        accumulate_step=accumulate_step, outer_step=outer_step,
+        eval_step=eval_step)
+
+
+# ===========================================================================
+# Serving (no group structure: plain GSPMD over the whole mesh)
+# ===========================================================================
+
+
+@dataclass
+class ServeBundle:
+    mesh: Mesh
+    pspec: Any
+    param_shardings: Any
+    state_shardings: Any
+    serve_step: Callable
+    prefill_step: Callable
+    init_state: Callable
+
+
+def build_serve_steps(
+    mc: ModelConfig, pc: ParallelConfig, mesh: Mesh, *,
+    batch: int, max_len: int,
+) -> ServeBundle:
+    rules = pier_rules(
+        have_pod="pod" in mesh.axis_names, fsdp=pc.fsdp,
+        shard_experts=pc.shard_experts, inside_manual=False,
+        context_parallel_seq=pc.context_parallel,
+        axis_sizes=M.axis_sizes(mesh))
+
+    pshapes = _param_shapes(mc, pc.scan_layers)
+    pspec = S.param_specs(pshapes, mesh, pc)
+    param_shardings = S.shardings(pspec, mesh)
+
+    state_shapes = jax.eval_shape(
+        lambda: R.init_decode_state(mc, batch, max_len,
+                                    scan_layers=pc.scan_layers))
+    sspec = S.decode_state_specs(
+        state_shapes, mesh, pc, context_parallel=pc.context_parallel)
+    state_shardings = S.shardings(sspec, mesh)
+
+    # NOTE: MoE "indexed" dispatch was evaluated for serving (§Perf pair 3)
+    # and REGRESSES memory 5.7x for a 16% collective win — serving stays on
+    # the flat dispatch; see experiments/perf/SUMMARY.md.
+    def serve(params, state, tokens):
+        with use_rules(rules):
+            return R.decode_step(params, mc, state, tokens)
+
+    def prefill(params, batch_in):
+        with use_rules(rules):
+            logits, state = R.prefill(params, mc, batch_in, max_len=max_len,
+                                      use_pallas=pc.use_pallas)
+            # serving semantics: only the next-token logits leave the step
+            return logits[:, -1:], state
+
+    def init_state():
+        return jax.jit(
+            lambda: R.init_decode_state(mc, batch, max_len,
+                                        scan_layers=pc.scan_layers),
+            out_shardings=state_shardings)()
+
+    # Serving is plain GSPMD (no shard_map); constraints need the mesh in
+    # scope during trace -> wrap the jitted callables in jax.set_mesh.
+    def _with_mesh(fn):
+        def call(*args, **kw):
+            with jax.set_mesh(mesh):
+                return fn(*args, **kw)
+        call.lower = lambda *a, **k: _lower_with_mesh(fn, mesh, *a, **k)
+        return call
+
+    def _lower_with_mesh(fn, mesh, *a, **k):
+        with jax.set_mesh(mesh):
+            return fn.lower(*a, **k)
+
+    serve_step = _with_mesh(jax.jit(serve, donate_argnums=(1,)))
+    prefill_step = _with_mesh(jax.jit(prefill))
+
+    return ServeBundle(
+        mesh=mesh, pspec=pspec, param_shardings=param_shardings,
+        state_shardings=state_shardings, serve_step=serve_step,
+        prefill_step=prefill_step, init_state=init_state)

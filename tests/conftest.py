@@ -1,0 +1,20 @@
+# NOTE: deliberately NO XLA_FLAGS / device-count forcing here — unit tests
+# and smoke tests run on the single real CPU device. Multi-device semantics
+# are tested via subprocesses in test_multidevice.py (which set
+# XLA_FLAGS=--xla_force_host_platform_device_count=8 before jax imports).
+
+import os
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if os.path.abspath(SRC) not in [os.path.abspath(p) for p in sys.path]:
+    sys.path.insert(0, os.path.abspath(SRC))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import jax
+
+    return jax.random.PRNGKey(0)

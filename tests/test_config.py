@@ -1,0 +1,138 @@
+"""Config correctness: assigned architectures match the assignment table,
+schedules implement Algorithm 2 / §V exactly."""
+
+import pytest
+
+from repro.config import INPUT_SHAPES, TrainConfig
+from repro.configs import (assigned_architectures, get_config,
+                           get_reduced_config, list_architectures)
+
+# (name, layers, d_model, heads, kv, d_ff_or_moe_ff, vocab)
+ASSIGNMENT = {
+    "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102_400),
+    "granite-8b": (36, 4096, 32, 8, 14336, 49_152),
+    "minicpm-2b": (40, 2304, 36, 36, 5760, 122_753),
+    "qwen3-14b": (40, 5120, 40, 8, 17408, 151_936),
+    "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151_936),
+    "xlstm-1.3b": (48, 2048, 4, 4, 0, 50_304),
+    "chameleon-34b": (48, 8192, 64, 8, 22016, 65_536),
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256_000),
+    "whisper-large-v3": (32, 1280, 20, 20, 5120, 51_866),
+    "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163_840),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNMENT))
+def test_assigned_config_matches_table(arch):
+    L, d, h, kv, ff, v = ASSIGNMENT[arch]
+    cfg = get_config(arch)
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.vocab_size == v
+    if cfg.is_moe:
+        assert cfg.moe_d_ff == ff
+    elif ff:
+        assert cfg.d_ff == ff
+
+
+def test_assignment_pool_complete():
+    assert sorted(assigned_architectures()) == sorted(ASSIGNMENT)
+    assert len(list_architectures()) == 14  # + GPT-2 family
+
+
+def test_moe_details():
+    ds = get_config("deepseek-v2-236b")
+    assert (ds.num_experts, ds.num_experts_per_tok, ds.num_shared_experts) \
+        == (160, 6, 2)
+    assert ds.attention_kind == "mla" and ds.kv_lora_rank == 512
+    k2 = get_config("kimi-k2-1t-a32b")
+    assert (k2.num_experts, k2.num_experts_per_tok) == (384, 8)
+
+
+def test_reduced_configs_are_small():
+    for arch in list_architectures():
+        cfg = get_reduced_config(arch)
+        assert cfg.num_layers <= 3
+        assert cfg.d_model <= 512
+        assert cfg.num_experts <= 4
+
+
+def test_input_shapes():
+    s = INPUT_SHAPES
+    assert s["train_4k"].seq_len == 4096 and s["train_4k"].global_batch == 256
+    assert s["prefill_32k"].seq_len == 32768 and s["prefill_32k"].global_batch == 32
+    assert s["decode_32k"].global_batch == 128
+    assert s["long_500k"].seq_len == 524_288 and s["long_500k"].global_batch == 1
+
+
+def test_sub_quadratic_flags():
+    assert get_config("xlstm-1.3b").sub_quadratic
+    assert get_config("recurrentgemma-9b").sub_quadratic
+    assert not get_config("granite-8b").sub_quadratic
+    assert get_config("granite-8b").replace(sliding_window=4096).sub_quadratic
+    assert not get_config("deepseek-v2-236b").sub_quadratic
+
+
+# ---------------------------------------------------------------------------
+# schedules (Algorithm 2 lines 12-18, §V outer LR)
+# ---------------------------------------------------------------------------
+
+
+def test_momentum_decay_schedule():
+    tc = TrainConfig(total_steps=1000)
+    assert tc.mu_at(100) == 0.99  # 10% boundary
+    assert tc.mu_at(149) == 0.99
+    assert tc.mu_at(150) == 0.95
+    assert tc.mu_at(199) == 0.95
+    assert tc.mu_at(200) == 0.90
+    assert tc.mu_at(999) == 0.90
+
+
+def test_outer_lr_schedule():
+    tc = TrainConfig(total_steps=1000)
+    assert tc.outer_lr_at(0) == 0.0  # lazy start: outer not applied
+    assert tc.outer_lr_at(99) == 0.0
+    mid = tc.outer_lr_at(150)
+    assert 0.0 < mid < 1.0  # linear warmup 0 -> 1 over [10%, 20%]
+    assert abs(tc.outer_lr_at(150) - 0.5) < 0.02
+    assert tc.outer_lr_at(500) == 1.1  # 20%-80%
+    assert tc.outer_lr_at(900) == 0.9  # final 20%
+
+
+def test_pier_schedule_phases():
+    from repro.core.pier import PierSchedule
+
+    tc = TrainConfig(total_steps=1000, sync_interval=50, optimizer="pier")
+    s = PierSchedule(tc)
+    assert s.phase(0) == "warmup"
+    assert s.phase(99) == "warmup"
+    assert s.phase(100) == "inner"
+    # sync events fire at interval boundaries
+    assert s.is_sync_step(49) and s.sync_kind(49) == "accumulate"
+    assert not s.is_sync_step(50)
+    assert s.is_sync_step(149) and s.sync_kind(149) == "outer"
+    # comm fraction: warmup (10%) + 1/50 of the rest
+    assert abs(s.global_comm_fraction() - (0.1 + 0.9 / 50)) < 1e-9
+
+
+def test_diloco_schedule():
+    from repro.core.pier import PierSchedule
+
+    tc = TrainConfig(total_steps=1000, sync_interval=50, optimizer="diloco",
+                     lazy_start=False)
+    s = PierSchedule(tc)
+    assert s.phase(0) == "inner"  # no lazy start
+    assert s.mu_at(120) == 0.9  # fixed mu (no decay schedule)
+    assert s.outer_lr_at(500) == tc.fixed_outer_lr
+
+
+def test_adamw_schedule():
+    from repro.core.pier import PierSchedule
+
+    tc = TrainConfig(total_steps=1000, optimizer="adamw")
+    s = PierSchedule(tc)
+    assert s.phase(999) == "warmup"
+    assert not s.is_sync_step(49)
+    assert s.global_comm_fraction() == 1.0

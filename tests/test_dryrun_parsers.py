@@ -1,0 +1,96 @@
+"""Unit tests for the dry-run's HLO accounting (no devices needed)."""
+
+import pytest
+
+pytest.importorskip("jax")
+
+# NOTE: importing repro.launch.dryrun would force 512 host devices into this
+# process; the parsers live at module level so we import the module source
+# WITHOUT executing the jax-touching parts by vendoring the regexes through
+# a controlled import of the functions only.
+import importlib.util
+import os
+import sys
+import types
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro", "launch",
+                   "dryrun.py")
+
+
+def _load_parsers():
+    """Execute dryrun.py with XLA_FLAGS already set to 1 device so the
+    module import doesn't change this process's device count."""
+    os.environ.setdefault("XLA_FLAGS", "")
+    spec = importlib.util.spec_from_file_location("_dryrun_parsers", SRC)
+    mod = importlib.util.module_from_spec(spec)
+    saved = os.environ.get("XLA_FLAGS")
+    spec.loader.exec_module(mod)
+    if saved is not None:
+        os.environ["XLA_FLAGS"] = saved
+    return mod
+
+
+DR = _load_parsers()
+
+
+HLO = """
+  %ar = f32[1024,512]{1,0} all-reduce(%x), channel_id=1, replica_groups={{0,1}}
+  %ag.1 = bf16[64]{0} all-gather(%y), dimensions={0}
+  %rs = (f32[128]{0}, f32[32]{0}) reduce-scatter(%a, %b), dimensions={0}
+  %a2a = f32[16,16]{1,0} all-to-all(%z), dimensions={0}
+  %cp-start = f32[8]{0} collective-permute-start(%w)
+  %cp-done = f32[8]{0} collective-permute-done(%cp-start)
+  %notacoll = f32[999]{0} add(%p, %q)
+"""
+
+
+def test_collective_bytes_parser():
+    out = DR.collective_bytes(HLO)
+    assert out["all-reduce"] == 1024 * 512 * 4
+    assert out["all-gather"] == 64 * 2
+    assert out["reduce-scatter"] == 128 * 4 + 32 * 4
+    assert out["all-to-all"] == 256 * 4
+    assert out["collective-permute"] == 8 * 4  # start counted, done skipped
+
+
+def test_convert_artifact_parser():
+    txt = """
+%wrapped_convert_computation.17 (param_0.552: bf16[59,10,1280,1536]) -> f32[59,10,1280,1536] {
+%wrapped_convert_computation.18 (param_0.553: bf16[4,4]) -> f32[4,4] {
+"""
+    n = DR.cpu_convert_artifact_bytes(txt)
+    assert n == (59 * 10 * 1280 * 1536 + 16) * 4
+
+
+def test_extrapolate_cost_linear():
+    r1 = {"flops": 100.0, "bytes_accessed": 10.0,
+          "collective_bytes": {"all-reduce": 4.0}}
+    r2 = {"flops": 180.0, "bytes_accessed": 18.0,
+          "collective_bytes": {"all-reduce": 6.0, "all-gather": 2.0}}
+    out = DR.extrapolate_cost(r1, r2, 2, 4, 10)
+    assert out["flops"] == pytest.approx(100 + 40 * 8)
+    assert out["bytes_accessed"] == pytest.approx(10 + 4 * 8)
+    assert out["collective_bytes"]["all-reduce"] == pytest.approx(4 + 8)
+    # a kind absent at L1 extrapolates from zero
+    assert out["collective_bytes"]["all-gather"] == pytest.approx(0 + 8)
+
+
+def test_long_skip_set():
+    assert "deepseek-v2-236b" in DR.LONG_SKIP
+    assert "kimi-k2-1t-a32b" in DR.LONG_SKIP
+    assert "whisper-large-v3" in DR.LONG_SKIP
+    shape = DR.INPUT_SHAPES["long_500k"]
+    assert DR.resolve_model("deepseek-v2-236b", shape) is None
+    swa = DR.resolve_model("granite-8b", shape)
+    assert swa is not None and swa.sliding_window == DR.SWA_WINDOW
+
+
+def test_cost_depths():
+    from repro.configs import get_config
+
+    assert DR.cost_depths(get_config("granite-8b"))[:2] == (1, 2)
+    assert DR.cost_depths(get_config("deepseek-v2-236b"))[:2] == (2, 3)
+    l1, l2, c = DR.cost_depths(get_config("recurrentgemma-9b"))
+    assert (l1, l2, c) == (3, 6, 3)
+    l1, l2, c = DR.cost_depths(get_config("xlstm-1.3b"))
+    assert (l1, l2, c) == (8, 16, 8)

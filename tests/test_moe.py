@@ -1,0 +1,105 @@
+"""MoE routing/dispatch semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig
+from repro.models import moe as MOE
+
+
+def _cfg(**kw):
+    base = dict(d_model=32, moe_d_ff=16, num_experts=4, num_experts_per_tok=2,
+                num_shared_experts=0, num_layers=2, dtype="float32",
+                expert_capacity_factor=8.0)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _naive_moe(p, x, cfg):
+    """Loop-over-experts oracle (no capacity limit)."""
+    B, S, D = x.shape
+    xf = x.reshape(-1, D).astype(jnp.float32)
+    logits = xf @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_probs, topk_idx = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    topk_probs = topk_probs / jnp.sum(topk_probs, axis=-1, keepdims=True)
+    out = jnp.zeros_like(xf)
+    for e in range(cfg.num_experts):
+        gate = xf @ p["w_gate"][e].astype(jnp.float32)
+        up = xf @ p["w_up"][e].astype(jnp.float32)
+        h = jax.nn.silu(gate) * up
+        eo = h @ p["w_down"][e].astype(jnp.float32)
+        for k in range(cfg.num_experts_per_tok):
+            w = jnp.where(topk_idx[:, k] == e, topk_probs[:, k], 0.0)
+            out = out + w[:, None] * eo
+    return out.reshape(B, S, D)
+
+
+def test_moe_matches_naive_loop(rng):
+    cfg = _cfg()
+    p = MOE.init_moe(rng, cfg)
+    x = jax.random.normal(rng, (2, 8, 32))
+    out, stats = MOE.apply_moe(p, x, cfg)
+    ref = _naive_moe(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_moe_shared_expert_added(rng):
+    cfg = _cfg(num_shared_experts=1)
+    p = MOE.init_moe(rng, cfg)
+    x = jax.random.normal(rng, (1, 4, 32))
+    out, _ = MOE.apply_moe(p, x, cfg)
+    routed = _naive_moe(p, x, cfg)
+    from repro.models import layers as L
+    shared = L.apply_mlp(p["shared"], x, cfg)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(routed + shared),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_capacity_drops_tokens(rng):
+    """With capacity_factor -> tiny, overflowing tokens contribute zeros."""
+    cfg = _cfg(expert_capacity_factor=1e-6)  # capacity floor = 8 slots
+    p = MOE.init_moe(rng, cfg)
+    x = jax.random.normal(rng, (4, 32, 32))  # 128 tokens, 256 assignments
+    out, stats = MOE.apply_moe(p, x, cfg)
+    ref = _naive_moe(p, x, cfg)
+    # some tokens must differ from the capacity-free oracle (drops)
+    assert float(jnp.abs(out - ref).max()) > 1e-4
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_load_stats_and_aux_loss(rng):
+    cfg = _cfg()
+    p = MOE.init_moe(rng, cfg)
+    x = jax.random.normal(rng, (2, 16, 32))
+    _, stats = MOE.apply_moe(p, x, cfg)
+    load = np.asarray(stats["load"])
+    assert abs(load.sum() - 1.0) < 1e-5  # assignment fractions
+    # Switch aux loss is >= 1 (equality iff perfectly uniform)
+    assert float(stats["aux_loss"]) >= 0.99
+    assert float(stats["z_loss"]) >= 0.0
+
+
+def test_expert_capacity_helper():
+    cfg = _cfg(expert_capacity_factor=1.25)
+    c = MOE.expert_capacity(1024, cfg)
+    assert c % 8 == 0
+    assert c >= 1024 * 2 / 4  # >= tokens*k/E
+
+
+def test_moe_grads_flow_to_router(rng):
+    cfg = _cfg()
+    p = MOE.init_moe(rng, cfg)
+    x = jax.random.normal(rng, (1, 8, 32))
+
+    def loss(p):
+        out, stats = MOE.apply_moe(p, x, cfg)
+        return jnp.sum(out ** 2) + stats["aux_loss"]
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["router"]).sum()) > 0
+    assert float(jnp.abs(g["w_gate"]).sum()) > 0

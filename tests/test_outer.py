@@ -1,0 +1,108 @@
+"""Pier outer optimizer: Algorithm 1 & 2 algebra, incl. the PyTorch-Nesterov
+formulation equivalence the paper discusses in §V."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import TrainConfig
+from repro.core.outer import OuterState, outer_init, outer_update, warmup_accumulate
+from repro.kernels.ref import pier_update_ref
+
+
+def _mk_state(p0, tc):
+    params = {"w": jnp.asarray(p0)}
+    return params, outer_init(params, tc)
+
+
+def test_warmup_accumulate_algebra():
+    """Alg. 1 lines 5-6: M <- mu*M + (theta_t - theta_{t-r}); anchor moves."""
+    tc = TrainConfig()
+    params, st0 = _mk_state(np.zeros(4, np.float32), tc)
+    p1 = {"w": jnp.asarray(np.array([1.0, 2.0, 3.0, 4.0], np.float32))}
+    st1 = warmup_accumulate(st0, p1, 0.9)
+    np.testing.assert_allclose(np.asarray(st1.momentum["w"]), [1, 2, 3, 4])
+    np.testing.assert_allclose(np.asarray(st1.anchor["w"]), [1, 2, 3, 4])
+    p2 = {"w": p1["w"] + 1.0}
+    st2 = warmup_accumulate(st1, p2, 0.9)
+    # M = 0.9*[1,2,3,4] + [1,1,1,1]
+    np.testing.assert_allclose(np.asarray(st2.momentum["w"]),
+                               [1.9, 2.8, 3.7, 4.6], rtol=1e-6)
+    assert int(st2.num_syncs) == 2
+
+
+def _torch_nesterov_sgd(grad, buf, mu, lr, theta):
+    """Reference: PyTorch SGD (nesterov=True, dampening=0) semantics.
+
+    buf <- mu*buf + g;  update = g + mu*buf;  theta <- theta - lr*update.
+    Pier feeds g = -delta (delta is the improvement direction), hence signs.
+    """
+    buf = mu * buf + grad
+    update = grad + mu * buf
+    return theta - lr * update, buf
+
+
+def test_torch_nesterov_equivalence():
+    """Alg. 2 l.20-21 == PyTorch nesterov SGD on the outer 'gradient' -delta."""
+    tc = TrainConfig(outer_optimizer="nesterov_torch")
+    rng = np.random.default_rng(1)
+    anchor = rng.normal(size=6).astype(np.float32)
+    params, st = _mk_state(anchor, tc)
+    buf = np.zeros(6, np.float32)
+    theta = anchor.copy()
+    for it in range(4):
+        delta = rng.normal(size=6).astype(np.float32) * 0.1
+        new_p, st = outer_update(st, {"w": jnp.asarray(delta)}, tc,
+                                 mu=0.9, lr=0.7)
+        theta, buf = _torch_nesterov_sgd(-delta, buf, 0.9, 0.7, theta)
+        np.testing.assert_allclose(np.asarray(new_p["w"]), theta, rtol=1e-5,
+                                   atol=1e-6)
+        # anchor follows the synced model
+        np.testing.assert_allclose(np.asarray(st.anchor["w"]), theta,
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("form", ["nesterov_torch", "nesterov_classic", "sgd"])
+def test_outer_matches_kernel_ref(form):
+    tc = TrainConfig(outer_optimizer=form)
+    rng = np.random.default_rng(2)
+    anchor = rng.normal(size=(3, 5)).astype(np.float32)
+    params, st = _mk_state(anchor, tc)
+    m0 = rng.normal(size=(3, 5)).astype(np.float32)
+    st = OuterState(momentum={"w": jnp.asarray(m0)}, anchor=st.anchor,
+                    num_syncs=st.num_syncs)
+    delta = rng.normal(size=(3, 5)).astype(np.float32)
+    new_p, st2 = outer_update(st, {"w": jnp.asarray(delta)}, tc, mu=0.95,
+                              lr=1.1)
+    ref_p, ref_m = pier_update_ref(anchor, m0, delta, mu=0.95, lr=1.1,
+                                   formulation=form)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), np.asarray(ref_p),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(st2.momentum["w"]),
+                               np.asarray(ref_m), rtol=1e-6)
+
+
+@given(mu=st.floats(0.0, 0.999), lr=st.floats(0.0, 2.0),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_outer_update_properties(mu, lr, seed):
+    """Zero delta with zero momentum is a fixed point; lr=0 freezes theta."""
+    tc = TrainConfig(outer_optimizer="nesterov_torch")
+    rng = np.random.default_rng(seed)
+    anchor = rng.normal(size=8).astype(np.float32)
+    params, st = _mk_state(anchor, tc)
+    zero = {"w": jnp.zeros(8)}
+    new_p, st2 = outer_update(st, zero, tc, mu=mu, lr=lr)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), anchor, atol=1e-6)
+    delta = {"w": jnp.asarray(rng.normal(size=8).astype(np.float32))}
+    frozen, _ = outer_update(st, delta, tc, mu=mu, lr=0.0)
+    np.testing.assert_allclose(np.asarray(frozen["w"]), anchor, atol=1e-6)
+
+
+def test_opt_state_dtype_bf16():
+    tc = TrainConfig(opt_state_dtype="bfloat16")
+    params, st = _mk_state(np.ones(4, np.float32), tc)
+    assert st.momentum["w"].dtype == jnp.bfloat16
+    assert st.anchor["w"].dtype == jnp.bfloat16

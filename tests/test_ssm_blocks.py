@@ -1,0 +1,120 @@
+"""xLSTM / RG-LRU block math: parallel == chunkwise == recurrent."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig
+from repro.models import rglru as RG
+from repro.models import ssm as SSM
+
+
+def _qkv(key, B=2, S=32, H=2, dh=16):
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, H, dh))
+    v = jax.random.normal(ks[2], (B, S, H, dh))
+    ig = jax.random.normal(ks[3], (B, S, H)) - 2.0
+    fg = jax.random.normal(ks[4], (B, S, H)) + 2.0
+    return q, k, v, ig, fg
+
+
+def test_mlstm_chunkwise_equals_parallel(rng):
+    q, k, v, ig, fg = _qkv(rng)
+    h_par = SSM.mlstm_parallel(q, k, v, ig, fg)
+    for chunk in (4, 8, 16):
+        h_chk = SSM.mlstm_chunkwise(q, k, v, ig, fg, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(h_chk), np.asarray(h_par),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_mlstm_recurrent_equals_parallel(rng):
+    q, k, v, ig, fg = _qkv(rng, B=1, S=16)
+    h_par = SSM.mlstm_parallel(q, k, v, ig, fg)
+    B, S, H, dh = q.shape
+    state = (jnp.zeros((B, H, dh, dh)), jnp.zeros((B, H, dh)),
+             jnp.full((B, H), -jnp.inf))
+    outs = []
+    for t in range(S):
+        state, h = SSM.mlstm_recurrent_step(
+            state, q[:, t], k[:, t], v[:, t], ig[:, t], fg[:, t])
+        outs.append(h)
+    h_rec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(h_rec), np.asarray(h_par),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_mlstm_final_state_equals_recurrent(rng):
+    q, k, v, ig, fg = _qkv(rng, B=1, S=12)
+    C, n, m = SSM.mlstm_final_state(q, k, v, ig, fg)
+    B, S, H, dh = q.shape
+    state = (jnp.zeros((B, H, dh, dh)), jnp.zeros((B, H, dh)),
+             jnp.full((B, H), -jnp.inf))
+    for t in range(S):
+        state, _ = SSM.mlstm_recurrent_step(
+            state, q[:, t], k[:, t], v[:, t], ig[:, t], fg[:, t])
+    np.testing.assert_allclose(np.asarray(C), np.asarray(state[0]),
+                               rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(n), np.asarray(state[1]),
+                               rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(state[2]),
+                               rtol=2e-4, atol=1e-5)
+
+
+def test_rglru_scan_equals_sequential(rng):
+    """associative_scan recurrence == step-by-step loop."""
+    cfg = ModelConfig(d_model=32, lru_width=32, num_heads=2, dtype="float32")
+    p = RG.init_rglru(rng, cfg)
+    B, S = 2, 10
+    x = jax.random.normal(rng, (B, S, 32))
+    out_par, _ = RG.apply_rglru(p, x, cfg)
+    state = RG.init_rglru_state(cfg, B)
+    outs = []
+    for t in range(S):
+        o, state = RG.apply_rglru(p, x[:, t:t + 1], cfg, state=state)
+        outs.append(o)
+    out_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_seq), np.asarray(out_par),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_rglru_state_bounded(rng):
+    """|a_t| < 1 keeps the hidden state bounded over long rollouts."""
+    cfg = ModelConfig(d_model=16, lru_width=16, num_heads=2, dtype="float32")
+    p = RG.init_rglru(rng, cfg)
+    state = RG.init_rglru_state(cfg, 1)
+    x = jax.random.normal(rng, (1, 1, 16))
+    for _ in range(200):
+        _, state = RG.apply_rglru(p, x, cfg, state=state)
+    assert bool(jnp.isfinite(state["hidden"]).all())
+    assert float(jnp.abs(state["hidden"]).max()) < 100.0
+
+
+def test_slstm_decode_continues_scan(rng):
+    cfg = ModelConfig(d_model=32, num_heads=2, dtype="float32")
+    p = SSM.init_slstm(rng, cfg)
+    x = jax.random.normal(rng, (1, 8, 32))
+    full, _ = SSM.apply_slstm(p, x, cfg)
+    half, st = SSM.apply_slstm(p, x[:, :4], cfg, return_state=True)
+    outs = [half]
+    for t in range(4, 8):
+        o, st = SSM.apply_slstm(p, x[:, t:t + 1], cfg, state=st)
+        outs.append(o)
+    stitched = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stitched), np.asarray(full),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_causal_conv1d_streaming(rng):
+    kernel = jax.random.normal(rng, (4, 8))
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 12, 8))
+    full, _ = SSM._causal_conv1d(x, kernel)
+    state = jnp.zeros((2, 3, 8))
+    outs = []
+    for t in range(12):
+        y, state = SSM._causal_conv1d(x[:, t:t + 1], kernel, state)
+        outs.append(y)
+    stream = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stream), np.asarray(full),
+                               rtol=1e-5, atol=1e-6)
