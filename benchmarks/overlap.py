@@ -1,0 +1,172 @@
+"""Delayed outer sync: modeled (and optionally measured) step-time savings.
+
+The eager outer step serializes the training loop: every ``r`` inner steps
+the host blocks for the cross-group Δθ all-reduce. With ``sync_delay = d``
+the collective dispatched at sync step t overlaps the next ``d`` inner
+steps; only the remainder ``max(0, t_comm − d·t_inner)`` is exposed.
+
+Per sync period (r inner steps + one outer event):
+
+    T_eager(r)      = r·t_inner + t_comm + t_update
+    T_overlap(r, d) = r·t_inner + max(0, t_comm − d·t_inner) + t_update
+
+where ``t_inner`` is the modeled inner-step time (compute/HBM roofline +
+in-group gradient all-reduce, as in benchmarks/speedup_model.py), ``t_comm``
+the ring all-reduce of fp32 Δθ across groups over the slow domain, and
+``t_update`` one fused HBM pass over θ/M/Δθ (kernels/pier_update.py).
+
+Reports, per chip × model scale: the exposed-comm fraction, the step-time
+reduction from overlap at several delays, and d* — the smallest delay that
+fully hides the collective. ``--measure`` additionally wall-clocks the real
+host loop (Trainer) at sync_delay 0 vs d on CPU devices as a smoke check of
+the dispatch/apply machinery (CPU has no async collective engine, so the
+measured delta there is bookkeeping overhead, not the modeled win).
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List
+
+from benchmarks.hardware import CHIPS, Chip
+
+PAPER_MODELS = {
+    "gpt2-small": 125e6,
+    "gpt2-medium": 345e6,
+    "gpt2-xl": 1.5e9,
+    "gpt2-7b": 7e9,
+}
+TOKENS_PER_STEP = 512 * 1024  # paper: global batch 512, seq 1024
+
+
+def _allreduce_t(bytes_: float, n: int, bw: float) -> float:
+    if n <= 1:
+        return 0.0
+    return 2 * bytes_ * (n - 1) / n / bw
+
+
+def inner_step_time(n_params: float, n_devices: int, chip: Chip,
+                    group_size: int) -> float:
+    """Modeled seconds per inner step (compute + in-group grad sync)."""
+    flops = 6 * n_params * TOKENS_PER_STEP / n_devices
+    t_compute = flops / chip.peak_flops
+    t_hbm = (20 * n_params / n_devices) / chip.hbm_bw
+    grad_bytes = n_params * 4.0
+    t_inner_comm = _allreduce_t(grad_bytes, min(group_size, n_devices),
+                                chip.intra_group_bw)
+    return max(t_compute, t_hbm) + t_inner_comm
+
+
+def outer_comm_time(n_params: float, n_devices: int, chip: Chip,
+                    group_size: int) -> float:
+    """Ring all-reduce of the fp32 Δθ across groups (the slow domain)."""
+    n_groups = max(n_devices // group_size, 1)
+    return _allreduce_t(n_params * 4.0, n_groups, chip.inter_group_bw)
+
+
+def outer_update_time(n_params: float, chip: Chip) -> float:
+    """One fused pass over θ/M/Δθ (read 3, write 2 fp32 streams)."""
+    return 5 * n_params * 4.0 / chip.hbm_bw
+
+
+def period_times(n_params: float, n_devices: int, chip: Chip, *,
+                 sync_interval: int, sync_delay: int,
+                 group_size: int = 4) -> Dict[str, float]:
+    t_inner = inner_step_time(n_params, n_devices, chip, group_size)
+    t_comm = outer_comm_time(n_params, n_devices, chip, group_size)
+    t_upd = outer_update_time(n_params, chip)
+    exposed = max(0.0, t_comm - sync_delay * t_inner)
+    eager = sync_interval * t_inner + t_comm + t_upd
+    overlap = sync_interval * t_inner + exposed + t_upd
+    dstar = 0 if t_inner <= 0 else int(-(-t_comm // t_inner))  # ceil
+    return {
+        "t_inner": t_inner, "t_comm": t_comm, "t_update": t_upd,
+        "eager": eager, "overlap": overlap,
+        "reduction": 1.0 - overlap / eager,
+        "exposed_frac": exposed / max(t_comm, 1e-30),
+        "d_star": min(dstar, sync_interval - 1),
+    }
+
+
+def sweep(chip_name: str, *, n_devices: int, sync_interval: int,
+          delays: List[int], group_size: int) -> List[Dict]:
+    chip = CHIPS[chip_name]
+    rows = []
+    for model, n in PAPER_MODELS.items():
+        for d in delays:
+            r = period_times(n, n_devices, chip, sync_interval=sync_interval,
+                            sync_delay=d, group_size=group_size)
+            rows.append({"chip": chip_name, "model": model, "delay": d, **r})
+    return rows
+
+
+def measure_host_loop(delay: int, steps: int = 24) -> Dict[str, float]:
+    """Wall-clock the real Trainer at sync_delay 0 vs ``delay`` (CPU smoke)."""
+    import time
+
+    import jax
+
+    from repro.config import ModelConfig, ParallelConfig, TrainConfig
+    from repro.data.pipeline import synthetic_pipeline
+    from repro.launch import mesh as M
+    from repro.launch.train import Trainer
+
+    mc = ModelConfig(num_layers=2, d_model=64, num_heads=2, num_kv_heads=2,
+                     d_ff=128, vocab_size=128, dtype="float32",
+                     norm="layernorm", activation="gelu",
+                     positional="learned", max_position_embeddings=64)
+    out = {}
+    sync_interval = max(4, delay + 1)  # sync_delay must be < sync_interval
+    for d in (0, delay):
+        tc = TrainConfig(optimizer="pier", total_steps=steps,
+                         global_batch_size=4, seq_len=16,
+                         sync_interval=sync_interval,
+                         sync_delay=d, warmup_frac=0.25, seed=0)
+        pc = ParallelConfig(data_axis_size=1, model_axis_size=1, data_outer=1)
+        mesh = M.small_mesh((1, 1, 1),
+                            ("data_outer", "data_inner", "model"))
+        trainer = Trainer(mc, tc, pc, mesh)
+        pipeline = synthetic_pipeline(mesh, M.data_axes(mesh), mc, tc)
+        try:
+            trainer.run(4, pipeline, log_every=0)  # compile warmup
+            t0 = time.perf_counter()
+            trainer.run(steps - 4, pipeline, log_every=0)
+            out[f"measured_s_per_step_d{d}"] = (
+                (time.perf_counter() - t0) / (steps - 4))
+        finally:
+            pipeline.close()
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--chips", nargs="*", default=list(CHIPS),
+                    choices=list(CHIPS))
+    ap.add_argument("--devices", type=int, default=256)
+    ap.add_argument("--sync-interval", type=int, default=50)
+    ap.add_argument("--group-size", type=int, default=4)
+    ap.add_argument("--delays", type=int, nargs="*", default=[1, 2, 4, 8])
+    ap.add_argument("--measure", action="store_true",
+                    help="also wall-clock the CPU host loop (slow)")
+    args = ap.parse_args(argv)
+
+    print("chip,model,delay,t_inner_ms,t_comm_ms,exposed_frac,"
+          "eager_ms_per_period,overlap_ms_per_period,step_time_reduction,"
+          "d_star")
+    for chip in args.chips:
+        for row in sweep(chip, n_devices=args.devices,
+                         sync_interval=args.sync_interval,
+                         delays=args.delays, group_size=args.group_size):
+            print(f"{row['chip']},{row['model']},{row['delay']},"
+                  f"{row['t_inner']*1e3:.3f},{row['t_comm']*1e3:.3f},"
+                  f"{row['exposed_frac']:.3f},{row['eager']*1e3:.2f},"
+                  f"{row['overlap']*1e3:.2f},{row['reduction']*100:.2f}%,"
+                  f"{row['d_star']}")
+    if args.measure:
+        m = measure_host_loop(delay=max(args.delays))
+        for k, v in m.items():
+            print(f"{k},{v*1e3:.2f}ms")
+
+
+if __name__ == "__main__":
+    main()

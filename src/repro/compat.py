@@ -1,0 +1,100 @@
+"""jax version compatibility shims (0.4.x ↔ ≥0.5).
+
+The runtime targets the modern sharding API (``jax.shard_map`` with
+``axis_names``, ``jax.sharding.AxisType``, ``jax.lax.pvary``,
+``jax.set_mesh``); CI and some dev boxes carry jax 0.4.x where those live
+under different names (or do not exist and are semantically no-ops, like
+``pvary`` — the varying-mesh-axes checker it feeds was introduced later).
+
+Everything version-dependent funnels through here so the rest of the tree
+imports one spelling. Each symbol degrades to the closest 0.4.x equivalent:
+
+- :func:`shard_map` — ``jax.shard_map(..., axis_names=manual)`` on new jax;
+  ``jax.experimental.shard_map.shard_map(..., auto=<complement>)`` (partial
+  manual) with ``check_rep=False`` on 0.4.x.
+- :func:`pvary` — identity on 0.4.x (no VMA checker to satisfy).
+- :func:`mesh_context` — ``jax.set_mesh`` on new jax; the ``Mesh`` object
+  itself (a context manager) on 0.4.x.
+- :func:`make_mesh` / :func:`mesh_from_devices` — drop the ``axis_types``
+  kwarg where it does not exist (0.4.x meshes are implicitly all-auto,
+  which is exactly what the Pier code requests).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, Optional, Sequence, Set, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+# jax < 0.5 defaults jax_threefry_partitionable=False, under which random
+# bits generated into a sharded output differ from the same call eagerly /
+# replicated. Modern jax defaults True (sharding-invariant), and the code
+# here assumes it: e.g. the sim-vs-distributed equivalence relies on the
+# sharded init_state producing the same params as the eager init.
+try:
+    if not jax.config.jax_threefry_partitionable:
+        jax.config.update("jax_threefry_partitionable", True)
+except AttributeError:
+    pass  # flag removed (always-on) in newer jax
+
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+HAS_PVARY = hasattr(jax.lax, "pvary")
+HAS_SET_MESH = hasattr(jax, "set_mesh")
+
+AXIS_TYPE_AUTO = jax.sharding.AxisType.Auto if HAS_AXIS_TYPE else None
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    """``jax.make_mesh`` with all-auto axis types where supported."""
+    if HAS_AXIS_TYPE:
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(AXIS_TYPE_AUTO,) * len(shape))
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def mesh_from_devices(devices, axes: Sequence[str]) -> Mesh:
+    """``Mesh(devices, axes)`` with all-auto axis types where supported."""
+    if HAS_AXIS_TYPE:
+        return Mesh(devices, tuple(axes),
+                    axis_types=(AXIS_TYPE_AUTO,) * len(axes))
+    return Mesh(devices, tuple(axes))
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh: Mesh,
+    in_specs,
+    out_specs,
+    axis_names: Set[str],
+):
+    """Partial-manual shard_map: ``axis_names`` manual, the rest auto."""
+    if HAS_NEW_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=set(axis_names))
+    from jax.experimental.shard_map import shard_map as _sm
+
+    auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False, auto=auto)
+
+
+def pvary(x, axis_names: Tuple[str, ...]):
+    """Mark ``x`` varying over manual axes (identity pre-VMA-checker jax)."""
+    if not axis_names:
+        return x
+    if HAS_PVARY:
+        return jax.lax.pvary(x, tuple(axis_names))
+    return x
+
+
+def mesh_context(mesh: Mesh):
+    """Context manager putting ``mesh`` in scope for sharding constraints."""
+    if HAS_SET_MESH:
+        return jax.set_mesh(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh  # 0.4.x: Mesh is itself a context manager
+    return contextlib.nullcontext()

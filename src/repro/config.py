@@ -222,6 +222,12 @@ class TrainConfig:
 
     # ---- Pier / DiLoCo outer optimizer ----
     sync_interval: int = 50  # r / H in the paper
+    # Delayed (overlapped) outer sync: the globally averaged Δθ gathered at
+    # sync step t is applied at step t + sync_delay, hiding the cross-group
+    # all-reduce behind the next ``sync_delay`` inner steps (Pier §V system
+    # architecture). 0 = eager (bit-identical to the classic path). Must be
+    # < sync_interval so an apply always lands before the next dispatch.
+    sync_delay: int = 0
     warmup_frac: float = 0.10  # p: lazy-start proportion
     outer_optimizer: str = "nesterov_torch"  # nesterov_torch | nesterov_classic | sgd
     outer_momentum: float = 0.9  # terminal mu
@@ -250,6 +256,15 @@ class TrainConfig:
 
     def replace(self, **kw) -> "TrainConfig":
         return dataclasses.replace(self, **kw)
+
+    def __post_init__(self):
+        if self.sync_delay < 0:
+            raise ValueError(f"sync_delay must be >= 0, got {self.sync_delay}")
+        if self.sync_delay >= self.sync_interval:
+            raise ValueError(
+                f"sync_delay ({self.sync_delay}) must be < sync_interval "
+                f"({self.sync_interval}): the in-flight Δθ must be applied "
+                "before the next dispatch")
 
     @property
     def warmup_steps(self) -> int:

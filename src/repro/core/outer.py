@@ -14,6 +14,21 @@ The outer "gradient" is the averaged model delta ``Δθ = θ_t − θ_{t−r}``
 Note the **sign convention**: Δθ points in the *improvement* direction
 (it is the result of inner optimization), so the outer step *adds* it —
 equivalently the outer gradient is −Δθ fed to a standard minimizer.
+
+**Delayed (overlapped) sync** splits the eager update into two halves so the
+global all-reduce can run concurrently with subsequent inner steps:
+
+- :func:`outer_reduce` — consume the globally averaged Δθ: advance the
+  momentum and produce the synchronized *target* ``θ_anchor + lr·step``.
+  This is everything that depends on the collective's result.
+- :func:`outer_apply` — install the target ``sync_delay`` steps later with
+  the stale-delta correction ``θ ← target + (θ_t − θ_dispatch)``: inner
+  progress made while the collective was in flight is preserved on top of
+  the synchronized model (it is *also* measured by the next Δθ, which is
+  taken against the target-anchor — transient local retention, counted
+  globally exactly once).
+
+:func:`outer_update` composes the two with zero drift — the eager path.
 """
 
 from __future__ import annotations
@@ -59,7 +74,7 @@ def warmup_accumulate(state: OuterState, params, mu) -> OuterState:
                       num_syncs=state.num_syncs + 1)
 
 
-def outer_update(
+def outer_reduce(
     state: OuterState,
     delta_avg,  # globally averaged Δθ pytree (fp32)
     tc: TrainConfig,
@@ -68,10 +83,12 @@ def outer_update(
     lr,  # outer LR (schedule of §V)
     use_pallas: bool = False,
 ):
-    """Algorithm 2, lines 19-21. Returns (new_params_f32, new_state).
+    """Algorithm 2, lines 19-21. Returns (target_params_f32, new_state).
 
-    ``new_params`` come back in fp32; the caller casts to the param dtype and
-    re-broadcasts. With ``use_pallas`` the fused update kernel is used
+    The target comes back in fp32; :func:`outer_apply` (or the caller, on
+    the eager path) casts to the param dtype and re-broadcasts. The new
+    state's anchor IS the target, so the next Δθ measures progress from the
+    synchronized model. With ``use_pallas`` the fused update kernel is used
     (single HBM pass over θ/M/Δθ — see kernels/pier_update.py).
     """
     sdt = jnp.dtype(jax.tree.leaves(state.momentum)[0].dtype)
@@ -115,3 +132,39 @@ def outer_update(
         num_syncs=state.num_syncs + 1,
     )
     return new_params, new_state
+
+
+def outer_apply(target_f32, dispatch_params, current_params):
+    """Install a dispatched target with the stale-delta correction.
+
+    ``θ ← target + (θ_t − θ_dispatch)`` per leaf, in fp32, cast back to the
+    current param dtype. When ``current_params is dispatch_params`` (the
+    eager path) the correction is exactly zero and the result is bit-equal
+    to the target: IEEE-754 guarantees ``x − x == +0.0`` and ``t + 0.0 == t``
+    for finite ``t``.
+    """
+
+    def apply(t, pd, pt):
+        drift = pt.astype(jnp.float32) - pd.astype(jnp.float32)
+        return (t + drift).astype(pt.dtype)
+
+    return jax.tree.map(apply, target_f32, dispatch_params, current_params)
+
+
+def outer_update(
+    state: OuterState,
+    delta_avg,
+    tc: TrainConfig,
+    *,
+    mu,
+    lr,
+    use_pallas: bool = False,
+):
+    """Eager fused update (sync_delay=0): reduce with zero in-flight drift.
+
+    Returns (new_params_f32, new_state) — the historical single-event API;
+    kept because the simulator, distributed steps, and tests compose it
+    directly on the d=0 path.
+    """
+    return outer_reduce(state, delta_avg, tc, mu=mu, lr=lr,
+                        use_pallas=use_pallas)

@@ -1,19 +1,40 @@
-"""Pier schedule logic: phase selection, momentum decay, outer LR.
+"""Pier schedule logic: phase selection, outer events, momentum decay, LR.
 
 The host training loop consults :class:`PierSchedule` each step to decide
-which jitted step function to run (warmup / inner / outer) — this mirrors the
-paper's Megatron integration where the outer sync is woven into the main
-training loop at interval boundaries (§V).
+which jitted step function to run (warmup / inner) and which *outer events*
+fire after it — this mirrors the paper's Megatron integration where the outer
+sync is woven into the main training loop at interval boundaries (§V).
+
+Outer events (the delayed-sync event model, see DESIGN.md):
+
+- ``accumulate`` — momentum-warmup accumulation (Alg. 1), warmup phase only.
+- ``dispatch``   — launch the global Δθ all-reduce + Nesterov math for the
+  sync boundary at ``sync_step``. With ``sync_delay > 0`` the collective
+  overlaps the following inner steps.
+- ``apply``      — install the synchronized target computed by the dispatch
+  from ``sync_step`` (fires ``sync_delay`` steps later; same step when 0).
+
+``sync_delay = 0`` degenerates to dispatch+apply on the same step, which the
+runners fuse into the classic eager outer step — bit-identical to the
+pre-delay code path.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Literal
+from typing import Literal, Tuple
 
 from repro.config import TrainConfig
 
 Phase = Literal["warmup", "inner"]
+
+
+@dataclass(frozen=True)
+class OuterEvent:
+    """One outer-optimizer event fired after the inner update of a step."""
+
+    kind: Literal["accumulate", "dispatch", "apply"]
+    sync_step: int  # the sync boundary (dispatch step) this event belongs to
 
 
 @dataclass(frozen=True)
@@ -55,6 +76,39 @@ class PierSchedule:
 
     def sync_kind(self, step: int) -> str:
         return "accumulate" if step < self.warmup_steps else "outer"
+
+    # ------------------------------------------------------- event model
+    def is_dispatch_step(self, step: int) -> bool:
+        """True if a post-warmup outer dispatch fires after ``step``."""
+        return self.is_sync_step(step) and self.sync_kind(step) == "outer"
+
+    def apply_step_for(self, dispatch_step: int) -> int:
+        """The step whose inner update the ``dispatch_step`` apply follows."""
+        return dispatch_step + self.tc.sync_delay
+
+    def events(self, step: int) -> Tuple[OuterEvent, ...]:
+        """Outer events fired after the inner update at ``step``, in order.
+
+        At most two events fire per step, and only with ``sync_delay == 0``
+        can they coincide (dispatch immediately followed by its own apply —
+        the fused eager path). ``sync_delay < sync_interval`` guarantees an
+        apply always precedes the next dispatch, so the in-flight window
+        never holds more than one outstanding Δθ.
+        """
+        evs = []
+        d = self.tc.sync_delay
+        # apply lands first: it belongs to an older dispatch (d > 0), or to
+        # the dispatch emitted this very step (d == 0, handled below).
+        if d > 0 and step - d >= 0 and self.is_dispatch_step(step - d):
+            evs.append(OuterEvent("apply", step - d))
+        if self.is_sync_step(step):
+            if self.sync_kind(step) == "accumulate":
+                evs.append(OuterEvent("accumulate", step))
+            else:
+                evs.append(OuterEvent("dispatch", step))
+                if d == 0:
+                    evs.append(OuterEvent("apply", step))
+        return tuple(evs)
 
     # ------------------------------------------------------------ schedules
     def mu_at(self, step: int) -> float:

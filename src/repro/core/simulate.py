@@ -10,6 +10,12 @@ them.
 
 The distributed (shard_map) path in ``repro.parallel.steps`` is semantically
 identical; tests assert the two agree step-for-step on a tiny model.
+
+The outer-event stream (accumulate / dispatch / apply, see DESIGN.md §5)
+is executed exactly as the host loop would: with ``sync_delay > 0`` the
+dispatched target is held in flight and installed ``d`` steps later with
+the stale-delta correction, so delayed-schedule convergence can be
+measured without a mesh.
 """
 
 from __future__ import annotations
@@ -22,7 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig, TrainConfig
-from repro.core.outer import OuterState, outer_init, outer_update, warmup_accumulate
+from repro.core.outer import (OuterState, outer_apply, outer_init,
+                              outer_reduce, warmup_accumulate)
 from repro.core.pier import PierSchedule
 from repro.data.synthetic import MarkovLM, make_train_batch
 from repro.models import registry as R
@@ -80,21 +87,30 @@ class SimulatedRun:
 
         self._accumulate = jax.jit(do_accumulate)
 
-        def do_outer(group_params, outer, mu, lr):
+        def do_dispatch(group_params, outer, mu, lr):
+            """Global Δθ mean + Nesterov math -> (target_f32, new outer)."""
             mean_params = jax.tree.map(
                 lambda p: jnp.mean(p.astype(jnp.float32), axis=0), group_params)
             delta = jax.tree.map(
                 lambda m, a: m - a.astype(jnp.float32),
                 mean_params, outer.anchor)
-            new_params_f32, new_outer = outer_update(
-                outer, delta, tc, mu=mu, lr=lr)
-            # re-broadcast the synced model to every group
-            new_group = jax.tree.map(
-                lambda f, g: jnp.broadcast_to(
-                    f.astype(g.dtype), g.shape), new_params_f32, group_params)
-            return new_group, new_outer
+            return outer_reduce(outer, delta, tc, mu=mu, lr=lr)
 
-        self._outer = jax.jit(do_outer)
+        self._dispatch = jax.jit(do_dispatch)
+
+        def do_apply(target_f32, dispatch_group, current_group):
+            """Install the target on every group with the drift correction.
+
+            target is unstacked; the (G, ...) snapshot/current leaves
+            broadcast against it, so each group keeps its own in-flight
+            progress. Eager (d=0) calls this with dispatch == current:
+            the correction is exactly zero.
+            """
+            return outer_apply(target_f32, dispatch_group, current_group)
+
+        self._apply = jax.jit(do_apply)
+        # the (single) in-flight dispatch: (apply_at_step, target, snapshot)
+        self._inflight = None
 
     # ------------------------------------------------------------------
     def _global_batch(self, step: int):
@@ -129,10 +145,8 @@ class SimulatedRun:
                 batch = self._global_batch(step)
                 st.params, st.opt, loss = self._warmup_step(
                     st.params, st.opt, batch, jnp.asarray(step))
-                if sched.is_sync_step(step):
-                    st.outer = self._accumulate(
-                        st.outer, st.params, jnp.float32(sched.mu_at(step)))
-                elif (step + 1) % tc.sync_interval == 0:
+                if (not sched.is_sync_step(step)
+                        and (step + 1) % tc.sync_interval == 0):
                     # DiLoCo lazy start: advance the anchor without
                     # accumulating momentum
                     st.outer = OuterState(
@@ -148,13 +162,19 @@ class SimulatedRun:
                 st.group_params, st.opt, losses = self._inner_step(
                     st.group_params, st.opt, batches, jnp.asarray(step))
                 loss = jnp.mean(losses)
-                if sched.is_sync_step(step):
+            for ev in sched.events(step):
+                if ev.kind == "accumulate":
+                    st.outer = self._accumulate(
+                        st.outer, st.params, jnp.float32(sched.mu_at(step)))
+                elif ev.kind == "dispatch":
                     mu = jnp.float32(sched.mu_at(step))
                     olr = jnp.float32(sched.outer_lr_at(step))
-                    st.group_params, st.outer = self._outer(
+                    target, st.outer = self._dispatch(
                         st.group_params, st.outer, mu, olr)
-                    st.params = jax.tree.map(
-                        lambda g: g[0], st.group_params)
+                    self._inflight = (sched.apply_step_for(step), target,
+                                      st.group_params)
+                else:  # apply
+                    self._apply_inflight()
             hist["step"].append(step)
             hist["train_loss"].append(float(loss))
             if eval_every and (step + 1) % eval_every == 0:
@@ -164,6 +184,22 @@ class SimulatedRun:
                 hist["val_step"].append(step)
             st.step += 1
         return hist
+
+    def _apply_inflight(self):
+        # No-op when flush() already drained the window — the schedule's
+        # apply event is step-based and does not know about early drains.
+        if self._inflight is None:
+            return
+        st = self.state
+        _, target, snapshot = self._inflight
+        st.group_params = self._apply(target, snapshot, st.group_params)
+        st.params = jax.tree.map(lambda g: g[0], st.group_params)
+        self._inflight = None
+
+    def flush(self):
+        """Apply an in-flight dispatch early (end-of-run drain)."""
+        if self._inflight is not None:
+            self._apply_inflight()
 
     def eval_params(self):
         st = self.state

@@ -21,13 +21,17 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
-AUTO = jax.sharding.AxisType.Auto
+from repro import compat
+
+# jax < 0.5 has no jax.sharding.AxisType; all-auto is the implicit default
+# there, which is what every mesh in this module asks for.
+AUTO = compat.AXIS_TYPE_AUTO
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AUTO,) * len(shape))
+    return compat.make_mesh(shape, axes)
 
 
 def refine_mesh(mesh: Mesh, data_outer: int) -> Mesh:
@@ -44,7 +48,7 @@ def refine_mesh(mesh: Mesh, data_outer: int) -> Mesh:
         assert data % data_outer == 0, (data, data_outer)
         new = devs.reshape(data_outer, data // data_outer, model)
         axes = ("data_outer", "data_inner", "model")
-    return Mesh(new, axes, axis_types=(AUTO,) * len(axes))
+    return compat.mesh_from_devices(new, axes)
 
 
 def make_pier_mesh(
@@ -57,7 +61,7 @@ def make_pier_mesh(
 
 def small_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
     """Arbitrary mesh over host devices (tests / CPU runs)."""
-    return jax.make_mesh(shape, axes, axis_types=(AUTO,) * len(shape))
+    return compat.make_mesh(shape, axes)
 
 
 def manual_axes(mesh: Mesh) -> Tuple[str, ...]:

@@ -5,7 +5,9 @@ for validation, a real TPU slice in production — the code path is identical).
 The host loop consults :class:`PierSchedule` each step: warmup (global
 AdamW) -> momentum accumulation every r steps -> switch to group-local inner
 steps -> outer Nesterov sync every r steps, with optional host offload of the
-outer state between syncs (§V).
+outer state between syncs (§V). With ``sync_delay > 0`` the sync is split
+into an async dispatch (global Δθ all-reduce overlapping the next inner
+steps) and a delayed apply — see DESIGN.md §5.
 """
 
 from __future__ import annotations
@@ -45,6 +47,9 @@ class Trainer:
                      if checkpoint_dir else None)
         self._outer_on_host = False
         self.history = []
+        # the (single) in-flight delayed dispatch: (apply_at, DispatchState).
+        # sync_delay < sync_interval bounds the queue depth at one.
+        self._inflight = None
         if tc.offload_outer_state:
             self.outer = offload.to_host(self.outer)
             self._outer_on_host = True
@@ -61,7 +66,16 @@ class Trainer:
             self._outer_on_host = True
 
     def train_step(self, batch) -> dict:
-        """One scheduled step (inner or warmup + possible outer event)."""
+        """One scheduled step (inner or warmup + its outer events).
+
+        With ``sync_delay == 0`` the dispatch+apply pair that fires at a
+        sync boundary is fused into the classic eager ``outer_step`` — the
+        pre-delay code path, bit for bit. With ``sync_delay > 0`` dispatch
+        enqueues the global all-reduce without blocking the host (jax
+        dispatch is async — no ``block_until_ready`` anywhere on this path),
+        so it overlaps the next ``sync_delay`` inner steps; apply then
+        installs the target with the stale-delta correction.
+        """
         sched, tc = self.sched, self.tc
         step = self.step
         phase = sched.phase(step)
@@ -72,19 +86,51 @@ class Trainer:
         else:
             self.state, metrics = self.bundle.inner_step(
                 self.state, batch, step_arr)
-        if sched.is_sync_step(step):
+        events = sched.events(step)
+        fused = (len(events) == 2 and events[0].kind == "dispatch"
+                 and events[1].kind == "apply")
+        if fused:
             self._outer_to_device()
-            if sched.sync_kind(step) == "accumulate":
-                self.outer = self.bundle.accumulate_step(
-                    self.state, self.outer, jnp.float32(sched.mu_at(step)))
-            else:
-                self.state, self.outer = self.bundle.outer_step(
-                    self.state, self.outer,
-                    jnp.float32(sched.mu_at(step)),
-                    jnp.float32(sched.outer_lr_at(step)))
+            self.state, self.outer = self.bundle.outer_step(
+                self.state, self.outer,
+                jnp.float32(sched.mu_at(step)),
+                jnp.float32(sched.outer_lr_at(step)))
             self._outer_to_host()
+        else:
+            for ev in events:
+                if ev.kind == "accumulate":
+                    self._outer_to_device()
+                    self.outer = self.bundle.accumulate_step(
+                        self.state, self.outer,
+                        jnp.float32(sched.mu_at(step)))
+                    self._outer_to_host()
+                elif ev.kind == "dispatch":
+                    self._outer_to_device()
+                    dispatch, self.outer = self.bundle.dispatch_step(
+                        self.state, self.outer,
+                        jnp.float32(sched.mu_at(step)),
+                        jnp.float32(sched.outer_lr_at(step)))
+                    self._outer_to_host()
+                    self._inflight = (sched.apply_step_for(step), dispatch)
+                else:  # apply
+                    self._apply_inflight()
         self.step += 1
         return {k: float(v) for k, v in metrics.items()}
+
+    def _apply_inflight(self):
+        # The schedule emits apply events purely by step count; if flush()
+        # already drained the window (checkpoint mid-flight, segmented
+        # run()), the event is a no-op rather than a double apply.
+        if self._inflight is None:
+            return
+        _, dispatch = self._inflight
+        self.state = self.bundle.apply_step(self.state, dispatch)
+        self._inflight = None
+
+    def flush(self):
+        """Drain an in-flight dispatch (end of run / before checkpoint)."""
+        if self._inflight is not None:
+            self._apply_inflight()
 
     def run(self, steps: int, pipeline, *, log_every: int = 10,
             ckpt_every: int = 0):
@@ -100,9 +146,11 @@ class Trainer:
                       f"({dt*1e3:.0f} ms/step avg)", flush=True)
             if ckpt_every and self.ckpt and self.step % ckpt_every == 0:
                 self.save()
+        self.flush()
         return self.history
 
     def save(self):
+        self.flush()  # a checkpoint must not strand an in-flight dispatch
         self._outer_to_device()
         self.ckpt.save(self.step, {"state": self.state, "outer": self.outer},
                        metadata={"step": self.step,
@@ -120,6 +168,7 @@ class Trainer:
             })
         self.state, self.outer = trees["state"], trees["outer"]
         self.step = meta["step"]
+        self._inflight = None  # checkpoints are saved flushed
         self._outer_to_host()
 
 
@@ -136,6 +185,9 @@ def main(argv=None):
     ap.add_argument("--global-batch", type=int, default=16)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--sync-interval", type=int, default=10)
+    ap.add_argument("--sync-delay", type=int, default=0,
+                    help="overlap the outer all-reduce with this many "
+                         "inner steps (0 = eager)")
     ap.add_argument("--groups", type=int, default=2,
                     help="Pier groups (data_outer)")
     ap.add_argument("--mesh", default="",
@@ -166,6 +218,7 @@ def main(argv=None):
         global_batch_size=args.global_batch,
         seq_len=args.seq_len,
         sync_interval=args.sync_interval,
+        sync_delay=args.sync_delay,
         inner_lr=args.lr, inner_min_lr=args.lr / 10,
         offload_outer_state=args.offload,
         seed=args.seed,

@@ -16,7 +16,12 @@ Step functions:
   (pod, data_outer) collectives (asserted by tests on the lowered HLO).
 - ``warmup_step``  — lazy-start/AdamW baseline: + global grad pmean.
 - ``accumulate_step`` — Alg. 1 lines 4-7: outer-momentum accumulation.
-- ``outer_step``   — Alg. 2 lines 10-21: global Δθ pmean + Nesterov.
+- ``outer_step``   — Alg. 2 lines 10-21: global Δθ pmean + Nesterov (eager,
+  sync_delay=0 path).
+- ``dispatch_step`` / ``apply_step`` — the same update split for delayed
+  sync (sync_delay>0): dispatch launches the global Δθ pmean + Nesterov math
+  without blocking the host, apply installs the target ``d`` steps later with
+  the stale-delta correction (see core/outer.py and DESIGN.md).
 - ``serve_step`` / ``prefill_step`` — inference (plain GSPMD, no groups).
 """
 
@@ -30,8 +35,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.config import ModelConfig, ParallelConfig, TrainConfig
-from repro.core.outer import OuterState, outer_init, outer_update, warmup_accumulate
+from repro.core.outer import (OuterState, outer_apply, outer_init,
+                              outer_reduce, outer_update, warmup_accumulate)
 from repro.launch import mesh as M
 from repro.models import registry as R
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
@@ -44,6 +51,19 @@ from repro.parallel.axes import pier_rules, use_rules
 class TrainState(NamedTuple):
     params: Any  # (G,)-stacked param tree
     opt: AdamWState  # (G,)-stacked
+
+
+class DispatchState(NamedTuple):
+    """An in-flight outer sync (sync_delay > 0): what apply needs later.
+
+    ``target`` is the synchronized fp32 model produced from the global Δθ
+    all-reduce; ``snapshot`` is each group's θ_dispatch, materialized as a
+    fresh buffer because inner steps donate (and overwrite) the live params
+    during the in-flight window.
+    """
+
+    target: Any  # fp32 param tree, identical across groups
+    snapshot: Any  # (G,)-stacked param tree at dispatch time
 
 
 @dataclass
@@ -62,6 +82,8 @@ class StepBundle:
     warmup_step: Callable
     accumulate_step: Callable
     outer_step: Callable
+    dispatch_step: Callable
+    apply_step: Callable
     eval_step: Callable
 
 
@@ -157,7 +179,7 @@ def build_train_steps(
         if manual:
             # grads are varying over the manual (group) axes; the zero init
             # must carry the same varying-mesh-axes annotation for the scan
-            acc0 = jax.lax.pvary(acc0, tuple(manual))
+            acc0 = compat.pvary(acc0, tuple(manual))
         (gsum, lsum), _ = jax.lax.scan(mb_body, acc0, micro)
         inv = 1.0 / nm
         return jax.tree.map(lambda g: g * inv, gsum), lsum * inv
@@ -200,7 +222,7 @@ def build_train_steps(
         def stepfn(state, batch, step):
             batch_specs = jax.tree.map(
                 lambda x: P(manual, *([None] * (x.ndim - 1))), batch)
-            f = jax.shard_map(
+            f = compat.shard_map(
                 body, mesh=mesh,
                 in_specs=(in_specs[0], batch_specs, P()),
                 out_specs=out_specs,
@@ -231,7 +253,7 @@ def build_train_steps(
                              is_leaf=lambda s: isinstance(s, P)))
         ospec = jax.tree.map(lambda _: P(), outer_spec,
                              is_leaf=lambda s: isinstance(s, P))
-        f = jax.shard_map(
+        f = compat.shard_map(
             accumulate_body, mesh=mesh,
             in_specs=(sspec, ospec, P()),
             out_specs=ospec,
@@ -264,7 +286,7 @@ def build_train_steps(
                              is_leaf=lambda s: isinstance(s, P)))
         ospec = jax.tree.map(lambda _: P(), outer_spec,
                              is_leaf=lambda s: isinstance(s, P))
-        f = jax.shard_map(
+        f = compat.shard_map(
             outer_body, mesh=mesh,
             in_specs=(sspec, ospec, P(), P()),
             out_specs=(sspec, ospec),
@@ -272,6 +294,74 @@ def build_train_steps(
         return f(state, outer, mu, olr)
 
     outer_step = jax.jit(outer_fn, donate_argnums=(0, 1))
+
+    # ---- delayed outer sync (dispatch / apply) -----------------------------
+    # dispatch launches THE global collective and the Nesterov math; the host
+    # does not block on it (jax dispatch is async), so the all-reduce runs
+    # concurrently with the next ``sync_delay`` inner steps. apply installs
+    # the target with the stale-delta correction once the window closes.
+    _sspec = lambda: TrainState(
+        params=jax.tree.map(lambda _: P(manual), state_spec.params,
+                            is_leaf=lambda s: isinstance(s, P)),
+        opt=jax.tree.map(lambda _: P(manual), state_spec.opt,
+                         is_leaf=lambda s: isinstance(s, P)))
+    _ospec = lambda: jax.tree.map(lambda _: P(), outer_spec,
+                                  is_leaf=lambda s: isinstance(s, P))
+    _dspec = lambda sspec: DispatchState(
+        target=jax.tree.map(lambda _: P(), sspec.params,
+                            is_leaf=lambda s: isinstance(s, P)),
+        snapshot=sspec.params)
+
+    def dispatch_body(state, outer, mu, olr):
+        with use_rules(rules):
+            params = jax.tree.map(lambda x: x[0], state.params)
+            delta = jax.tree.map(
+                lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32),
+                params, outer.anchor)
+            if manual:
+                delta = jax.lax.pmean(delta, manual)  # THE global collective
+            target_f32, new_outer = outer_reduce(
+                outer, delta, tc, mu=mu, lr=olr, use_pallas=pc.use_pallas)
+            dispatch = DispatchState(
+                target=target_f32,
+                snapshot=jax.tree.map(lambda x: x[None], params))
+            return dispatch, new_outer
+
+    def dispatch_fn(state, outer, mu, olr):
+        sspec, ospec = _sspec(), _ospec()
+        dspec = _dspec(sspec)
+        f = compat.shard_map(
+            dispatch_body, mesh=mesh,
+            in_specs=(sspec, ospec, P(), P()),
+            out_specs=(dspec, ospec),
+            axis_names=set(manual))
+        return f(state, outer, mu, olr)
+
+    # NOTE: the train state is NOT donated — the snapshot output forces a
+    # fresh copy of the params while inner steps keep donating the live ones.
+    dispatch_step = jax.jit(dispatch_fn, donate_argnums=(1,))
+
+    def apply_body(state, dispatch):
+        with use_rules(rules):
+            params = jax.tree.map(lambda x: x[0], state.params)
+            snap = jax.tree.map(lambda x: x[0], dispatch.snapshot)
+            new_params = outer_apply(dispatch.target, snap, params)
+            new_state = TrainState(
+                params=jax.tree.map(lambda x: x[None], new_params),
+                opt=state.opt)
+            return new_state
+
+    def apply_fn(state, dispatch):
+        sspec = _sspec()
+        dspec = _dspec(sspec)
+        f = compat.shard_map(
+            apply_body, mesh=mesh,
+            in_specs=(sspec, dspec),
+            out_specs=sspec,
+            axis_names=set(manual))
+        return f(state, dispatch)
+
+    apply_step = jax.jit(apply_fn, donate_argnums=(0, 1))
 
     # ---- eval --------------------------------------------------------------
     def eval_body(state, batch):
@@ -288,7 +378,7 @@ def build_train_steps(
                              is_leaf=lambda s: isinstance(s, P)))
         batch_specs = jax.tree.map(
             lambda x: P(manual, *([None] * (x.ndim - 1))), batch)
-        f = jax.shard_map(eval_body, mesh=mesh,
+        f = compat.shard_map(eval_body, mesh=mesh,
                           in_specs=(sspec, batch_specs), out_specs=P(),
                           axis_names=set(manual))
         return f(state, batch)
@@ -303,6 +393,7 @@ def build_train_steps(
         init_state=init_state, init_outer=init_outer,
         inner_step=inner_step, warmup_step=warmup_step,
         accumulate_step=accumulate_step, outer_step=outer_step,
+        dispatch_step=dispatch_step, apply_step=apply_step,
         eval_step=eval_step)
 
 
@@ -367,13 +458,13 @@ def build_serve_steps(
     # scope during trace -> wrap the jitted callables in jax.set_mesh.
     def _with_mesh(fn):
         def call(*args, **kw):
-            with jax.set_mesh(mesh):
+            with compat.mesh_context(mesh):
                 return fn(*args, **kw)
         call.lower = lambda *a, **k: _lower_with_mesh(fn, mesh, *a, **k)
         return call
 
     def _lower_with_mesh(fn, mesh, *a, **k):
-        with jax.set_mesh(mesh):
+        with compat.mesh_context(mesh):
             return fn.lower(*a, **k)
 
     serve_step = _with_mesh(jax.jit(serve, donate_argnums=(1,)))

@@ -1,0 +1,88 @@
+"""hypothesis shim: property-based when installed, example-based otherwise.
+
+The property tests import ``given`` / ``settings`` / ``st`` from here instead
+of from ``hypothesis``. When hypothesis is available (requirements-dev.txt)
+they are re-exported untouched and the tests run as real property tests.
+When it is missing (minimal images carry only the jax toolchain), ``given``
+degrades to a deterministic ``pytest.mark.parametrize`` sweep: each strategy
+contributes its boundary values first, then seeded-random draws — the same
+assertions run over a fixed example set rather than a searched one.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import inspect
+    import zlib
+
+    import numpy as np
+    import pytest
+
+    NUM_EXAMPLES = 6
+
+    class _Integers:
+        def __init__(self, min_value=0, max_value=0):
+            self.lo, self.hi = int(min_value), int(max_value)
+
+        def sample(self, rng, i):
+            if i == 0:
+                return self.lo
+            if i == 1:
+                return self.hi
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _Floats:
+        def __init__(self, min_value=0.0, max_value=1.0):
+            self.lo, self.hi = float(min_value), float(max_value)
+
+        def sample(self, rng, i):
+            if i == 0:
+                return self.lo
+            if i == 1:
+                return self.hi
+            return float(rng.uniform(self.lo, self.hi))
+
+    class _SampledFrom:
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def sample(self, rng, i):
+            if i < len(self.elements):
+                return self.elements[i]
+            return self.elements[int(rng.integers(len(self.elements)))]
+
+    class _Booleans(_SampledFrom):
+        def __init__(self):
+            super().__init__([False, True])
+
+    class _St:
+        integers = staticmethod(_Integers)
+        floats = staticmethod(_Floats)
+        sampled_from = staticmethod(_SampledFrom)
+        booleans = staticmethod(_Booleans)
+
+    st = _St()
+
+    def given(*arg_strats, **kw_strats):
+        def deco(fn):
+            sig_names = list(inspect.signature(fn).parameters)
+            mapping = list(zip(sig_names, arg_strats)) + list(kw_strats.items())
+            names = [n for n, _ in mapping]
+            rng = np.random.default_rng(zlib.adler32(fn.__name__.encode()))
+            rows = [
+                pytest.param(*[s.sample(rng, i) for _, s in mapping],
+                             id=f"ex{i}")
+                for i in range(NUM_EXAMPLES)
+            ]
+            return pytest.mark.parametrize(",".join(names), rows)(fn)
+
+        return deco
+
+    def settings(*_args, **_kw):
+        return lambda fn: fn

@@ -12,7 +12,19 @@ import pytest
 HERE = os.path.dirname(__file__)
 SRC = os.path.abspath(os.path.join(HERE, "..", "src"))
 
-SCRIPTS = ["md_steps.py", "md_equivalence.py", "md_dryrun_mini.py"]
+from repro import compat  # noqa: E402  (conftest puts src on sys.path)
+
+SCRIPTS = [
+    "md_steps.py",
+    "md_equivalence.py",
+    pytest.param(
+        "md_dryrun_mini.py",
+        marks=pytest.mark.skipif(
+            not compat.HAS_NEW_SHARD_MAP,
+            reason="jaxlib 0.4.x partial-manual SPMD hits an XLA CHECK "
+                   "(hlo_sharding_util IsManualSubgroup) compiling the MoE "
+                   "dry-run; needs jax>=0.5 shard_map")),
+]
 
 
 def _run(script):
@@ -29,6 +41,7 @@ def _run(script):
     return r.stdout
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("script", SCRIPTS)
 def test_multidevice(script):
     out = _run(script)

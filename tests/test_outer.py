@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or example-based shim
 
 from repro.config import TrainConfig
 from repro.core.outer import OuterState, outer_init, outer_update, warmup_accumulate
