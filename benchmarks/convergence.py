@@ -5,6 +5,12 @@ The paper's claim to validate: DiLoCo (no lazy start, fixed outer lr)
 degrades relative to AdamW; Pier (momentum warmup + decay + outer-LR
 schedule) recovers AdamW-level validation loss. Scales are CPU-sized but the
 *algorithmic* structure (group counts, sync interval, schedules) is exact.
+
+``--sweep-compression`` runs the loss-vs-bytes trade-off instead: Pier on
+the reduced GPT-2 config across ``outer_comm_bits × sync_delay`` (32 =
+uncompressed fp32; 8/4 = blockwise-quantized Δθ with error feedback), each
+cell annotated with the modeled cross-domain bytes per sync from
+benchmarks/overlap.py — the table ROADMAP's compression sweep asks for.
 """
 
 from __future__ import annotations
@@ -63,6 +69,59 @@ def run(size="tiny", steps=400, groups=4, interval=10, seed=0,
     return payload
 
 
+def sweep_compression(arch="gpt2-small", steps=300, groups=4, interval=10,
+                      delays=(0, 2), bits_list=(32, 8, 4), seed=0,
+                      out_dir="experiments/convergence"):
+    """Loss-vs-bytes trade-off: outer_comm_bits × sync_delay on the reduced
+    GPT-2 config. Returns the rows (also printed as a table + JSON)."""
+    from benchmarks.overlap import cross_domain_bytes
+    from repro.configs import get_reduced_config
+
+    mc = get_reduced_config(arch)
+    n_params = mc.param_count()
+    rows = []
+    print(f"# compression sweep: {mc.name} ({n_params/1e6:.2f}M params), "
+          f"{groups} groups, r={interval}, {steps} steps")
+    print("bits,delay,final_val_loss,best_val_loss,bytes_cross_per_sync_mb,"
+          "bytes_vs_fp32,seconds")
+    for bits in bits_list:
+        for d in delays:
+            tc = TrainConfig(
+                optimizer="pier", total_steps=steps, global_batch_size=32,
+                seq_len=64, sync_interval=interval, sync_delay=d,
+                inner_lr=1e-3, inner_min_lr=1e-4, seed=seed,
+                outer_compression="none" if bits >= 32 else "quantize",
+                outer_comm_bits=bits if bits < 32 else 8)
+            t0 = time.time()
+            r = SimulatedRun(mc, tc, num_groups=groups, seed=seed)
+            hist = r.run(steps, eval_every=max(steps // 10, 1))
+            r.flush()
+            bytes_cross = cross_domain_bytes(
+                n_params, n_groups=groups, bits=bits,
+                block=tc.outer_comm_block)
+            bytes_flat = cross_domain_bytes(n_params, n_groups=groups)
+            row = {
+                "bits": bits, "delay": d,
+                "final_val_loss": hist["val_loss"][-1],
+                "best_val_loss": min(hist["val_loss"]),
+                "bytes_cross_per_sync": bytes_cross,
+                "bytes_vs_fp32": bytes_flat / bytes_cross,
+                "seconds": time.time() - t0,
+            }
+            rows.append(row)
+            print(f"{bits},{d},{row['final_val_loss']:.4f},"
+                  f"{row['best_val_loss']:.4f},{bytes_cross/2**20:.2f},"
+                  f"{row['bytes_vs_fp32']:.2f}x,{row['seconds']:.0f}",
+                  flush=True)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"compression_sweep_{arch}_{steps}.json")
+    with open(path, "w") as f:
+        json.dump({"arch": arch, "steps": steps, "groups": groups,
+                   "interval": interval, "n_params": n_params,
+                   "rows": rows}, f, indent=2)
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--size", default="tiny",
@@ -71,7 +130,18 @@ def main(argv=None):
     ap.add_argument("--groups", type=int, default=4)
     ap.add_argument("--interval", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sweep-compression", action="store_true",
+                    help="run the outer_comm_bits × sync_delay "
+                         "loss-vs-bytes sweep instead")
+    ap.add_argument("--arch", default="gpt2-small",
+                    help="reduced config for --sweep-compression")
+    ap.add_argument("--delays", type=int, nargs="*", default=[0, 2])
+    ap.add_argument("--bits", type=int, nargs="*", default=[32, 8, 4])
     args = ap.parse_args(argv)
+    if args.sweep_compression:
+        sweep_compression(args.arch, args.steps, args.groups, args.interval,
+                          tuple(args.delays), tuple(args.bits), args.seed)
+        return
     payload = run(args.size, args.steps, args.groups, args.interval,
                   args.seed)
     r = payload["results"]

@@ -12,21 +12,39 @@ Per sync period (r inner steps + one outer event):
 
 where ``t_inner`` is the modeled inner-step time (compute/HBM roofline +
 in-group gradient all-reduce, as in benchmarks/speedup_model.py), ``t_comm``
-the ring all-reduce of fp32 Δθ across groups over the slow domain, and
+the ring all-reduce of the Δθ payload across the slow domain, and
 ``t_update`` one fused HBM pass over θ/M/Δθ (kernels/pier_update.py).
 
-Reports, per chip × model scale: the exposed-comm fraction, the step-time
+``t_comm`` itself now carries the compressed hierarchical collective's
+bytes-on-wire model (DESIGN.md §6):
+
+- quantization (``--bits`` < 32) shrinks the payload to
+  ``bits/8 + 4/block`` bytes per element (int values + per-block fp32
+  absmax scales);
+- hierarchical reduce (``--hierarchical --pods P``) moves the full-width
+  fp32 reduce onto the fast intra-pod domain and only exchanges the
+  (compressed) payload across ``P`` pod endpoints;
+- chunked dispatch (``--comm-chunks C``) pipelines the fused-update /
+  quantize work against the exchange: the dispatch critical path drops
+  from ``t_comm + t_update`` to ``max(t_comm, t_update) + min(...)/C``.
+
+Reports, per chip × model scale: cross-domain bytes per sync and their
+reduction vs the flat fp32 ring, the exposed-comm fraction, the step-time
 reduction from overlap at several delays, and d* — the smallest delay that
-fully hides the collective. ``--measure`` additionally wall-clocks the real
-host loop (Trainer) at sync_delay 0 vs d on CPU devices as a smoke check of
-the dispatch/apply machinery (CPU has no async collective engine, so the
-measured delta there is bookkeeping overhead, not the modeled win).
+fully hides the collective (smaller bytes => smaller d*). ``--json``
+writes the rows as a machine-readable summary (CI artifact). ``--measure``
+additionally wall-clocks the real host loop (Trainer) at sync_delay 0 vs d
+on CPU devices as a smoke check of the dispatch/apply machinery (CPU has
+no async collective engine, so the measured delta there is bookkeeping
+overhead, not the modeled win).
 """
 
 from __future__ import annotations
 
 import argparse
-from typing import Dict, List
+import json
+import os
+from typing import Dict, List, Optional
 
 from benchmarks.hardware import CHIPS, Chip
 
@@ -57,11 +75,53 @@ def inner_step_time(n_params: float, n_devices: int, chip: Chip,
     return max(t_compute, t_hbm) + t_inner_comm
 
 
+def payload_bytes_per_param(bits: int = 32, block: int = 256) -> float:
+    """Bytes per Δθ element on the slow domain: values + per-block scales.
+
+    bits >= 32 means the uncompressed fp32 payload. int4 models 2x nibble
+    packing of the int8-held values (the wire format, not the HBM layout).
+    """
+    if bits >= 32:
+        return 4.0
+    return bits / 8.0 + 4.0 / block
+
+
+def cross_domain_bytes(n_params: float, *, n_groups: int, pods: int = 1,
+                       bits: int = 32, block: int = 256,
+                       hierarchical: bool = False) -> float:
+    """Total bytes crossing the slow domain per sync.
+
+    A ring all-reduce of a P-byte payload over E endpoints moves
+    ``2·P·(E−1)`` bytes through the domain. Flat: E = n_groups at full
+    payload width. Hierarchical: the fp32 reduce happens intra-pod (fast
+    domain, not counted here) and only E = pods endpoints exchange the
+    compressed payload.
+    """
+    per = n_params * payload_bytes_per_param(bits, block)
+    e = max(pods if hierarchical else n_groups, 1)
+    return 2.0 * per * (e - 1)
+
+
 def outer_comm_time(n_params: float, n_devices: int, chip: Chip,
-                    group_size: int) -> float:
-    """Ring all-reduce of the fp32 Δθ across groups (the slow domain)."""
+                    group_size: int, *, bits: int = 32, block: int = 256,
+                    hierarchical: bool = False, pods: int = 1) -> float:
+    """Ring all-reduce of the Δθ payload across the slow domain.
+
+    Hierarchical: full-precision psum over the fast intra-pod domain first
+    (costed at intra_group_bw), then the compressed exchange over the pod
+    endpoints (inter_group_bw).
+    """
     n_groups = max(n_devices // group_size, 1)
-    return _allreduce_t(n_params * 4.0, n_groups, chip.inter_group_bw)
+    per_param = payload_bytes_per_param(bits, block)
+    if hierarchical and pods > 1:
+        groups_per_pod = max(n_groups // pods, 1)
+        t_intra = _allreduce_t(n_params * 4.0, groups_per_pod,
+                               chip.intra_group_bw)
+        t_cross = _allreduce_t(n_params * per_param, pods,
+                               chip.inter_group_bw)
+        return t_intra + t_cross
+    return _allreduce_t(n_params * per_param, n_groups,
+                        chip.inter_group_bw)
 
 
 def outer_update_time(n_params: float, chip: Chip) -> float:
@@ -71,31 +131,71 @@ def outer_update_time(n_params: float, chip: Chip) -> float:
 
 def period_times(n_params: float, n_devices: int, chip: Chip, *,
                  sync_interval: int, sync_delay: int,
-                 group_size: int = 4) -> Dict[str, float]:
+                 group_size: int = 4, bits: int = 32, block: int = 256,
+                 hierarchical: bool = False, pods: int = 1,
+                 comm_chunks: int = 1) -> Dict[str, float]:
     t_inner = inner_step_time(n_params, n_devices, chip, group_size)
-    t_comm = outer_comm_time(n_params, n_devices, chip, group_size)
+    t_comm = outer_comm_time(n_params, n_devices, chip, group_size,
+                             bits=bits, block=block,
+                             hierarchical=hierarchical, pods=pods)
     t_upd = outer_update_time(n_params, chip)
+    if comm_chunks > 1:
+        # chunked dispatch pipelines quantize/update against the exchange
+        t_dispatch = (max(t_comm, t_upd)
+                      + min(t_comm, t_upd) / comm_chunks)
+    else:
+        t_dispatch = t_comm + t_upd
     exposed = max(0.0, t_comm - sync_delay * t_inner)
-    eager = sync_interval * t_inner + t_comm + t_upd
-    overlap = sync_interval * t_inner + exposed + t_upd
+    eager = sync_interval * t_inner + t_dispatch
+    overlap = sync_interval * t_inner + exposed + (t_dispatch - t_comm)
     dstar = 0 if t_inner <= 0 else int(-(-t_comm // t_inner))  # ceil
+    n_groups = max(n_devices // group_size, 1)
+    bytes_cross = cross_domain_bytes(
+        n_params, n_groups=n_groups, pods=pods, bits=bits, block=block,
+        hierarchical=hierarchical)
+    bytes_flat = cross_domain_bytes(n_params, n_groups=n_groups)
     return {
         "t_inner": t_inner, "t_comm": t_comm, "t_update": t_upd,
         "eager": eager, "overlap": overlap,
         "reduction": 1.0 - overlap / eager,
         "exposed_frac": exposed / max(t_comm, 1e-30),
         "d_star": min(dstar, sync_interval - 1),
+        "bytes_cross_per_sync": bytes_cross,
+        "bytes_flat_fp32": bytes_flat,
+        "bytes_reduction": bytes_flat / max(bytes_cross, 1e-30),
     }
 
 
+def resolve_sync_delay(*, n_params: float, n_devices: int, group_size: int,
+                       sync_interval: int, chip: Optional[str] = None,
+                       bits: int = 32, block: int = 256,
+                       hierarchical: bool = False,
+                       pods: int = 1) -> Optional[int]:
+    """d* for ``sync_delay="auto"`` — the smallest delay that fully hides
+    the (possibly compressed, hierarchical) outer collective. ``None``
+    when the model has no estimate (no/unknown chip hint)."""
+    if not chip or chip not in CHIPS:
+        return None
+    r = period_times(
+        n_params, n_devices, CHIPS[chip],
+        sync_interval=sync_interval, sync_delay=0, group_size=group_size,
+        bits=bits, block=block, hierarchical=hierarchical, pods=pods)
+    return int(r["d_star"])
+
+
 def sweep(chip_name: str, *, n_devices: int, sync_interval: int,
-          delays: List[int], group_size: int) -> List[Dict]:
+          delays: List[int], group_size: int, bits: int = 32,
+          block: int = 256, hierarchical: bool = False, pods: int = 1,
+          comm_chunks: int = 1) -> List[Dict]:
     chip = CHIPS[chip_name]
     rows = []
     for model, n in PAPER_MODELS.items():
         for d in delays:
             r = period_times(n, n_devices, chip, sync_interval=sync_interval,
-                            sync_delay=d, group_size=group_size)
+                            sync_delay=d, group_size=group_size,
+                            bits=bits, block=block,
+                            hierarchical=hierarchical, pods=pods,
+                            comm_chunks=comm_chunks)
             rows.append({"chip": chip_name, "model": model, "delay": d, **r})
     return rows
 
@@ -146,26 +246,57 @@ def main(argv=None):
     ap.add_argument("--sync-interval", type=int, default=50)
     ap.add_argument("--group-size", type=int, default=4)
     ap.add_argument("--delays", type=int, nargs="*", default=[1, 2, 4, 8])
+    ap.add_argument("--bits", type=int, default=32,
+                    help="outer payload bits (32 = uncompressed fp32)")
+    ap.add_argument("--block", type=int, default=256,
+                    help="elements per fp32 absmax scale")
+    ap.add_argument("--hierarchical", action="store_true",
+                    help="two-stage reduce: fp32 intra-pod, compressed "
+                         "cross-pod")
+    ap.add_argument("--pods", type=int, default=2)
+    ap.add_argument("--comm-chunks", type=int, default=1)
+    ap.add_argument("--json", default="",
+                    help="write the sweep rows to this JSON file")
     ap.add_argument("--measure", action="store_true",
                     help="also wall-clock the CPU host loop (slow)")
     args = ap.parse_args(argv)
 
+    all_rows = []
     print("chip,model,delay,t_inner_ms,t_comm_ms,exposed_frac,"
           "eager_ms_per_period,overlap_ms_per_period,step_time_reduction,"
-          "d_star")
+          "d_star,bytes_cross_mb,bytes_reduction")
     for chip in args.chips:
         for row in sweep(chip, n_devices=args.devices,
                          sync_interval=args.sync_interval,
-                         delays=args.delays, group_size=args.group_size):
+                         delays=args.delays, group_size=args.group_size,
+                         bits=args.bits, block=args.block,
+                         hierarchical=args.hierarchical, pods=args.pods,
+                         comm_chunks=args.comm_chunks):
+            all_rows.append(row)
             print(f"{row['chip']},{row['model']},{row['delay']},"
                   f"{row['t_inner']*1e3:.3f},{row['t_comm']*1e3:.3f},"
                   f"{row['exposed_frac']:.3f},{row['eager']*1e3:.2f},"
                   f"{row['overlap']*1e3:.2f},{row['reduction']*100:.2f}%,"
-                  f"{row['d_star']}")
+                  f"{row['d_star']},"
+                  f"{row['bytes_cross_per_sync']/2**20:.1f},"
+                  f"{row['bytes_reduction']:.2f}x")
     if args.measure:
         m = measure_host_loop(delay=max(args.delays))
         for k, v in m.items():
             print(f"{k},{v*1e3:.2f}ms")
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump({
+                "config": {
+                    "devices": args.devices, "group_size": args.group_size,
+                    "sync_interval": args.sync_interval, "bits": args.bits,
+                    "block": args.block, "hierarchical": args.hierarchical,
+                    "pods": args.pods, "comm_chunks": args.comm_chunks,
+                },
+                "rows": all_rows,
+            }, f, indent=2)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -43,8 +43,14 @@ def step_time(
     h: int = 50,
     group_size: int = 4,
     opt_bytes_per_param: float = 4.0,  # fp32 grads all-reduced
+    outer_bits: int = 32,  # compressed Δθ payload (overlap.py bytes model)
+    outer_block: int = 256,
+    hierarchical: bool = False,
+    pods: int = 1,
 ) -> float:
     """Modeled seconds per training step."""
+    from benchmarks.overlap import outer_comm_time
+
     tokens = TOKENS_PER_STEP
     flops = 6 * n_params * tokens / n_gpus
     t_compute = flops / chip.peak_flops
@@ -63,21 +69,25 @@ def step_time(
     else:  # pier / diloco
         t_inner = allreduce_t(grad_bytes, min(group_size, n_gpus),
                               chip.intra_group_bw)
-        n_groups = max(n_gpus // group_size, 1)
-        t_outer = allreduce_t(grad_bytes, n_groups, chip.inter_group_bw) / h
+        t_outer = outer_comm_time(
+            n_params, n_gpus, chip, group_size,
+            bits=outer_bits, block=outer_block,
+            hierarchical=hierarchical, pods=pods) / h
         t_comm = t_inner + t_outer
     return t_math + t_comm
 
 
 def sweep(model: str, chip_name: str, scales: List[int], h: int,
-          group_size: int) -> List[Dict]:
+          group_size: int, *, outer_bits: int = 32,
+          hierarchical: bool = False, pods: int = 1) -> List[Dict]:
     chip = CHIPS[chip_name]
     n = PAPER_MODELS[model]
     rows = []
     for g in scales:
         ta = step_time(n, g, chip, optimizer="adamw")
         tp = step_time(n, g, chip, optimizer="pier", h=h,
-                       group_size=group_size)
+                       group_size=group_size, outer_bits=outer_bits,
+                       hierarchical=hierarchical, pods=pods)
         base = step_time(n, scales[0], chip, optimizer="adamw")
         rows.append({
             "gpus": g,
@@ -106,6 +116,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--h", type=int, default=50)
     ap.add_argument("--group-size", type=int, default=4)
+    ap.add_argument("--outer-bits", type=int, default=32,
+                    help="compressed outer Δθ payload bits (32 = fp32)")
+    ap.add_argument("--hierarchical", action="store_true")
+    ap.add_argument("--pods", type=int, default=1)
     ap.add_argument("--out", default="experiments/speedup")
     args = ap.parse_args(argv)
     os.makedirs(args.out, exist_ok=True)
@@ -116,7 +130,9 @@ def main(argv=None):
                           ("gpt2-xl", [64, 128, 256]),
                           ("gpt2-7b", [32, 64, 128])]:
         for chipn in ("a100-perlmutter", "gh200-vista", "tpu-v5e"):
-            rows = sweep(model, chipn, scales, args.h, args.group_size)
+            rows = sweep(model, chipn, scales, args.h, args.group_size,
+                         outer_bits=args.outer_bits,
+                         hierarchical=args.hierarchical, pods=args.pods)
             all_rows[f"{model}__{chipn}"] = rows
     with open(os.path.join(args.out, "speedup_model.json"), "w") as f:
         json.dump(all_rows, f, indent=2)

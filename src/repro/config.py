@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 
 # ---------------------------------------------------------------------------
@@ -227,7 +227,30 @@ class TrainConfig:
     # all-reduce behind the next ``sync_delay`` inner steps (Pier §V system
     # architecture). 0 = eager (bit-identical to the classic path). Must be
     # < sync_interval so an apply always lands before the next dispatch.
-    sync_delay: int = 0
+    # "auto" = resolve d* at startup from the benchmarks/overlap.py step-time
+    # model (mesh + --chip hint); the launcher must replace it with an int
+    # before the schedule runs (falls back to 0 with no estimate).
+    sync_delay: Union[int, str] = 0
+
+    # ---- compressed hierarchical outer collective (DESIGN.md §6) ----
+    # "none" keeps the flat fp32 pmean of Δθ (bit-identical to the seed
+    # path). "quantize" sends blockwise-quantized Δθ over the slow domain
+    # with per-block fp32 absmax scales and an error-feedback residual
+    # (carried in OuterState) so quantization error is re-injected into the
+    # next Δθ instead of biasing the Nesterov momentum.
+    outer_compression: str = "none"  # none | quantize
+    outer_comm_bits: int = 8  # 4 | 8 (int stored in int8; 4 models packing)
+    outer_comm_block: int = 256  # absmax-scale block (elements per scale)
+    # Two-stage reduce: full-precision psum over the fast intra-pod axis
+    # (data_outer), then exchange over the slow pod axis — only 1/pods of
+    # the traffic crosses the slow domain at full width. Degenerates to the
+    # flat reduce when the mesh has no pod axis.
+    hierarchical_reduce: bool = False
+    # Chunked dispatch: the Δθ tree is flattened into this many contiguous
+    # leaf spans dispatched as separate XLA computations, so early chunks
+    # reduce while later ones are still being quantized. 1 = single fused
+    # dispatch (bit-identical to the seed path).
+    comm_chunks: int = 1
     warmup_frac: float = 0.10  # p: lazy-start proportion
     outer_optimizer: str = "nesterov_torch"  # nesterov_torch | nesterov_classic | sgd
     outer_momentum: float = 0.9  # terminal mu
@@ -258,13 +281,34 @@ class TrainConfig:
         return dataclasses.replace(self, **kw)
 
     def __post_init__(self):
-        if self.sync_delay < 0:
-            raise ValueError(f"sync_delay must be >= 0, got {self.sync_delay}")
-        if self.sync_delay >= self.sync_interval:
+        if isinstance(self.sync_delay, str):
+            if self.sync_delay != "auto":
+                raise ValueError(
+                    f"sync_delay must be an int or 'auto', "
+                    f"got {self.sync_delay!r}")
+        else:
+            if self.sync_delay < 0:
+                raise ValueError(
+                    f"sync_delay must be >= 0, got {self.sync_delay}")
+            if self.sync_delay >= self.sync_interval:
+                raise ValueError(
+                    f"sync_delay ({self.sync_delay}) must be < sync_interval "
+                    f"({self.sync_interval}): the in-flight Δθ must be "
+                    "applied before the next dispatch")
+        if self.outer_compression not in ("none", "quantize"):
             raise ValueError(
-                f"sync_delay ({self.sync_delay}) must be < sync_interval "
-                f"({self.sync_interval}): the in-flight Δθ must be applied "
-                "before the next dispatch")
+                f"outer_compression must be 'none' or 'quantize', "
+                f"got {self.outer_compression!r}")
+        if self.outer_compression == "quantize" \
+                and self.outer_comm_bits not in (4, 8):
+            raise ValueError(
+                f"outer_comm_bits must be 4 or 8, got {self.outer_comm_bits}")
+        if self.outer_comm_block < 1:
+            raise ValueError(
+                f"outer_comm_block must be >= 1, got {self.outer_comm_block}")
+        if self.comm_chunks < 1:
+            raise ValueError(
+                f"comm_chunks must be >= 1, got {self.comm_chunks}")
 
     @property
     def warmup_steps(self) -> int:

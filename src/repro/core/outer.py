@@ -45,14 +45,28 @@ class OuterState(NamedTuple):
     momentum: Any  # M pytree (fp32 by default)
     anchor: Any  # θ_{t-r}: model snapshot at the last sync
     num_syncs: jax.Array  # () int32 — how many outer steps have been taken
+    # Error-feedback residual of the compressed outer collective (DESIGN.md
+    # §6): what blockwise quantization dropped from each group's payload,
+    # re-injected into the next Δθ so the error telescopes instead of
+    # biasing the Nesterov momentum. ``None`` (an empty pytree node) when
+    # ``outer_compression == "none"`` — the state is then structurally
+    # identical to the pre-compression layout. When present: fp32 leaves of
+    # param shape with a leading ``num_groups`` axis (group-local, unlike
+    # the replicated momentum/anchor).
+    residual: Any = None
 
 
-def outer_init(params, tc: TrainConfig) -> OuterState:
+def outer_init(params, tc: TrainConfig, *, num_groups: int = 1) -> OuterState:
     dt = jnp.dtype(tc.opt_state_dtype)
+    residual = None
+    if tc.outer_compression != "none":
+        residual = jax.tree.map(
+            lambda p: jnp.zeros((num_groups, *p.shape), jnp.float32), params)
     return OuterState(
         momentum=jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params),
         anchor=jax.tree.map(lambda p: p.astype(dt), params),
         num_syncs=jnp.zeros((), jnp.int32),
+        residual=residual,
     )
 
 
@@ -71,7 +85,54 @@ def warmup_accumulate(state: OuterState, params, mu) -> OuterState:
     new_m = jax.tree.map(acc, state.momentum, params, state.anchor)
     new_anchor = jax.tree.map(lambda p, a: p.astype(a.dtype), params, state.anchor)
     return OuterState(momentum=new_m, anchor=new_anchor,
-                      num_syncs=state.num_syncs + 1)
+                      num_syncs=state.num_syncs + 1,
+                      residual=state.residual)
+
+
+def compress_delta(delta, residual, tc: TrainConfig, *,
+                   use_pallas: bool = False):
+    """Blockwise-quantize one group's Δθ payload with error feedback.
+
+    Per leaf (fp32):  c = Δθ + residual;  (q, s) = Q(c);  payload = DQ(q, s);
+    residual' = c − payload.  The *payload* (the dequantized value — the
+    numeric simulation of what int8+scales put on the wire) is what the
+    caller exchanges over the slow domain; ``payload + residual' == c``
+    exactly per round, so the error telescopes across syncs instead of
+    accumulating in the momentum.
+
+    ``residual=None`` means a zero residual (first sync / stateless use).
+    Returns (payload_tree_f32, new_residual_tree_f32).
+    """
+    bits, block = tc.outer_comm_bits, tc.outer_comm_block
+    if use_pallas:
+        from repro.kernels import ops as kops
+        quant = lambda x: kops.quantize_blockwise(x, bits=bits, block=block)
+        dequant = lambda q, s: kops.dequantize_blockwise(q, s, block=block)
+    else:
+        from repro.kernels.ref import (dequantize_blockwise_ref,
+                                       quantize_blockwise_ref)
+        quant = lambda x: quantize_blockwise_ref(x, bits=bits, block=block)
+        dequant = lambda q, s: dequantize_blockwise_ref(q, s, block=block)
+
+    def leaf(d, r):
+        c = d.astype(jnp.float32)
+        if r is not None:
+            c = c + r.astype(jnp.float32)
+        flat = c.reshape(-1)
+        q, s = quant(flat)
+        payload = dequant(q, s)[: flat.shape[0]].reshape(c.shape)
+        return payload, c - payload
+
+    flat_d, treedef = jax.tree_util.tree_flatten(delta)
+    flat_r = (treedef.flatten_up_to(residual) if residual is not None
+              else [None] * len(flat_d))
+    out = [leaf(d, r) for d, r in zip(flat_d, flat_r)]
+    unf = jax.tree_util.tree_unflatten
+    return (unf(treedef, [p for p, _ in out]),
+            unf(treedef, [r for _, r in out]))
+
+
+_UNSET = object()
 
 
 def outer_reduce(
@@ -82,6 +143,7 @@ def outer_reduce(
     mu,  # momentum coefficient (schedule of Alg. 2)
     lr,  # outer LR (schedule of §V)
     use_pallas: bool = False,
+    residual=_UNSET,  # new error-feedback residual to store (default: keep)
 ):
     """Algorithm 2, lines 19-21. Returns (target_params_f32, new_state).
 
@@ -92,11 +154,13 @@ def outer_reduce(
     (single HBM pass over θ/M/Δθ — see kernels/pier_update.py).
     """
     sdt = jnp.dtype(jax.tree.leaves(state.momentum)[0].dtype)
+    new_residual = state.residual if residual is _UNSET else residual
 
     if use_pallas:
         from repro.kernels import ops as kops
 
-        return kops.pier_outer_update(state, delta_avg, tc, mu=mu, lr=lr)
+        return kops.pier_outer_update(state, delta_avg, tc, mu=mu, lr=lr,
+                                      residual=new_residual)
 
     form = tc.outer_optimizer
 
@@ -130,6 +194,7 @@ def outer_reduce(
         momentum=unf(treedef, m_new),
         anchor=jax.tree.map(lambda p: p.astype(sdt), new_params),
         num_syncs=state.num_syncs + 1,
+        residual=new_residual,
     )
     return new_params, new_state
 
@@ -159,6 +224,7 @@ def outer_update(
     mu,
     lr,
     use_pallas: bool = False,
+    residual=_UNSET,
 ):
     """Eager fused update (sync_delay=0): reduce with zero in-flight drift.
 
@@ -167,4 +233,4 @@ def outer_update(
     directly on the d=0 path.
     """
     return outer_reduce(state, delta_avg, tc, mu=mu, lr=lr,
-                        use_pallas=use_pallas)
+                        use_pallas=use_pallas, residual=residual)

@@ -16,6 +16,16 @@ is executed exactly as the host loop would: with ``sync_delay > 0`` the
 dispatched target is held in flight and installed ``d`` steps later with
 the stale-delta correction, so delayed-schedule convergence can be
 measured without a mesh.
+
+The compressed hierarchical collective (DESIGN.md §6) is modeled
+numerically: with ``outer_compression="quantize"`` each group's Δθ (plus
+its error-feedback residual) is blockwise-quantized and *dequantized*
+before averaging — exactly the value an int8+scales wire format delivers —
+and with ``hierarchical_reduce=True`` and ``num_pods > 1`` the per-group
+deltas are first averaged full-precision inside each pod (the fast
+domain), so only the per-pod payloads are quantized and exchanged. The
+``comm_chunks`` knob is a pure host-dispatch optimization with no numeric
+effect, so the simulator ignores it.
 """
 
 from __future__ import annotations
@@ -28,8 +38,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig, TrainConfig
-from repro.core.outer import (OuterState, outer_apply, outer_init,
-                              outer_reduce, warmup_accumulate)
+from repro.core.outer import (OuterState, compress_delta, outer_apply,
+                              outer_init, outer_reduce, warmup_accumulate)
+
+
+def _compress_rows(delta, residual, tc):
+    """Vmapped error-feedback quantization over the leading group/pod axis.
+
+    delta/residual: trees of (G, ...) fp32. Returns (payload, new_residual)
+    with the same shapes — row g is exactly compress_delta on group g.
+    """
+    return jax.vmap(lambda d, r: compress_delta(d, r, tc))(delta, residual)
 from repro.core.pier import PierSchedule
 from repro.data.synthetic import MarkovLM, make_train_batch
 from repro.models import registry as R
@@ -49,11 +68,16 @@ class SimState:
 
 class SimulatedRun:
     def __init__(self, mc: ModelConfig, tc: TrainConfig, *, num_groups: int,
-                 seed: int = 0):
+                 seed: int = 0, num_pods: int = 1):
         if tc.optimizer != "adamw":
             assert num_groups >= 1
+        assert num_groups % max(num_pods, 1) == 0, (num_groups, num_pods)
+        assert isinstance(tc.sync_delay, int), (
+            "sync_delay='auto' must be resolved before simulation "
+            "(see launch/train.py)")
         self.mc, self.tc = mc, tc
         self.G = num_groups
+        self.P = max(num_pods, 1)
         self.sched = PierSchedule(tc)
         self.lm = MarkovLM(mc.vocab_size, seed=1234)
         key = jax.random.PRNGKey(seed)
@@ -62,7 +86,7 @@ class SimulatedRun:
             params=params,
             group_params=None,
             opt=adamw_init(params, tc),
-            outer=outer_init(params, tc),
+            outer=outer_init(params, tc, num_groups=num_groups),
         )
         self._val_batch = make_train_batch(
             self.lm, jax.random.PRNGKey(99991), 16, tc.seq_len)
@@ -87,14 +111,51 @@ class SimulatedRun:
 
         self._accumulate = jax.jit(do_accumulate)
 
+        compress = tc.outer_compression != "none"
+        G, P = self.G, self.P
+
         def do_dispatch(group_params, outer, mu, lr):
-            """Global Δθ mean + Nesterov math -> (target_f32, new outer)."""
-            mean_params = jax.tree.map(
-                lambda p: jnp.mean(p.astype(jnp.float32), axis=0), group_params)
+            """Global Δθ mean + Nesterov math -> (target_f32, new outer).
+
+            The knobs-off branch is the seed path, bit for bit. The
+            compressed/hierarchical branch mirrors the distributed
+            two-stage reduce: per-group Δθ -> (optional) full-precision
+            intra-pod mean -> (optional) quantize+dequantize with error
+            feedback -> global mean of the payloads.
+            """
+            if not compress and not tc.hierarchical_reduce:
+                mean_params = jax.tree.map(
+                    lambda p: jnp.mean(p.astype(jnp.float32), axis=0),
+                    group_params)
+                delta = jax.tree.map(
+                    lambda m, a: m - a.astype(jnp.float32),
+                    mean_params, outer.anchor)
+                return outer_reduce(outer, delta, tc, mu=mu, lr=lr)
+
             delta = jax.tree.map(
-                lambda m, a: m - a.astype(jnp.float32),
-                mean_params, outer.anchor)
-            return outer_reduce(outer, delta, tc, mu=mu, lr=lr)
+                lambda p, a: p.astype(jnp.float32)
+                - a.astype(jnp.float32)[None],
+                group_params, outer.anchor)  # (G, ...)
+            if tc.hierarchical_reduce:
+                # P == 1 degenerates to quantizing the *global* mean once —
+                # exactly the distributed path on a pod-less mesh, where the
+                # stage-1 pmean over the fast axes is already the full reduce
+                # stage 1: full-precision mean over the fast intra-pod axis,
+                # broadcast back so every group in a pod holds the pod mean
+                # (== its quantization input; residuals stay pod-identical)
+                def pod_mean(d):
+                    pm = jnp.mean(d.reshape(P, G // P, *d.shape[1:]), axis=1,
+                                  keepdims=True)
+                    return jnp.broadcast_to(pm, (P, G // P, *d.shape[1:])
+                                            ).reshape(d.shape)
+                delta = jax.tree.map(pod_mean, delta)
+            new_residual = outer.residual
+            if compress:
+                delta, new_residual = _compress_rows(
+                    delta, outer.residual, tc)
+            delta_avg = jax.tree.map(lambda d: jnp.mean(d, axis=0), delta)
+            return outer_reduce(outer, delta_avg, tc, mu=mu, lr=lr,
+                                residual=new_residual)
 
         self._dispatch = jax.jit(do_dispatch)
 
@@ -154,7 +215,8 @@ class SimulatedRun:
                         anchor=jax.tree.map(
                             lambda p, a: p.astype(a.dtype),
                             st.params, st.outer.anchor),
-                        num_syncs=st.outer.num_syncs)
+                        num_syncs=st.outer.num_syncs,
+                        residual=st.outer.residual)
             else:
                 if st.group_params is None:
                     self._switch_to_groups()

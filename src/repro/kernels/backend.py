@@ -1,0 +1,29 @@
+"""Backend detection shared by every Pallas kernel.
+
+Kernels take ``interpret: Optional[bool] = None`` and resolve ``None`` via
+:func:`default_interpret`: compiled (Mosaic) on a real TPU backend,
+interpreter mode everywhere else. Lives in its own module (not ``ops.py``)
+because the kernel modules cannot import ``ops`` without a cycle.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+
+@functools.cache
+def on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def default_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve an ``interpret`` argument: None -> backend-aware default."""
+    if interpret is None:
+        return not on_tpu()
+    return interpret

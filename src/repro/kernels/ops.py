@@ -1,8 +1,8 @@
 """Jit'd wrappers: the integration surface between kernels and the system.
 
-``interpret`` defaults to True off-TPU (the kernels execute their Python
-bodies for correctness validation); on a real TPU backend it flips to False
-and the same BlockSpecs drive Mosaic.
+``interpret`` resolves backend-aware (kernels/backend.py): compiled Mosaic
+on a real TPU, interpreter mode elsewhere (the kernels execute their Python
+bodies for correctness validation). The same BlockSpecs drive both.
 """
 
 from __future__ import annotations
@@ -13,21 +13,16 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import default_interpret, on_tpu
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.pier_update import pier_update as _pier_update
+from repro.kernels.quantize import (dequantize_blockwise as _dequantize,
+                                    quantize_blockwise as _quantize)
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 
 
-@functools.cache
-def on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except Exception:
-        return False
-
-
 def _interpret() -> bool:
-    return not on_tpu()
+    return default_interpret(None)
 
 
 # ---------------------------------------------------------------------------
@@ -56,10 +51,12 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0):
 # ---------------------------------------------------------------------------
 
 
-def pier_outer_update(state, delta_avg, tc, *, mu, lr):
+def pier_outer_update(state, delta_avg, tc, *, mu, lr, residual=None):
     """Drop-in replacement for core.outer.outer_update (use_pallas path).
 
-    state: OuterState; delta_avg: pytree of fp32 deltas.
+    state: OuterState; delta_avg: pytree of fp32 deltas. ``residual`` is the
+    new error-feedback residual to store (compressed collective); ``None``
+    carries the state's own through.
     Returns (new_params_f32_tree, new OuterState).
     """
     from repro.core.outer import OuterState  # local import to avoid cycle
@@ -83,8 +80,24 @@ def pier_outer_update(state, delta_avg, tc, *, mu, lr):
         momentum=unf(treedef, new_m),
         anchor=jax.tree.map(lambda p: p.astype(sdt), params_f32),
         num_syncs=state.num_syncs + 1,
+        residual=residual if residual is not None else state.residual,
     )
     return params_f32, new_state
+
+
+# ---------------------------------------------------------------------------
+# blockwise Δθ quantize / dequantize (compressed outer collective)
+# ---------------------------------------------------------------------------
+
+
+def quantize_blockwise(x, *, bits: int = 8, block: int = 256):
+    """Flat (N,) -> (q int8 (nblocks*block,), scales f32 (nblocks,))."""
+    return _quantize(x, bits=bits, block=block, interpret=_interpret())
+
+
+def dequantize_blockwise(q, scales, *, block: int = 256):
+    """Inverse of :func:`quantize_blockwise` (padded payload, fp32)."""
+    return _dequantize(q, scales, block=block, interpret=_interpret())
 
 
 # ---------------------------------------------------------------------------

@@ -13,11 +13,14 @@ step of the μ-decay / outer-LR schedules (no recompilation when they change).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.backend import default_interpret
 
 _BLOCK = 4096  # lanes*32 panels: multiple of the (8,128) fp32 VMEM tile
 
@@ -51,9 +54,15 @@ def pier_update(
     *,
     formulation: str = "nesterov_torch",
     block: int = _BLOCK,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
-    """Returns (new_params_f32, new_momentum) for one flat leaf."""
+    """Returns (new_params_f32, new_momentum) for one flat leaf.
+
+    ``interpret=None`` resolves backend-aware: compiled Mosaic on a real
+    TPU, interpreter mode elsewhere — so direct callers get the fused
+    compiled kernel on hardware instead of the interpreter.
+    """
+    interpret = default_interpret(interpret)
     (n,) = anchor.shape
     np_ = ((n + block - 1) // block) * block
     if np_ != n:

@@ -58,6 +58,33 @@ def pier_update_ref(anchor, momentum, delta, *, mu, lr, formulation="nesterov_to
     return af + lr * step, m_new
 
 
+def quantize_blockwise_ref(x, *, bits: int = 8, block: int = 256):
+    """Blockwise symmetric absmax quantization oracle (DESIGN.md §6).
+
+    x: flat (N,) float -> (q int8 (nblocks*block,), scales f32 (nblocks,)).
+    The payload is padded to whole blocks (zero pad -> zero scale/values).
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    (n,) = x.shape
+    nb = (n + block - 1) // block
+    xf = jnp.pad(x.astype(jnp.float32), (0, nb * block - n))
+    xb = xf.reshape(nb, block)
+    absmax = jnp.max(jnp.abs(xb), axis=-1)
+    # reciprocal-multiply to match the kernel bitwise under jit (XLA
+    # strength-reduces constant divisions)
+    scale = absmax * (1.0 / qmax)
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+    q = jnp.clip(jnp.round(xb * inv[:, None]), -qmax, qmax)
+    return q.astype(jnp.int8).reshape(nb * block), scale
+
+
+def dequantize_blockwise_ref(q, scales, *, block: int = 256):
+    """Inverse oracle: (nblocks*block,) int8 + (nblocks,) f32 -> f32."""
+    nb = q.shape[0] // block
+    qb = q.reshape(nb, block).astype(jnp.float32)
+    return (qb * scales[:, None]).reshape(nb * block)
+
+
 def rmsnorm_ref(x, scale, *, eps: float = 1e-5):
     """Row RMSNorm oracle. x: (..., D); scale: (D,)."""
     xf = x.astype(jnp.float32)

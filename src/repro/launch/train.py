@@ -31,11 +31,42 @@ from repro.launch import mesh as M
 from repro.parallel.steps import build_train_steps
 
 
+def resolve_auto_sync_delay(tc: TrainConfig, mc: ModelConfig,
+                            pc: ParallelConfig, *, chip: str = "") -> int:
+    """Resolve ``sync_delay="auto"`` to d* from the overlap step-time model.
+
+    d* is the smallest delay that fully hides the outer collective given
+    the mesh and a ``chip`` hint (benchmarks/overlap.py). Falls back to 0
+    (eager) whenever the model has no estimate: no/unknown chip hint, or
+    the benchmarks package not importable from this deployment.
+    """
+    if tc.sync_delay != "auto":
+        return tc.sync_delay
+    try:
+        from benchmarks.overlap import resolve_sync_delay
+    except ImportError:
+        return 0
+    d = resolve_sync_delay(
+        n_params=mc.param_count(), n_devices=pc.num_devices,
+        group_size=pc.group_size, sync_interval=tc.sync_interval,
+        chip=chip or None,
+        bits=(tc.outer_comm_bits if tc.outer_compression != "none" else 32),
+        block=tc.outer_comm_block,
+        hierarchical=tc.hierarchical_reduce, pods=pc.num_pods)
+    if d is None:
+        return 0
+    return max(0, min(int(d), tc.sync_interval - 1))
+
+
 class Trainer:
     """Host-side training loop weaving inner/outer steps per the schedule."""
 
     def __init__(self, mc: ModelConfig, tc: TrainConfig, pc: ParallelConfig,
-                 mesh, *, checkpoint_dir: Optional[str] = None):
+                 mesh, *, checkpoint_dir: Optional[str] = None,
+                 chip_hint: str = ""):
+        if tc.sync_delay == "auto":
+            tc = tc.replace(sync_delay=resolve_auto_sync_delay(
+                tc, mc, pc, chip=chip_hint))
         self.mc, self.tc, self.pc = mc, tc, pc
         self.mesh = mesh
         self.sched = PierSchedule(tc)
@@ -89,7 +120,8 @@ class Trainer:
         events = sched.events(step)
         fused = (len(events) == 2 and events[0].kind == "dispatch"
                  and events[1].kind == "apply")
-        if fused:
+        chunked = self.bundle.dispatch_chunk_steps is not None
+        if fused and not chunked:
             self._outer_to_device()
             self.state, self.outer = self.bundle.outer_step(
                 self.state, self.outer,
@@ -105,17 +137,39 @@ class Trainer:
                         jnp.float32(sched.mu_at(step)))
                     self._outer_to_host()
                 elif ev.kind == "dispatch":
-                    self._outer_to_device()
-                    dispatch, self.outer = self.bundle.dispatch_step(
-                        self.state, self.outer,
-                        jnp.float32(sched.mu_at(step)),
-                        jnp.float32(sched.outer_lr_at(step)))
-                    self._outer_to_host()
+                    dispatch = self._dispatch(step)
                     self._inflight = (sched.apply_step_for(step), dispatch)
                 else:  # apply
                     self._apply_inflight()
         self.step += 1
         return {k: float(v) for k, v in metrics.items()}
+
+    def _dispatch(self, step: int):
+        """Launch the outer collective for the sync boundary at ``step``.
+
+        With ``comm_chunks > 1`` the Δθ leaf spans dispatch as separate
+        XLA computations enqueued back to back (none blocks the host), so
+        chunk k's cross-domain reduce overlaps chunk k+1's quantization;
+        the finalize that folds every reduced payload into the Nesterov
+        target is enqueued last and rides the same in-flight window.
+        """
+        sched = self.sched
+        mu = jnp.float32(sched.mu_at(step))
+        olr = jnp.float32(sched.outer_lr_at(step))
+        self._outer_to_device()
+        if self.bundle.dispatch_chunk_steps is not None:
+            payload, res = [], []
+            for chunk in self.bundle.dispatch_chunk_steps:
+                p, r = chunk(self.state, self.outer)
+                payload.extend(p)
+                res.extend(r)
+            dispatch, self.outer = self.bundle.dispatch_finalize_step(
+                self.state, self.outer, tuple(payload), tuple(res), mu, olr)
+        else:
+            dispatch, self.outer = self.bundle.dispatch_step(
+                self.state, self.outer, mu, olr)
+        self._outer_to_host()
+        return dispatch
 
     def _apply_inflight(self):
         # The schedule emits apply events purely by step count; if flush()
@@ -185,9 +239,24 @@ def main(argv=None):
     ap.add_argument("--global-batch", type=int, default=16)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--sync-interval", type=int, default=10)
-    ap.add_argument("--sync-delay", type=int, default=0,
+    ap.add_argument("--sync-delay", default="0",
                     help="overlap the outer all-reduce with this many "
-                         "inner steps (0 = eager)")
+                         "inner steps (0 = eager; 'auto' = resolve d* from "
+                         "the overlap step-time model, needs --chip)")
+    ap.add_argument("--chip", default="",
+                    help="chip hint for --sync-delay auto "
+                         "(e.g. tpu-v5e, a100-perlmutter, gh200-vista)")
+    ap.add_argument("--outer-compression", default="none",
+                    choices=["none", "quantize"],
+                    help="compress the cross-pod Δθ payload")
+    ap.add_argument("--outer-comm-bits", type=int, default=8,
+                    choices=[4, 8])
+    ap.add_argument("--hierarchical-reduce", action="store_true",
+                    help="two-stage outer reduce: fp32 intra-pod, "
+                         "compressed cross-pod")
+    ap.add_argument("--comm-chunks", type=int, default=1,
+                    help="dispatch the Δθ tree as this many separate "
+                         "XLA computations")
     ap.add_argument("--groups", type=int, default=2,
                     help="Pier groups (data_outer)")
     ap.add_argument("--mesh", default="",
@@ -212,22 +281,34 @@ def main(argv=None):
     pc = ParallelConfig(
         data_axis_size=shape[0] * shape[1], model_axis_size=shape[2],
         data_outer=shape[0])
+    sync_delay = (args.sync_delay if args.sync_delay == "auto"
+                  else int(args.sync_delay))
     tc = TrainConfig(
         optimizer=args.optimizer,
         total_steps=args.total_steps or args.steps,
         global_batch_size=args.global_batch,
         seq_len=args.seq_len,
         sync_interval=args.sync_interval,
-        sync_delay=args.sync_delay,
+        sync_delay=sync_delay,
         inner_lr=args.lr, inner_min_lr=args.lr / 10,
         offload_outer_state=args.offload,
         seed=args.seed,
         lazy_start=args.optimizer != "diloco",
+        outer_compression=args.outer_compression,
+        outer_comm_bits=args.outer_comm_bits,
+        hierarchical_reduce=args.hierarchical_reduce,
+        comm_chunks=args.comm_chunks,
     )
+    if tc.sync_delay == "auto":
+        d = resolve_auto_sync_delay(tc, mc, pc, chip=args.chip)
+        print(f"sync_delay=auto resolved to d*={d}"
+              f" (chip={args.chip or 'none'})")
+        tc = tc.replace(sync_delay=d)
     print(f"arch={mc.name} optimizer={tc.optimizer} mesh={shape} "
           f"groups={pc.num_groups} devices={jax.device_count()}")
     trainer = Trainer(mc, tc, pc, mesh,
-                      checkpoint_dir=args.checkpoint_dir or None)
+                      checkpoint_dir=args.checkpoint_dir or None,
+                      chip_hint=args.chip)
     pipeline = synthetic_pipeline(mesh, M.data_axes(mesh), mc, tc)
     try:
         trainer.run(args.steps, pipeline, log_every=args.log_every,

@@ -22,7 +22,19 @@ Step functions:
   sync (sync_delay>0): dispatch launches the global Δθ pmean + Nesterov math
   without blocking the host, apply installs the target ``d`` steps later with
   the stale-delta correction (see core/outer.py and DESIGN.md).
+- ``dispatch_chunk_steps`` / ``dispatch_finalize_step`` — chunked dispatch
+  (``comm_chunks > 1``, DESIGN.md §6): the Δθ tree is split into contiguous
+  leaf spans, each reduced by its own XLA computation, so early chunks'
+  collectives run while later chunks are still being quantized; finalize
+  consumes the reduced payloads into the Nesterov target.
 - ``serve_step`` / ``prefill_step`` — inference (plain GSPMD, no groups).
+
+The outer collective itself has two orthogonal knobs (DESIGN.md §6), both
+off by default and bit-identical to the flat fp32 pmean when off:
+``hierarchical_reduce`` (full-precision psum over the fast ``data_outer``
+axis first, then exchange over the slow ``pod`` axis) and
+``outer_compression`` (blockwise-quantized payload with an error-feedback
+residual carried group-locally in ``OuterState.residual``).
 """
 
 from __future__ import annotations
@@ -37,8 +49,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.config import ModelConfig, ParallelConfig, TrainConfig
-from repro.core.outer import (OuterState, outer_apply, outer_init,
-                              outer_reduce, outer_update, warmup_accumulate)
+from repro.core.outer import (OuterState, compress_delta, outer_apply,
+                              outer_init, outer_reduce, outer_update,
+                              warmup_accumulate)
 from repro.launch import mesh as M
 from repro.models import registry as R
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
@@ -85,6 +98,35 @@ class StepBundle:
     dispatch_step: Callable
     apply_step: Callable
     eval_step: Callable
+    # chunked dispatch (comm_chunks > 1): one jitted computation per
+    # contiguous Δθ-leaf span, plus the finalize that consumes them all.
+    # None when comm_chunks == 1 (single fused dispatch).
+    dispatch_chunk_steps: Optional[Tuple[Callable, ...]] = None
+    dispatch_finalize_step: Optional[Callable] = None
+
+
+def _balanced_spans(sizes, num_chunks: int):
+    """Split leaf indices into <= num_chunks contiguous spans of ~equal
+    element count (the chunk payloads that dispatch as separate XLA
+    computations). Every span is non-empty."""
+    n = len(sizes)
+    num_chunks = max(1, min(num_chunks, n))
+    total = sum(sizes)
+    spans, lo, acc = [], 0, 0
+    for i, s in enumerate(sizes):
+        acc += s
+        # close the span once it reaches its fair share, keeping enough
+        # leaves behind for the remaining chunks
+        remaining_chunks = num_chunks - len(spans)
+        if (acc >= total * (len(spans) + 1) / num_chunks
+                and n - (i + 1) >= remaining_chunks - 1) or i == n - 1:
+            spans.append((lo, i + 1))
+            lo = i + 1
+            if len(spans) == num_chunks:
+                break
+    if lo < n:  # fold any tail into the last span
+        spans[-1] = (spans[-1][0], n)
+    return spans
 
 
 def _param_shapes(mc: ModelConfig, scan_layers: bool = False):
@@ -126,10 +168,15 @@ def build_train_steps(
         nu=S.stack_spec(opt_spec.nu, manual))
     state_spec = TrainState(params=stacked_pspec, opt=stacked_opt_spec)
     state_shardings = S.shardings(state_spec, mesh)
+    compress = tc.outer_compression != "none"
+    # The error-feedback residual is group-local (each group quantizes its
+    # own payload), so unlike momentum/anchor it is (G,)-stacked.
     outer_spec = OuterState(
         momentum=S.param_specs(pshapes, mesh, pc),
         anchor=S.param_specs(pshapes, mesh, pc),
-        num_syncs=P())
+        num_syncs=P(),
+        residual=(S.stack_spec(S.param_specs(pshapes, mesh, pc), manual)
+                  if compress else None))
     outer_shardings = S.shardings(outer_spec, mesh)
     bspec = S.batch_spec(mesh)
 
@@ -151,7 +198,7 @@ def build_train_steps(
     def init_outer(state: TrainState) -> OuterState:
         def f(state):
             params = jax.tree.map(lambda x: x[0], state.params)
-            return outer_init(params, tc)
+            return outer_init(params, tc, num_groups=G)
         return jax.jit(f, out_shardings=outer_shardings)(state)
 
     # ---- the shared inner/warmup body -------------------------------------
@@ -235,6 +282,90 @@ def build_train_steps(
     warmup_step = wrap_state_step(make_sgd_body(global_sync=True))
 
     # ---- outer events -----------------------------------------------------
+    # Shared shard_map specs. The outer state is replicated across groups
+    # except the error-feedback residual, which is group-local (stacked).
+    _sspec = lambda: TrainState(
+        params=jax.tree.map(lambda _: P(manual), state_spec.params,
+                            is_leaf=lambda s: isinstance(s, P)),
+        opt=jax.tree.map(lambda _: P(manual), state_spec.opt,
+                         is_leaf=lambda s: isinstance(s, P)))
+
+    def _ospec():
+        rep = lambda t: jax.tree.map(lambda _: P(), t,
+                                     is_leaf=lambda s: isinstance(s, P))
+        return OuterState(
+            momentum=rep(outer_spec.momentum),
+            anchor=rep(outer_spec.anchor),
+            num_syncs=P(),
+            residual=(jax.tree.map(lambda _: P(manual), outer_spec.residual,
+                                   is_leaf=lambda s: isinstance(s, P))
+                      if compress else None))
+
+    _dspec = lambda sspec: DispatchState(
+        target=jax.tree.map(lambda _: P(), sspec.params,
+                            is_leaf=lambda s: isinstance(s, P)),
+        snapshot=sspec.params)
+
+    fast_axes = tuple(a for a in manual if a != "pod")
+    slow_axes = tuple(a for a in manual if a == "pod")
+
+    def _global_pmean(tree):
+        """Flat or two-stage pmean over the manual axes (same mean)."""
+        if not manual:
+            return tree
+        if tc.hierarchical_reduce:
+            if fast_axes:
+                tree = jax.lax.pmean(tree, fast_axes)
+            if slow_axes:
+                tree = jax.lax.pmean(tree, slow_axes)
+            return tree
+        return jax.lax.pmean(tree, manual)
+
+    def _reduce_delta_leaf(d, r):
+        """One Δθ leaf -> (globally averaged payload, new residual | None).
+
+        Knobs off: exactly ``pmean(d, manual)`` — the seed collective, bit
+        for bit. Hierarchical: full-precision psum over the fast intra-pod
+        axes first, so only 1/pods of the traffic crosses the slow domain.
+        Compressed: blockwise quantize+dequantize with error feedback — the
+        dequantized payload is the numeric value of int8+scales on the wire.
+        """
+        if not compress and not tc.hierarchical_reduce:
+            return (jax.lax.pmean(d, manual) if manual else d), r
+        exchange = manual
+        if tc.hierarchical_reduce and fast_axes:
+            d = jax.lax.pmean(d, fast_axes)  # stage 1: fast domain, fp32
+            exchange = slow_axes
+        if compress:
+            d, r = compress_delta(d, r, tc, use_pallas=pc.use_pallas)
+            if tc.hierarchical_reduce and fast_axes:
+                # the residual stopped varying over the fast axes at the
+                # stage-1 pmean; re-mark it for the stacked P(manual) spec
+                r = compat.pvary(r, fast_axes)
+        if exchange:
+            d = jax.lax.pmean(d, exchange)  # stage 2: slow domain
+        return d, r
+
+    def _reduced_delta(params, outer):
+        """(delta_avg tree, new residual tree | None) for one group."""
+        delta = jax.tree.map(
+            lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32),
+            params, outer.anchor)
+        res = (jax.tree.map(lambda x: x[0], outer.residual)
+               if compress else None)
+        flat_d, treedef = jax.tree_util.tree_flatten(delta)
+        flat_r = (treedef.flatten_up_to(res) if compress
+                  else [None] * len(flat_d))
+        out = [_reduce_delta_leaf(d, r) for d, r in zip(flat_d, flat_r)]
+        unf = jax.tree_util.tree_unflatten
+        delta_avg = unf(treedef, [p for p, _ in out])
+        new_res = (unf(treedef, [jnp.expand_dims(r, 0) for _, r in out])
+                   if compress else None)
+        return delta_avg, new_res
+
+    def _residual_kw(new_res):
+        return {"residual": new_res} if compress else {}
+
     def accumulate_body(state, outer, mu):
         with use_rules(rules):
             params = jax.tree.map(lambda x: x[0], state.params)
@@ -242,21 +373,14 @@ def build_train_steps(
                 # During warmup all groups hold identical params (they run
                 # globally synced AdamW), but the VMA checker cannot prove
                 # it — pmean is the identity here and makes it explicit.
-                params = jax.lax.pmean(params, manual)
+                params = _global_pmean(params)
             return warmup_accumulate(outer, params, mu)
 
     def accumulate_fn(state, outer, mu):
-        sspec = TrainState(
-            params=jax.tree.map(lambda _: P(manual), state_spec.params,
-                                is_leaf=lambda s: isinstance(s, P)),
-            opt=jax.tree.map(lambda _: P(manual), state_spec.opt,
-                             is_leaf=lambda s: isinstance(s, P)))
-        ospec = jax.tree.map(lambda _: P(), outer_spec,
-                             is_leaf=lambda s: isinstance(s, P))
         f = compat.shard_map(
             accumulate_body, mesh=mesh,
-            in_specs=(sspec, ospec, P()),
-            out_specs=ospec,
+            in_specs=(_sspec(), _ospec(), P()),
+            out_specs=_ospec(),
             axis_names=set(manual))
         return f(state, outer, mu)
 
@@ -265,13 +389,10 @@ def build_train_steps(
     def outer_body(state, outer, mu, olr):
         with use_rules(rules):
             params = jax.tree.map(lambda x: x[0], state.params)
-            delta = jax.tree.map(
-                lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32),
-                params, outer.anchor)
-            if manual:
-                delta = jax.lax.pmean(delta, manual)  # THE global collective
+            delta, new_res = _reduced_delta(params, outer)  # THE collective
             new_params_f32, new_outer = outer_update(
-                outer, delta, tc, mu=mu, lr=olr, use_pallas=pc.use_pallas)
+                outer, delta, tc, mu=mu, lr=olr, use_pallas=pc.use_pallas,
+                **_residual_kw(new_res))
             new_params = jax.tree.map(
                 lambda f32, p: f32.astype(p.dtype)[None],
                 new_params_f32, params)
@@ -279,13 +400,7 @@ def build_train_steps(
             return new_state, new_outer
 
     def outer_fn(state, outer, mu, olr):
-        sspec = TrainState(
-            params=jax.tree.map(lambda _: P(manual), state_spec.params,
-                                is_leaf=lambda s: isinstance(s, P)),
-            opt=jax.tree.map(lambda _: P(manual), state_spec.opt,
-                             is_leaf=lambda s: isinstance(s, P)))
-        ospec = jax.tree.map(lambda _: P(), outer_spec,
-                             is_leaf=lambda s: isinstance(s, P))
+        sspec, ospec = _sspec(), _ospec()
         f = compat.shard_map(
             outer_body, mesh=mesh,
             in_specs=(sspec, ospec, P(), P()),
@@ -300,28 +415,13 @@ def build_train_steps(
     # does not block on it (jax dispatch is async), so the all-reduce runs
     # concurrently with the next ``sync_delay`` inner steps. apply installs
     # the target with the stale-delta correction once the window closes.
-    _sspec = lambda: TrainState(
-        params=jax.tree.map(lambda _: P(manual), state_spec.params,
-                            is_leaf=lambda s: isinstance(s, P)),
-        opt=jax.tree.map(lambda _: P(manual), state_spec.opt,
-                         is_leaf=lambda s: isinstance(s, P)))
-    _ospec = lambda: jax.tree.map(lambda _: P(), outer_spec,
-                                  is_leaf=lambda s: isinstance(s, P))
-    _dspec = lambda sspec: DispatchState(
-        target=jax.tree.map(lambda _: P(), sspec.params,
-                            is_leaf=lambda s: isinstance(s, P)),
-        snapshot=sspec.params)
-
     def dispatch_body(state, outer, mu, olr):
         with use_rules(rules):
             params = jax.tree.map(lambda x: x[0], state.params)
-            delta = jax.tree.map(
-                lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32),
-                params, outer.anchor)
-            if manual:
-                delta = jax.lax.pmean(delta, manual)  # THE global collective
+            delta, new_res = _reduced_delta(params, outer)  # THE collective
             target_f32, new_outer = outer_reduce(
-                outer, delta, tc, mu=mu, lr=olr, use_pallas=pc.use_pallas)
+                outer, delta, tc, mu=mu, lr=olr, use_pallas=pc.use_pallas,
+                **_residual_kw(new_res))
             dispatch = DispatchState(
                 target=target_f32,
                 snapshot=jax.tree.map(lambda x: x[None], params))
@@ -340,6 +440,90 @@ def build_train_steps(
     # NOTE: the train state is NOT donated — the snapshot output forces a
     # fresh copy of the params while inner steps keep donating the live ones.
     dispatch_step = jax.jit(dispatch_fn, donate_argnums=(1,))
+
+    # ---- chunked dispatch (comm_chunks > 1) --------------------------------
+    # The Δθ leaves are split into contiguous spans; each span's reduce is
+    # its own jitted computation, so the host enqueues them back to back and
+    # chunk k's collective overlaps chunk k+1's quantization/compute. The
+    # finalize computation consumes every reduced payload into the Nesterov
+    # target — per-leaf math is identical to the fused dispatch, so
+    # chunking never changes numerics.
+    dispatch_chunk_steps = None
+    dispatch_finalize_step = None
+    if tc.comm_chunks > 1:
+        pflat_shapes, ptreedef = jax.tree_util.tree_flatten(pshapes)
+        spans = _balanced_spans(
+            [int(functools.reduce(lambda a, b: a * b, l.shape, 1))
+             for l in pflat_shapes],
+            tc.comm_chunks)
+
+        def make_chunk_fn(lo, hi):
+            def chunk_body(state, outer):
+                with use_rules(rules):
+                    params = jax.tree.map(lambda x: x[0], state.params)
+                    p_flat = ptreedef.flatten_up_to(params)
+                    a_flat = ptreedef.flatten_up_to(outer.anchor)
+                    r_flat = (ptreedef.flatten_up_to(jax.tree.map(
+                        lambda x: x[0], outer.residual))
+                        if compress else [None] * len(p_flat))
+                    payload, new_res = [], []
+                    for j in range(lo, hi):
+                        d = (p_flat[j].astype(jnp.float32)
+                             - a_flat[j].astype(jnp.float32))
+                        da, nr = _reduce_delta_leaf(d, r_flat[j])
+                        payload.append(da)
+                        if compress:
+                            new_res.append(jnp.expand_dims(nr, 0))
+                    return tuple(payload), tuple(new_res)
+
+            def chunk_fn(state, outer):
+                pay_spec = tuple(P() for _ in range(lo, hi))
+                res_spec = (tuple(P(manual) for _ in range(lo, hi))
+                            if compress else ())
+                f = compat.shard_map(
+                    chunk_body, mesh=mesh,
+                    in_specs=(_sspec(), _ospec()),
+                    out_specs=(pay_spec, res_spec),
+                    axis_names=set(manual))
+                return f(state, outer)
+
+            return jax.jit(chunk_fn)
+
+        dispatch_chunk_steps = tuple(
+            make_chunk_fn(lo, hi) for lo, hi in spans)
+
+        def finalize_body(state, outer, payload, res_leaves, mu, olr):
+            with use_rules(rules):
+                params = jax.tree.map(lambda x: x[0], state.params)
+                delta = jax.tree_util.tree_unflatten(ptreedef, list(payload))
+                new_res = (jax.tree_util.tree_unflatten(
+                    ptreedef, list(res_leaves)) if compress else None)
+                target_f32, new_outer = outer_reduce(
+                    outer, delta, tc, mu=mu, lr=olr,
+                    use_pallas=pc.use_pallas, **_residual_kw(new_res))
+                dispatch = DispatchState(
+                    target=target_f32,
+                    snapshot=jax.tree.map(lambda x: x[None], params))
+                return dispatch, new_outer
+
+        def finalize_fn(state, outer, payload, res_leaves, mu, olr):
+            sspec, ospec = _sspec(), _ospec()
+            dspec = _dspec(sspec)
+            n_leaves = len(pflat_shapes)
+            pay_spec = tuple(P() for _ in range(n_leaves))
+            res_spec = (tuple(P(manual) for _ in range(n_leaves))
+                        if compress else ())
+            f = compat.shard_map(
+                finalize_body, mesh=mesh,
+                in_specs=(sspec, ospec, pay_spec, res_spec, P(), P()),
+                out_specs=(dspec, ospec),
+                axis_names=set(manual))
+            return f(state, outer, payload, res_leaves, mu, olr)
+
+        # outer is donated like the fused dispatch; chunk computations that
+        # still read it were enqueued first, so the runtime keeps their view
+        # alive (at worst the donation is unusable, never unsound)
+        dispatch_finalize_step = jax.jit(finalize_fn, donate_argnums=(1,))
 
     def apply_body(state, dispatch):
         with use_rules(rules):
@@ -394,7 +578,9 @@ def build_train_steps(
         inner_step=inner_step, warmup_step=warmup_step,
         accumulate_step=accumulate_step, outer_step=outer_step,
         dispatch_step=dispatch_step, apply_step=apply_step,
-        eval_step=eval_step)
+        eval_step=eval_step,
+        dispatch_chunk_steps=dispatch_chunk_steps,
+        dispatch_finalize_step=dispatch_finalize_step)
 
 
 # ===========================================================================

@@ -1,0 +1,406 @@
+"""Compressed hierarchical outer collective (DESIGN.md §6).
+
+The contract under test:
+
+- Blockwise quantization round-trips within ``scale/2`` per element, the
+  Pallas kernels match the jnp oracle bit for bit, and error feedback
+  telescopes: the sum of dequantized payloads plus the final residual
+  equals the sum of the true deltas.
+- ``outer_compression="none"`` + ``comm_chunks=1`` + no hierarchy is the
+  seed path, bit for bit — on the simulator (vs the legacy eager loop, on
+  both the XLA and Pallas outer update) and on the distributed path
+  (chunked / hierarchical-without-pods runs reproduce the default Trainer
+  bitwise).
+- int8 + error feedback converges within 5% of the fp32 eager baseline
+  (mirrors tests/test_delayed_sync.py's acceptance).
+- ``sync_delay="auto"`` resolves d* from the overlap step-time model and
+  falls back to 0 without an estimate.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis, or example-based shim
+
+from repro.config import ModelConfig, ParallelConfig, TrainConfig
+from repro.core.outer import compress_delta, outer_init
+from repro.core.simulate import SimulatedRun
+from repro.kernels import ops as kops
+from repro.kernels.ref import (dequantize_blockwise_ref,
+                               quantize_blockwise_ref)
+from test_delayed_sync import MC, _run_legacy_eager
+
+BLOCK = 64
+
+
+def _tc(**kw):
+    base = dict(total_steps=40, global_batch_size=8, seq_len=16,
+                sync_interval=5, inner_lr=1e-3, inner_min_lr=1e-4,
+                warmup_frac=0.25)
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+def _ctc(**kw):
+    kw.setdefault("outer_compression", "quantize")
+    kw.setdefault("outer_comm_bits", 8)
+    kw.setdefault("outer_comm_block", BLOCK)
+    return _tc(**kw)
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+
+def test_compression_config_validation():
+    with pytest.raises(ValueError):
+        _tc(outer_compression="int8")  # not a mode name
+    with pytest.raises(ValueError):
+        _ctc(outer_comm_bits=5)
+    with pytest.raises(ValueError):
+        _tc(comm_chunks=0)
+    with pytest.raises(ValueError):
+        _tc(outer_comm_block=0)
+    with pytest.raises(ValueError):
+        _tc(sync_delay="later")
+    _tc(sync_delay="auto")  # the auto sentinel is legal, resolved at launch
+    _ctc(outer_comm_bits=4, comm_chunks=3, hierarchical_reduce=True)
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize kernels
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_quantize_roundtrip_error_bound(seed):
+    """Per element: |x − DQ(Q(x))| <= scale/2 (round-to-nearest, no clip
+    error beyond 1 ulp of the scale)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=1000).astype(np.float32) * 10.0)
+    for bits in (8, 4):
+        q, s = quantize_blockwise_ref(x, bits=bits, block=BLOCK)
+        dq = dequantize_blockwise_ref(q, s, block=BLOCK)[:1000]
+        srep = np.repeat(np.asarray(s), BLOCK)[:1000]
+        err = np.abs(np.asarray(x) - np.asarray(dq))
+        assert (err <= srep / 2 + 1e-5).all(), (bits, err.max())
+
+
+def test_quantize_pallas_matches_ref_bitwise():
+    rng = np.random.default_rng(0)
+    for n in (7, 300, 1000, 4096):
+        x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        for bits in (8, 4):
+            q, s = kops.quantize_blockwise(x, bits=bits, block=BLOCK)
+            qr, sr = quantize_blockwise_ref(x, bits=bits, block=BLOCK)
+            np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+            np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+            dq = kops.dequantize_blockwise(q, s, block=BLOCK)
+            dqr = dequantize_blockwise_ref(qr, sr, block=BLOCK)
+            np.testing.assert_array_equal(np.asarray(dq), np.asarray(dqr))
+
+
+def test_quantize_zero_block_is_exact():
+    q, s = quantize_blockwise_ref(jnp.zeros(2 * BLOCK), block=BLOCK)
+    assert (np.asarray(s) == 0).all()
+    dq = dequantize_blockwise_ref(q, s, block=BLOCK)
+    assert (np.asarray(dq) == 0).all()
+
+
+def test_pier_update_interpret_default_resolves():
+    """interpret=None resolves backend-aware (interpreter off-TPU) and the
+    kernel still matches the oracle — the perf-bug fix for direct callers."""
+    from repro.kernels.pier_update import pier_update
+    from repro.kernels.ref import pier_update_ref
+
+    rng = np.random.default_rng(0)
+    a, m, d = (jnp.asarray(rng.normal(size=300).astype(np.float32))
+               for _ in range(3))
+    p1, m1 = pier_update(a, m, d, jnp.float32(0.9), jnp.float32(0.7))
+    pr, mr = pier_update_ref(a, m, d, mu=0.9, lr=0.7)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(pr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(mr), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# error feedback
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_error_feedback_telescopes(bits):
+    """sum(payload_t) + residual_T == sum(delta_t): the quantization error
+    is carried, never dropped — so it cannot bias the outer momentum."""
+    tc = _ctc(outer_comm_bits=bits)
+    rng = np.random.default_rng(1)
+    tree = lambda: {
+        "w": jnp.asarray(rng.normal(size=(13, 11)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=7).astype(np.float32))}
+    residual = jax.tree.map(jnp.zeros_like, tree())
+    deltas, payloads = [], []
+    for _ in range(6):
+        d = tree()
+        deltas.append(d)
+        payload, residual = compress_delta(d, residual, tc)
+        payloads.append(payload)
+    for k in ("w", "b"):
+        true_sum = sum(np.asarray(d[k], np.float64) for d in deltas)
+        sent_sum = sum(np.asarray(p[k], np.float64) for p in payloads)
+        np.testing.assert_allclose(
+            sent_sum + np.asarray(residual[k], np.float64), true_sum,
+            rtol=1e-4, atol=1e-4)
+
+
+def test_compress_delta_single_round_identity():
+    """payload + residual == delta + residual_in exactly per round."""
+    tc = _ctc()
+    rng = np.random.default_rng(2)
+    d = {"w": jnp.asarray(rng.normal(size=130).astype(np.float32))}
+    r0 = {"w": jnp.asarray(rng.normal(size=130).astype(np.float32) * 1e-3)}
+    payload, r1 = compress_delta(d, r0, tc)
+    c = np.asarray(d["w"]) + np.asarray(r0["w"])
+    np.testing.assert_allclose(
+        np.asarray(payload["w"]) + np.asarray(r1["w"]), c, atol=1e-6)
+
+
+def test_outer_init_residual_shapes():
+    params = {"w": jnp.ones((3, 4)), "b": jnp.ones(5)}
+    st_none = outer_init(params, _tc())
+    assert st_none.residual is None
+    st_q = outer_init(params, _ctc(), num_groups=2)
+    assert st_q.residual["w"].shape == (2, 3, 4)
+    assert st_q.residual["b"].shape == (2, 5)
+    assert st_q.residual["w"].dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# knobs-off bit-identity (simulator)
+# ---------------------------------------------------------------------------
+
+
+def test_compression_none_bit_identical_to_legacy_eager():
+    """Explicit knobs-off config reproduces the pre-compression eager loop
+    bit for bit (and carries no residual)."""
+    tc = _tc(outer_compression="none", comm_chunks=1,
+             hierarchical_reduce=False, sync_delay=0)
+    new = SimulatedRun(MC, tc, num_groups=2, seed=0)
+    new.run(30)
+    ref = _run_legacy_eager(tc, 2, 0, 30)
+    for a, b in zip(jax.tree.leaves(new.state.group_params),
+                    jax.tree.leaves(ref.state.group_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(new.state.outer.momentum),
+                    jax.tree.leaves(ref.state.outer.momentum)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert new.state.outer.residual is None
+
+
+def test_compression_none_outer_update_xla_vs_pallas():
+    """Knobs-off outer update agrees across the XLA and Pallas backends and
+    neither grows a residual — the 'both backends' half of the knobs-off
+    acceptance (the collective itself is backend-independent)."""
+    from repro.core.outer import outer_update
+
+    tc = _tc(outer_compression="none")
+    rng = np.random.default_rng(3)
+    params = {"w": jnp.asarray(rng.normal(size=(9, 5)).astype(np.float32))}
+    state = outer_init(params, tc)
+    delta = {"w": jnp.asarray(rng.normal(size=(9, 5)).astype(np.float32))}
+    px, sx = outer_update(state, delta, tc, mu=0.9, lr=0.7,
+                          use_pallas=False)
+    pp, sp = outer_update(state, delta, tc, mu=jnp.float32(0.9),
+                          lr=jnp.float32(0.7), use_pallas=True)
+    np.testing.assert_allclose(np.asarray(px["w"]), np.asarray(pp["w"]),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(sx.momentum["w"]),
+                               np.asarray(sp.momentum["w"]), atol=1e-6)
+    assert sx.residual is None and sp.residual is None
+
+
+# ---------------------------------------------------------------------------
+# distributed path (single host device: 1x1x1 mesh, group semantics intact)
+# ---------------------------------------------------------------------------
+
+
+def _trainer_run(tc, steps=20):
+    from repro.data.pipeline import synthetic_pipeline
+    from repro.launch import mesh as M
+    from repro.launch.train import Trainer
+
+    pc = ParallelConfig(data_axis_size=1, model_axis_size=1, data_outer=1)
+    mesh = M.small_mesh((1, 1, 1), ("data_outer", "data_inner", "model"))
+    tr = Trainer(MC, tc, pc, mesh)
+    pipe = synthetic_pipeline(mesh, M.data_axes(mesh), MC, tc)
+    try:
+        tr.run(steps, pipe, log_every=0)
+    finally:
+        pipe.close()
+    return tr
+
+
+def test_distributed_chunked_and_hier_bit_identical_to_default():
+    """comm_chunks>1 (leaf-span repartitioning) and hierarchical_reduce on
+    a pod-less mesh both reproduce the default Trainer bitwise — the
+    distributed knobs-off bit-identity acceptance."""
+    base = dict(optimizer="pier", total_steps=20, global_batch_size=4,
+                seq_len=16, sync_interval=4, warmup_frac=0.25, seed=0)
+    ref = _trainer_run(TrainConfig(**base))
+    ref_d2 = _trainer_run(TrainConfig(**base, sync_delay=2))
+    for reference, kw in ((ref, dict(comm_chunks=3)),
+                          (ref, dict(hierarchical_reduce=True)),
+                          (ref_d2, dict(comm_chunks=2, sync_delay=2))):
+        got = _trainer_run(TrainConfig(**base, **kw))
+        for a, b in zip(jax.tree.leaves(reference.state.params),
+                        jax.tree.leaves(got.state.params)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b), err_msg=str(kw))
+
+
+@pytest.mark.parametrize("hier", [False, True])
+def test_distributed_int8_matches_simulator(hier):
+    """The compressed distributed dispatch (residual wiring, quantize,
+    reduce) tracks the simulator's compressed path step for step (G=1) —
+    including hierarchical_reduce on a pod-less mesh, where both sides
+    must quantize the *global* mean once."""
+    tc = TrainConfig(optimizer="pier", total_steps=20, global_batch_size=4,
+                     seq_len=16, sync_interval=4, warmup_frac=0.25, seed=0,
+                     outer_compression="quantize", outer_comm_bits=8,
+                     outer_comm_block=BLOCK, hierarchical_reduce=hier)
+    from repro.launch import mesh as M
+    from repro.launch.train import Trainer
+
+    sim = SimulatedRun(MC, tc, num_groups=1, seed=0)
+    pc = ParallelConfig(data_axis_size=1, model_axis_size=1, data_outer=1)
+    mesh = M.small_mesh((1, 1, 1), ("data_outer", "data_inner", "model"))
+    tr = Trainer(MC, tc, pc, mesh)
+    for step in range(16):
+        batch = sim._global_batch(step)
+        dist_batch = jax.device_put(batch, tr.bundle.batch_sharding(batch))
+        tr.train_step(dist_batch)
+        sim.run(1)
+    worst = 0.0
+    sim_params = (sim.state.group_params if sim.state.group_params
+                  is not None else sim.state.params)
+    sim_leaves = jax.tree.leaves(jax.tree.map(
+        lambda g: g[0] if g.ndim else g, sim_params))
+    for a, b in zip(sim_leaves,
+                    jax.tree.leaves(jax.tree.map(lambda x: x[0],
+                                                 tr.state.params))):
+        worst = max(worst, float(jnp.abs(jnp.asarray(a, jnp.float32)
+                                         - jnp.asarray(b, jnp.float32)
+                                         ).max()))
+    assert worst < 5e-4, worst
+    # residuals agree too (both non-trivial after a sync)
+    r_sim = jax.tree.leaves(sim.state.outer.residual)
+    r_dist = jax.tree.leaves(tr.outer.residual)
+    assert any(float(jnp.abs(r).max()) > 0 for r in r_sim)
+    for a, b in zip(r_sim, r_dist):
+        d = float(jnp.abs(a - b).max())
+        assert d < 5e-4, d
+
+
+# ---------------------------------------------------------------------------
+# convergence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("delay", [0, 2])
+def test_int8_convergence_within_5pct_of_fp32(delay):
+    """int8 + error feedback within 5% of the fp32 eager baseline — the
+    paper-style acceptance for relaxing the payload precision."""
+    tc = _tc(total_steps=60, warmup_frac=0.2, sync_interval=5)
+    eager = SimulatedRun(MC, tc, num_groups=2, seed=0)
+    he = eager.run(60, eval_every=60)
+    tq = _ctc(total_steps=60, warmup_frac=0.2, sync_interval=5,
+              sync_delay=delay)
+    quant = SimulatedRun(MC, tq, num_groups=2, seed=0)
+    hq = quant.run(60, eval_every=60)
+    ve, vq = he["val_loss"][-1], hq["val_loss"][-1]
+    assert vq <= ve * 1.05, (ve, vq)
+
+
+def test_hierarchical_sim_close_to_flat():
+    """Two-stage reduce (2 pods x 2 groups) only reorders the fp32 mean;
+    convergence must match the flat reduce."""
+    tc = _tc(total_steps=60, warmup_frac=0.2, sync_interval=5)
+    flat = SimulatedRun(MC, tc, num_groups=4, seed=0)
+    hf = flat.run(60, eval_every=60)
+    hier = SimulatedRun(MC, tc.replace(hierarchical_reduce=True),
+                        num_groups=4, seed=0, num_pods=2)
+    hh = hier.run(60, eval_every=60)
+    vf, vh = hf["val_loss"][-1], hh["val_loss"][-1]
+    assert vh <= vf * 1.05, (vf, vh)
+
+
+# ---------------------------------------------------------------------------
+# sync_delay="auto"
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_sync_delay_from_model():
+    from benchmarks.overlap import resolve_sync_delay
+
+    d32 = resolve_sync_delay(n_params=1.5e9, n_devices=256, group_size=4,
+                             sync_interval=50, chip="a100-perlmutter")
+    d8 = resolve_sync_delay(n_params=1.5e9, n_devices=256, group_size=4,
+                            sync_interval=50, chip="a100-perlmutter",
+                            bits=8, hierarchical=True, pods=4)
+    assert d32 is not None and d32 > 0
+    assert d8 is not None and 0 < d8 <= d32  # smaller payload, smaller d*
+    assert resolve_sync_delay(n_params=1e9, n_devices=256, group_size=4,
+                              sync_interval=50, chip="warp-drive") is None
+    assert resolve_sync_delay(n_params=1e9, n_devices=256, group_size=4,
+                              sync_interval=50, chip=None) is None
+
+
+def test_auto_sync_delay_launcher_fallback():
+    """The launcher resolves 'auto' (chip hint -> d*, no hint -> 0)."""
+    from repro.launch.train import resolve_auto_sync_delay
+
+    tc = _tc(sync_delay="auto")
+    pc = ParallelConfig(data_axis_size=16, model_axis_size=16, data_outer=4)
+    d = resolve_auto_sync_delay(tc, MC, pc, chip="")
+    assert d == 0  # no chip hint -> no estimate -> eager fallback
+    d2 = resolve_auto_sync_delay(tc, MC, pc, chip="a100-perlmutter")
+    assert isinstance(d2, int) and 0 <= d2 < tc.sync_interval
+    # already-resolved configs pass through untouched
+    assert resolve_auto_sync_delay(_tc(sync_delay=3), MC, pc) == 3
+
+
+def test_trainer_resolves_auto_sync_delay():
+    tc = TrainConfig(optimizer="pier", total_steps=20, global_batch_size=4,
+                     seq_len=16, sync_interval=4, warmup_frac=0.25,
+                     sync_delay="auto")
+    tr = _trainer_run(tc, steps=6)
+    assert isinstance(tr.tc.sync_delay, int)
+
+
+# ---------------------------------------------------------------------------
+# bytes-on-wire acceptance
+# ---------------------------------------------------------------------------
+
+
+def test_modeled_bytes_drop_at_int8_hierarchical():
+    """Acceptance: cross-pod bytes per sync drop >= 3.5x at int8 with the
+    hierarchical reduce (and already >= 3.5x from quantization alone)."""
+    from benchmarks.overlap import cross_domain_bytes, period_times
+    from benchmarks.hardware import CHIPS
+
+    n = 1.5e9
+    flat32 = cross_domain_bytes(n, n_groups=16)
+    flat8 = cross_domain_bytes(n, n_groups=16, bits=8)
+    hier8 = cross_domain_bytes(n, n_groups=16, bits=8, pods=2,
+                               hierarchical=True)
+    assert flat32 / flat8 >= 3.5
+    assert flat32 / hier8 >= 3.5
+    assert hier8 < flat8  # hierarchy shrinks it further
+    # and the smaller payload shrinks d* in the step-time model
+    chip = CHIPS["a100-perlmutter"]
+    kw = dict(sync_interval=50, sync_delay=0, group_size=4)
+    d32 = period_times(n, 256, chip, **kw)["d_star"]
+    d8 = period_times(n, 256, chip, bits=8, hierarchical=True, pods=4,
+                      **kw)["d_star"]
+    assert d8 < d32
