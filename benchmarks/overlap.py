@@ -44,6 +44,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import warnings
 from typing import Dict, List, Optional
 
 from benchmarks.hardware import CHIPS, Chip
@@ -173,8 +174,16 @@ def resolve_sync_delay(*, n_params: float, n_devices: int, group_size: int,
                        pods: int = 1) -> Optional[int]:
     """d* for ``sync_delay="auto"`` — the smallest delay that fully hides
     the (possibly compressed, hierarchical) outer collective. ``None``
-    when the model has no estimate (no/unknown chip hint)."""
-    if not chip or chip not in CHIPS:
+    when the model has no estimate (no chip hint, or — with a warning
+    rather than a mid-run crash — an unknown one; callers fall back to
+    eager, d*=0)."""
+    if not chip:
+        return None
+    if chip not in CHIPS:
+        warnings.warn(
+            f"unknown chip {chip!r} for sync_delay resolution "
+            f"(known: {', '.join(sorted(CHIPS))}); falling back to "
+            f"eager (d*=0)", stacklevel=2)
         return None
     r = period_times(
         n_params, n_devices, CHIPS[chip],
@@ -204,7 +213,6 @@ def measure_host_loop(delay: int, steps: int = 24) -> Dict[str, float]:
     """Wall-clock the real Trainer at sync_delay 0 vs ``delay`` (CPU smoke)."""
     import time
 
-    import jax
 
     from repro.config import ModelConfig, ParallelConfig, TrainConfig
     from repro.data.pipeline import synthetic_pipeline
@@ -285,6 +293,15 @@ def main(argv=None):
         for k, v in m.items():
             print(f"{k},{v*1e3:.2f}ms")
     if args.json:
+        try:  # name the resolved outer-sync strategy in the summary
+            from repro.sync import strategy_name
+            strategy = strategy_name(
+                bits=args.bits, block=args.block,
+                hierarchical=args.hierarchical, chunks=args.comm_chunks)
+        except ImportError:  # benchmarks-only deployment without src/
+            strategy = None
+        except ValueError:  # bits the runtime has no strategy for (the
+            strategy = None  # bytes model itself allows any width)
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         with open(args.json, "w") as f:
             json.dump({
@@ -293,6 +310,7 @@ def main(argv=None):
                     "sync_interval": args.sync_interval, "bits": args.bits,
                     "block": args.block, "hierarchical": args.hierarchical,
                     "pods": args.pods, "comm_chunks": args.comm_chunks,
+                    "strategy": strategy,
                 },
                 "rows": all_rows,
             }, f, indent=2)

@@ -10,7 +10,6 @@ full artifacts land under experiments/.
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 

@@ -17,7 +17,6 @@ the quantity in the paper's Figs. 5-8 — for all three chip models.
 from __future__ import annotations
 
 import argparse
-import glob
 import json
 import os
 from typing import Dict, List, Optional

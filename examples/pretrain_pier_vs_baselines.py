@@ -51,8 +51,9 @@ def main():
             sync_interval=args.interval, inner_lr=1e-3, inner_min_lr=1e-4,
             lazy_start=(opt != "diloco"), momentum_warmup=(opt == "pier"))
         groups = 1 if opt == "adamw" else args.groups
-        print(f"\n=== {opt} ({groups} group(s), H={args.interval}) ===")
         run = SimulatedRun(mc, tc, num_groups=groups, seed=0)
+        print(f"\n=== {opt} ({groups} group(s), H={args.interval}, "
+              f"outer sync: {run.strategy.name}) ===")
         hist = run.run(args.steps, eval_every=max(args.steps // 6, 1))
         for s, v in zip(hist["val_step"], hist["val_loss"]):
             print(f"  step {s + 1:4d}  val_loss {v:.4f}")

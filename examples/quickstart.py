@@ -16,7 +16,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax  # noqa: E402
 
-from repro.config import ModelConfig, ParallelConfig, TrainConfig  # noqa: E402
+from repro.config import (ModelConfig, OuterCommConfig,  # noqa: E402
+                          ParallelConfig, TrainConfig)
 from repro.data.pipeline import synthetic_pipeline  # noqa: E402
 from repro.launch import mesh as M  # noqa: E402
 from repro.launch.train import Trainer  # noqa: E402
@@ -36,13 +37,19 @@ def main():
         max_position_embeddings=256, dtype="float32")
     tc = TrainConfig(
         optimizer="pier", total_steps=120, global_batch_size=16, seq_len=128,
-        sync_interval=10, warmup_frac=0.25, inner_lr=1e-3, inner_min_lr=1e-4)
+        sync_interval=10, warmup_frac=0.25, inner_lr=1e-3, inner_min_lr=1e-4,
+        # the outer collective is a pluggable strategy (DESIGN.md §7);
+        # all-defaults = flat fp32 pmean of Δθ. Try e.g.
+        # OuterCommConfig(compression="quantize", hierarchical=True,
+        # chunks=2) for the compressed hierarchical chunked collective.
+        outer_comm=OuterCommConfig())
     pc = ParallelConfig(
         data_axis_size=mesh_shape[0] * mesh_shape[1],
         model_axis_size=mesh_shape[2], data_outer=groups)
     mesh = M.small_mesh(mesh_shape, ("data_outer", "data_inner", "model"))
 
     trainer = Trainer(mc, tc, pc, mesh)
+    print(f"outer-sync strategy: {trainer.strategy.name}")
     pipeline = synthetic_pipeline(mesh, M.data_axes(mesh), mc, tc)
     try:
         trainer.run(tc.total_steps, pipeline, log_every=10)

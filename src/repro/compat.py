@@ -23,7 +23,7 @@ imports one spelling. Each symbol degrades to the closest 0.4.x equivalent:
 from __future__ import annotations
 
 import contextlib
-from typing import Any, Callable, Optional, Sequence, Set, Tuple
+from typing import Callable, Sequence, Set, Tuple
 
 import jax
 from jax.sharding import Mesh

@@ -15,7 +15,8 @@ static arguments.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import InitVar, dataclass, field
 from typing import Optional, Tuple, Union
 
 
@@ -194,6 +195,70 @@ class ParallelConfig:
 
 
 # ---------------------------------------------------------------------------
+# Outer-collective configuration (DESIGN.md §6/§7)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class OuterCommConfig:
+    """The outer collective's knobs, grouped (DESIGN.md §7).
+
+    ``repro.sync.resolve_strategy`` maps this onto an ``OuterSyncStrategy``
+    object; the all-defaults config resolves to the flat fp32 pmean of Δθ —
+    the seed collective, bit for bit.
+    """
+
+    # "none" keeps the flat fp32 pmean of Δθ. "quantize" sends blockwise-
+    # quantized Δθ over the slow domain with per-block fp32 absmax scales
+    # and an error-feedback residual (carried in OuterState) so
+    # quantization error is re-injected into the next Δθ instead of
+    # biasing the Nesterov momentum.
+    compression: str = "none"  # none | quantize
+    bits: int = 8  # 4 | 8 (int stored in int8; 4 models packing)
+    block: int = 256  # absmax-scale block (elements per scale)
+    # Two-stage reduce: full-precision psum over the fast intra-pod axis
+    # (data_outer), then exchange over the slow pod axis — only 1/pods of
+    # the traffic crosses the slow domain at full width. Degenerates to the
+    # flat reduce when the mesh has no pod axis.
+    hierarchical: bool = False
+    # Chunked dispatch: the Δθ tree is flattened into this many contiguous
+    # leaf spans dispatched as separate XLA computations, each carrying its
+    # own per-chunk dispatch state so early chunks reduce (and apply) while
+    # later ones are still being quantized. 1 = single fused dispatch.
+    chunks: int = 1
+
+    def __post_init__(self):
+        if self.compression not in ("none", "quantize"):
+            raise ValueError(
+                f"outer compression must be 'none' or 'quantize', "
+                f"got {self.compression!r}")
+        if self.compression == "quantize" and self.bits not in (4, 8):
+            raise ValueError(
+                f"outer comm bits must be 4 or 8, got {self.bits}")
+        if self.block < 1:
+            raise ValueError(
+                f"outer comm block must be >= 1, got {self.block}")
+        if self.chunks < 1:
+            raise ValueError(
+                f"comm chunks must be >= 1, got {self.chunks}")
+
+    def replace(self, **kw) -> "OuterCommConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# Legacy flat TrainConfig fields -> their OuterCommConfig counterparts.
+# Accepted as init-only kwargs (and by TrainConfig.replace) for
+# backward compatibility; reads keep working through properties.
+_LEGACY_COMM_FIELDS = {
+    "outer_compression": "compression",
+    "outer_comm_bits": "bits",
+    "outer_comm_block": "block",
+    "hierarchical_reduce": "hierarchical",
+    "comm_chunks": "chunks",
+}
+
+
+# ---------------------------------------------------------------------------
 # Training / optimizer configuration (Table I of the paper + Pier §IV/§V)
 # ---------------------------------------------------------------------------
 
@@ -232,25 +297,20 @@ class TrainConfig:
     # before the schedule runs (falls back to 0 with no estimate).
     sync_delay: Union[int, str] = 0
 
-    # ---- compressed hierarchical outer collective (DESIGN.md §6) ----
-    # "none" keeps the flat fp32 pmean of Δθ (bit-identical to the seed
-    # path). "quantize" sends blockwise-quantized Δθ over the slow domain
-    # with per-block fp32 absmax scales and an error-feedback residual
-    # (carried in OuterState) so quantization error is re-injected into the
-    # next Δθ instead of biasing the Nesterov momentum.
-    outer_compression: str = "none"  # none | quantize
-    outer_comm_bits: int = 8  # 4 | 8 (int stored in int8; 4 models packing)
-    outer_comm_block: int = 256  # absmax-scale block (elements per scale)
-    # Two-stage reduce: full-precision psum over the fast intra-pod axis
-    # (data_outer), then exchange over the slow pod axis — only 1/pods of
-    # the traffic crosses the slow domain at full width. Degenerates to the
-    # flat reduce when the mesh has no pod axis.
-    hierarchical_reduce: bool = False
-    # Chunked dispatch: the Δθ tree is flattened into this many contiguous
-    # leaf spans dispatched as separate XLA computations, so early chunks
-    # reduce while later ones are still being quantized. 1 = single fused
-    # dispatch (bit-identical to the seed path).
-    comm_chunks: int = 1
+    # ---- outer collective (grouped; DESIGN.md §6/§7) ----
+    # The strategy-defining knobs live in OuterCommConfig;
+    # ``repro.sync.resolve_strategy(tc)`` turns them into the
+    # OuterSyncStrategy object the runtimes consume. ``None`` means "all
+    # defaults" (flat fp32 pmean — the seed collective).
+    outer_comm: Optional[OuterCommConfig] = None
+    # Deprecated flat spellings of the OuterCommConfig knobs. Accepted as
+    # init-only kwargs and folded into ``outer_comm`` (explicit flat values
+    # override the grouped config); reads keep working via properties.
+    outer_compression: InitVar[Optional[str]] = None
+    outer_comm_bits: InitVar[Optional[int]] = None
+    outer_comm_block: InitVar[Optional[int]] = None
+    hierarchical_reduce: InitVar[Optional[bool]] = None
+    comm_chunks: InitVar[Optional[int]] = None
     warmup_frac: float = 0.10  # p: lazy-start proportion
     outer_optimizer: str = "nesterov_torch"  # nesterov_torch | nesterov_classic | sgd
     outer_momentum: float = 0.9  # terminal mu
@@ -278,9 +338,38 @@ class TrainConfig:
     z_loss_coef: float = 0.0
 
     def replace(self, **kw) -> "TrainConfig":
-        return dataclasses.replace(self, **kw)
+        """``dataclasses.replace`` with the legacy-flat-knob shim.
 
-    def __post_init__(self):
+        Legacy keys (``outer_compression``, ``comm_chunks``, ...) are
+        folded into ``outer_comm`` so e.g.
+        ``tc.replace(hierarchical_reduce=True)`` keeps working.
+        """
+        legacy = {k: kw.pop(k) for k in tuple(kw) if k in _LEGACY_COMM_FIELDS}
+        if legacy:
+            _warn_legacy_comm(legacy)
+            base = kw.get("outer_comm") or self.outer_comm or OuterCommConfig()
+            kw["outer_comm"] = base.replace(
+                **{_LEGACY_COMM_FIELDS[k]: v for k, v in legacy.items()})
+        cur = {f.name: getattr(self, f.name)
+               for f in dataclasses.fields(self) if f.init}
+        cur.update(kw)
+        return TrainConfig(**cur)
+
+    def __post_init__(self, outer_compression, outer_comm_bits,
+                      outer_comm_block, hierarchical_reduce, comm_chunks):
+        # ---- legacy flat outer-comm knobs -> grouped OuterCommConfig ----
+        legacy = {k: v for k, v in (
+            ("outer_compression", outer_compression),
+            ("outer_comm_bits", outer_comm_bits),
+            ("outer_comm_block", outer_comm_block),
+            ("hierarchical_reduce", hierarchical_reduce),
+            ("comm_chunks", comm_chunks)) if v is not None}
+        comm = self.outer_comm or OuterCommConfig()
+        if legacy:
+            _warn_legacy_comm(legacy)
+            comm = comm.replace(
+                **{_LEGACY_COMM_FIELDS[k]: v for k, v in legacy.items()})
+        object.__setattr__(self, "outer_comm", comm)
         if isinstance(self.sync_delay, str):
             if self.sync_delay != "auto":
                 raise ValueError(
@@ -295,21 +384,6 @@ class TrainConfig:
                     f"sync_delay ({self.sync_delay}) must be < sync_interval "
                     f"({self.sync_interval}): the in-flight Δθ must be "
                     "applied before the next dispatch")
-        if self.outer_compression not in ("none", "quantize"):
-            raise ValueError(
-                f"outer_compression must be 'none' or 'quantize', "
-                f"got {self.outer_compression!r}")
-        if self.outer_compression == "quantize" \
-                and self.outer_comm_bits not in (4, 8):
-            raise ValueError(
-                f"outer_comm_bits must be 4 or 8, got {self.outer_comm_bits}")
-        if self.outer_comm_block < 1:
-            raise ValueError(
-                f"outer_comm_block must be >= 1, got {self.outer_comm_block}")
-        if self.comm_chunks < 1:
-            raise ValueError(
-                f"comm_chunks must be >= 1, got {self.comm_chunks}")
-
     @property
     def warmup_steps(self) -> int:
         return int(self.total_steps * self.warmup_frac)
@@ -334,6 +408,31 @@ class TrainConfig:
         if frac < self.outer_lr_mid_end:
             return self.outer_lr_mid
         return self.outer_lr_final
+
+
+def _warn_legacy_comm(legacy: dict) -> None:
+    warnings.warn(
+        f"flat TrainConfig outer-collective knobs {sorted(legacy)} are "
+        f"deprecated; use TrainConfig(outer_comm=OuterCommConfig(...)) "
+        f"(see DESIGN.md §7)", DeprecationWarning, stacklevel=3)
+
+
+def _legacy_comm_property(comm_field: str, legacy_name: str):
+    def get(self):
+        return getattr(self.outer_comm, comm_field)
+
+    get.__doc__ = (f"Deprecated read-through for "
+                   f"``outer_comm.{comm_field}`` (legacy ``{legacy_name}``).")
+    return property(get)
+
+
+# The legacy flat names stay readable (tc.outer_compression, ...) —
+# they read through to the grouped config. Installed after class creation
+# because the names double as InitVar parameters of the generated
+# __init__ (the deprecation shim for writes).
+for _legacy, _grouped in _LEGACY_COMM_FIELDS.items():
+    setattr(TrainConfig, _legacy, _legacy_comm_property(_grouped, _legacy))
+del _legacy, _grouped
 
 
 # ---------------------------------------------------------------------------

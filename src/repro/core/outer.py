@@ -56,10 +56,16 @@ class OuterState(NamedTuple):
     residual: Any = None
 
 
-def outer_init(params, tc: TrainConfig, *, num_groups: int = 1) -> OuterState:
+def outer_init(params, tc: TrainConfig, *, num_groups: int = 1,
+               needs_residual: bool = None) -> OuterState:
+    """``needs_residual`` defaults from the config's own strategy; pass it
+    explicitly when an injected strategy overrides the config (the runner
+    keys its specs off the strategy plan, and the state must match)."""
     dt = jnp.dtype(tc.opt_state_dtype)
+    if needs_residual is None:
+        needs_residual = tc.outer_comm.compression != "none"
     residual = None
-    if tc.outer_compression != "none":
+    if needs_residual:
         residual = jax.tree.map(
             lambda p: jnp.zeros((num_groups, *p.shape), jnp.float32), params)
     return OuterState(
@@ -89,7 +95,8 @@ def warmup_accumulate(state: OuterState, params, mu) -> OuterState:
                       residual=state.residual)
 
 
-def compress_delta(delta, residual, tc: TrainConfig, *,
+def compress_delta(delta, residual, tc: TrainConfig = None, *,
+                   bits: int = None, block: int = None,
                    use_pallas: bool = False):
     """Blockwise-quantize one group's Δθ payload with error feedback.
 
@@ -101,9 +108,14 @@ def compress_delta(delta, residual, tc: TrainConfig, *,
     accumulating in the momentum.
 
     ``residual=None`` means a zero residual (first sync / stateless use).
+    ``bits``/``block`` default from ``tc`` (the legacy call shape); the
+    Quantized strategy passes them explicitly.
     Returns (payload_tree_f32, new_residual_tree_f32).
     """
-    bits, block = tc.outer_comm_bits, tc.outer_comm_block
+    if bits is None:
+        bits = tc.outer_comm.bits
+    if block is None:
+        block = tc.outer_comm.block
     if use_pallas:
         from repro.kernels import ops as kops
         quant = lambda x: kops.quantize_blockwise(x, bits=bits, block=block)
@@ -153,14 +165,45 @@ def outer_reduce(
     synchronized model. With ``use_pallas`` the fused update kernel is used
     (single HBM pass over θ/M/Δθ — see kernels/pier_update.py).
     """
-    sdt = jnp.dtype(jax.tree.leaves(state.momentum)[0].dtype)
     new_residual = state.residual if residual is _UNSET else residual
 
+    flat, treedef = jax.tree_util.tree_flatten(state.momentum)
+    a_flat = treedef.flatten_up_to(state.anchor)
+    d_flat = treedef.flatten_up_to(delta_avg)
+    p_new, m_new, anchor_new = outer_reduce_leaves(
+        flat, a_flat, d_flat, tc, mu=mu, lr=lr, use_pallas=use_pallas)
+    unf = jax.tree_util.tree_unflatten
+    new_params = unf(treedef, p_new)
+    new_state = OuterState(
+        momentum=unf(treedef, m_new),
+        anchor=unf(treedef, anchor_new),
+        num_syncs=state.num_syncs + 1,
+        residual=new_residual,
+    )
+    return new_params, new_state
+
+
+def outer_reduce_leaves(m_leaves, a_leaves, d_leaves, tc: TrainConfig, *,
+                        mu, lr, use_pallas: bool = False):
+    """Algorithm 2 lines 19-21 on an explicit leaf span.
+
+    The per-leaf math of :func:`outer_reduce`, factored out so the chunked
+    strategy can run it per contiguous Δθ span (each chunk's own XLA
+    computation) with numerics shared — bitwise — with the fused path.
+    Returns ``(target_leaves_f32, new_momentum_leaves, new_anchor_leaves)``.
+    """
+    if not m_leaves:
+        return [], [], []
+    sdt = jnp.dtype(m_leaves[0].dtype)
     if use_pallas:
         from repro.kernels import ops as kops
 
-        return kops.pier_outer_update(state, delta_avg, tc, mu=mu, lr=lr,
-                                      residual=new_residual)
+        p_new, m_new = [], []
+        for m, a, d in zip(m_leaves, a_leaves, d_leaves):
+            p, mm = kops.pier_update_leaf(a, m, d, tc, mu=mu, lr=lr)
+            p_new.append(p)
+            m_new.append(mm)
+        return p_new, m_new, [p.astype(sdt) for p in p_new]
 
     form = tc.outer_optimizer
 
@@ -180,23 +223,12 @@ def outer_reduce(
         p_new = af + lr * step
         return p_new, m_new.astype(sdt)
 
-    flat, treedef = jax.tree_util.tree_flatten(state.momentum)
-    a_flat = treedef.flatten_up_to(state.anchor)
-    d_flat = treedef.flatten_up_to(delta_avg)
     p_new, m_new = [], []
-    for m, a, d in zip(flat, a_flat, d_flat):
+    for m, a, d in zip(m_leaves, a_leaves, d_leaves):
         p, mm = upd(m, a, d)
         p_new.append(p)
         m_new.append(mm)
-    unf = jax.tree_util.tree_unflatten
-    new_params = unf(treedef, p_new)
-    new_state = OuterState(
-        momentum=unf(treedef, m_new),
-        anchor=jax.tree.map(lambda p: p.astype(sdt), new_params),
-        num_syncs=state.num_syncs + 1,
-        residual=new_residual,
-    )
-    return new_params, new_state
+    return p_new, m_new, [p.astype(sdt) for p in p_new]
 
 
 def outer_apply(target_f32, dispatch_params, current_params):

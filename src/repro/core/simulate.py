@@ -17,42 +17,37 @@ dispatched target is held in flight and installed ``d`` steps later with
 the stale-delta correction, so delayed-schedule convergence can be
 measured without a mesh.
 
-The compressed hierarchical collective (DESIGN.md §6) is modeled
-numerically: with ``outer_compression="quantize"`` each group's Δθ (plus
-its error-feedback residual) is blockwise-quantized and *dequantized*
-before averaging — exactly the value an int8+scales wire format delivers —
-and with ``hierarchical_reduce=True`` and ``num_pods > 1`` the per-group
-deltas are first averaged full-precision inside each pod (the fast
-domain), so only the per-pod payloads are quantized and exchanged. The
-``comm_chunks`` knob is a pure host-dispatch optimization with no numeric
-effect, so the simulator ignores it.
+The outer collective is consumed as a pluggable strategy object
+(``repro/sync/``, DESIGN.md §7), resolved from the config exactly as the
+distributed runner resolves it. The numeric models match the distributed
+path: ``Quantized`` blockwise-quantizes (and *dequantizes* — exactly the
+value an int8+scales wire format delivers) each group's Δθ plus its
+error-feedback residual before averaging; ``Hierarchical`` with
+``num_pods > 1`` first averages the per-group deltas full-precision
+inside each pod (the fast domain), so only the per-pod payloads are
+quantized and exchanged. The ``Chunked`` combinator has no numeric effect
+on dispatch, but the simulator honours its plan at *apply* time: each
+leaf span installs through its own per-chunk apply (in any order — the
+ordering property tests permute them), mirroring the distributed
+per-chunk apply pipeline.
 """
 
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig, TrainConfig
-from repro.core.outer import (OuterState, compress_delta, outer_apply,
-                              outer_init, outer_reduce, warmup_accumulate)
-
-
-def _compress_rows(delta, residual, tc):
-    """Vmapped error-feedback quantization over the leading group/pod axis.
-
-    delta/residual: trees of (G, ...) fp32. Returns (payload, new_residual)
-    with the same shapes — row g is exactly compress_delta on group g.
-    """
-    return jax.vmap(lambda d, r: compress_delta(d, r, tc))(delta, residual)
+from repro.core.outer import (OuterState, outer_apply, outer_init,
+                              warmup_accumulate)
 from repro.core.pier import PierSchedule
+from repro.sync import resolve_strategy
 from repro.data.synthetic import MarkovLM, make_train_batch
 from repro.models import registry as R
-from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.adamw import adamw_init, adamw_update
 from repro.optim.clip import clip_by_global_norm
 from repro.optim.schedules import lr_at
 
@@ -78,6 +73,7 @@ class SimulatedRun:
         self.mc, self.tc = mc, tc
         self.G = num_groups
         self.P = max(num_pods, 1)
+        self.strategy = resolve_strategy(tc)
         self.sched = PierSchedule(tc)
         self.lm = MarkovLM(mc.vocab_size, seed=1234)
         key = jax.random.PRNGKey(seed)
@@ -111,51 +107,22 @@ class SimulatedRun:
 
         self._accumulate = jax.jit(do_accumulate)
 
-        compress = tc.outer_compression != "none"
-        G, P = self.G, self.P
+        P = self.P
+        strategy = self.strategy
+        # the host-side dispatch plan: leaf spans for per-chunk apply
+        self.plan = strategy.plan(params, tc)
 
         def do_dispatch(group_params, outer, mu, lr):
             """Global Δθ mean + Nesterov math -> (target_f32, new outer).
 
-            The knobs-off branch is the seed path, bit for bit. The
-            compressed/hierarchical branch mirrors the distributed
-            two-stage reduce: per-group Δθ -> (optional) full-precision
-            intra-pod mean -> (optional) quantize+dequantize with error
-            feedback -> global mean of the payloads.
+            Delegates to the resolved strategy: FlatFP32 is the seed path,
+            bit for bit; Quantized/Hierarchical mirror the distributed
+            two-stage reduce (per-group Δθ -> optional full-precision
+            intra-pod mean -> optional quantize+dequantize with error
+            feedback -> global mean of the payloads).
             """
-            if not compress and not tc.hierarchical_reduce:
-                mean_params = jax.tree.map(
-                    lambda p: jnp.mean(p.astype(jnp.float32), axis=0),
-                    group_params)
-                delta = jax.tree.map(
-                    lambda m, a: m - a.astype(jnp.float32),
-                    mean_params, outer.anchor)
-                return outer_reduce(outer, delta, tc, mu=mu, lr=lr)
-
-            delta = jax.tree.map(
-                lambda p, a: p.astype(jnp.float32)
-                - a.astype(jnp.float32)[None],
-                group_params, outer.anchor)  # (G, ...)
-            if tc.hierarchical_reduce:
-                # P == 1 degenerates to quantizing the *global* mean once —
-                # exactly the distributed path on a pod-less mesh, where the
-                # stage-1 pmean over the fast axes is already the full reduce
-                # stage 1: full-precision mean over the fast intra-pod axis,
-                # broadcast back so every group in a pod holds the pod mean
-                # (== its quantization input; residuals stay pod-identical)
-                def pod_mean(d):
-                    pm = jnp.mean(d.reshape(P, G // P, *d.shape[1:]), axis=1,
-                                  keepdims=True)
-                    return jnp.broadcast_to(pm, (P, G // P, *d.shape[1:])
-                                            ).reshape(d.shape)
-                delta = jax.tree.map(pod_mean, delta)
-            new_residual = outer.residual
-            if compress:
-                delta, new_residual = _compress_rows(
-                    delta, outer.residual, tc)
-            delta_avg = jax.tree.map(lambda d: jnp.mean(d, axis=0), delta)
-            return outer_reduce(outer, delta_avg, tc, mu=mu, lr=lr,
-                                residual=new_residual)
+            return strategy.sim_dispatch(group_params, outer, tc,
+                                         mu=mu, lr=lr, num_pods=P)
 
         self._dispatch = jax.jit(do_dispatch)
 
@@ -247,14 +214,34 @@ class SimulatedRun:
             st.step += 1
         return hist
 
-    def _apply_inflight(self):
+    def _apply_inflight(self, order=None):
         # No-op when flush() already drained the window — the schedule's
         # apply event is step-based and does not know about early drains.
+        #
+        # With a chunked plan each leaf span installs through its own
+        # per-chunk apply — in ``order`` (span indices; default span
+        # order), modeling the distributed per-chunk pipeline where early
+        # chunks land while late chunks are still in flight. Spans are
+        # disjoint and the correction is per-leaf, so every order is
+        # bit-identical (asserted by the ordering property tests).
         if self._inflight is None:
             return
         st = self.state
         _, target, snapshot = self._inflight
-        st.group_params = self._apply(target, snapshot, st.group_params)
+        spans = self.plan.spans
+        if len(spans) == 1:
+            st.group_params = self._apply(target, snapshot, st.group_params)
+        else:
+            t_flat, treedef = jax.tree_util.tree_flatten(target)
+            s_flat = treedef.flatten_up_to(snapshot)
+            c_flat = treedef.flatten_up_to(st.group_params)
+            for ci in (order if order is not None else range(len(spans))):
+                lo, hi = spans[ci]
+                new = self._apply(tuple(t_flat[lo:hi]),
+                                  tuple(s_flat[lo:hi]),
+                                  tuple(c_flat[lo:hi]))
+                c_flat[lo:hi] = list(new)
+            st.group_params = jax.tree_util.tree_unflatten(treedef, c_flat)
         st.params = jax.tree.map(lambda g: g[0], st.group_params)
         self._inflight = None
 

@@ -13,7 +13,6 @@ import threading
 from typing import Callable, Dict, Iterator, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 

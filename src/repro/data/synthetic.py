@@ -15,7 +15,6 @@ processes — group ``g`` always sees stream ``seed + g``.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

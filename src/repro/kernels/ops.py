@@ -7,13 +7,9 @@ bodies for correctness validation). The same BlockSpecs drive both.
 
 from __future__ import annotations
 
-import functools
-from typing import Any
-
-import jax
 import jax.numpy as jnp
 
-from repro.kernels.backend import default_interpret, on_tpu
+from repro.kernels.backend import default_interpret
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.pier_update import pier_update as _pier_update
 from repro.kernels.quantize import (dequantize_blockwise as _dequantize,
@@ -51,38 +47,19 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0):
 # ---------------------------------------------------------------------------
 
 
-def pier_outer_update(state, delta_avg, tc, *, mu, lr, residual=None):
-    """Drop-in replacement for core.outer.outer_update (use_pallas path).
+def pier_update_leaf(a, m, d, tc, *, mu, lr):
+    """Fused Pier outer update on one leaf (any shape) -> (p_f32, m_new).
 
-    state: OuterState; delta_avg: pytree of fp32 deltas. ``residual`` is the
-    new error-feedback residual to store (compressed collective); ``None``
-    carries the state's own through.
-    Returns (new_params_f32_tree, new OuterState).
+    The single-leaf building block of ``core.outer.outer_reduce_leaves``
+    (the use_pallas path of both the fused and the chunked span-wise
+    outer reduce).
     """
-    from repro.core.outer import OuterState  # local import to avoid cycle
-
-    flat_m, treedef = jax.tree_util.tree_flatten(state.momentum)
-    flat_a = treedef.flatten_up_to(state.anchor)
-    flat_d = treedef.flatten_up_to(delta_avg)
-    new_p, new_m = [], []
-    for m, a, d in zip(flat_m, flat_a, flat_d):
-        shape = m.shape
-        p1, m1 = _pier_update(
-            a.reshape(-1), m.reshape(-1), d.reshape(-1),
-            jnp.asarray(mu, jnp.float32), jnp.asarray(lr, jnp.float32),
-            formulation=tc.outer_optimizer, interpret=_interpret())
-        new_p.append(p1.reshape(shape))
-        new_m.append(m1.reshape(shape).astype(m.dtype))
-    unf = jax.tree_util.tree_unflatten
-    params_f32 = unf(treedef, new_p)
-    sdt = flat_m[0].dtype if flat_m else jnp.float32
-    new_state = OuterState(
-        momentum=unf(treedef, new_m),
-        anchor=jax.tree.map(lambda p: p.astype(sdt), params_f32),
-        num_syncs=state.num_syncs + 1,
-        residual=residual if residual is not None else state.residual,
-    )
-    return params_f32, new_state
+    shape = m.shape
+    p1, m1 = _pier_update(
+        a.reshape(-1), m.reshape(-1), d.reshape(-1),
+        jnp.asarray(mu, jnp.float32), jnp.asarray(lr, jnp.float32),
+        formulation=tc.outer_optimizer, interpret=_interpret())
+    return p1.reshape(shape), m1.reshape(shape).astype(m.dtype)
 
 
 # ---------------------------------------------------------------------------

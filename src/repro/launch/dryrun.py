@@ -27,7 +27,6 @@ Usage:
 
 import argparse
 import json
-import math
 import re
 import subprocess
 import sys
@@ -37,7 +36,6 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import (
     InputShape, INPUT_SHAPES, ModelConfig, ParallelConfig, TrainConfig)
@@ -45,7 +43,6 @@ from repro.configs import assigned_architectures, get_config
 from repro.launch import mesh as M
 from repro.models import registry as R
 from repro.models import transformer as T
-from repro.parallel import sharding as S
 from repro.parallel.steps import build_serve_steps, build_train_steps
 
 DEFAULT_OUT = "experiments/dryrun"

@@ -15,10 +15,8 @@ never touches jax device state.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
-import jax
-import numpy as np
 from jax.sharding import Mesh
 
 from repro import compat

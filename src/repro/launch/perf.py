@@ -14,19 +14,15 @@ overrides}; records land in experiments/perf/<pair>__<variant>.json.
 
 import argparse
 import json
-import sys
 import time
 from typing import Dict
 
-import jax
-import jax.numpy as jnp
 
 from repro.config import INPUT_SHAPES, ParallelConfig, TrainConfig
 from repro.launch import mesh as M
 from repro.launch.dryrun import (
     _compile_record, _mesh_for, auto_microbatches, cost_depths,
     extrapolate_cost, lower_serve, lower_train, resolve_model)
-from repro.models import registry as R
 from repro.models.attention import chunk_policy
 
 # ---------------------------------------------------------------------------
@@ -102,7 +98,6 @@ def run_variant(arch: str, shape_name: str, variant: str,
     if spec.get("ep2d"):
         # widen the expert-parallel axis to (data_inner, model)
         import repro.parallel.sharding as S
-        from jax.sharding import PartitionSpec as P
         orig = S._physical
 
         def patched(logical, *, fsdp, experts):

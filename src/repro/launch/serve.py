@@ -17,7 +17,6 @@ from repro.configs import get_config, get_reduced_config
 from repro.launch import mesh as M
 from repro.models import registry as R
 from repro.parallel.steps import build_serve_steps
-from repro.parallel import sharding as S
 
 
 def main(argv=None):

@@ -19,16 +19,17 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.config import ModelConfig, ParallelConfig, RunConfig, TrainConfig
+from repro.config import (ModelConfig, OuterCommConfig, ParallelConfig,
+                          TrainConfig)
 from repro.configs import get_config, get_reduced_config
 from repro.core import offload
 from repro.core.pier import PierSchedule
 from repro.data.pipeline import synthetic_pipeline
 from repro.launch import mesh as M
 from repro.parallel.steps import build_train_steps
+from repro.sync import ModelDelayController, resolve_strategy
 
 
 def resolve_auto_sync_delay(tc: TrainConfig, mc: ModelConfig,
@@ -36,26 +37,16 @@ def resolve_auto_sync_delay(tc: TrainConfig, mc: ModelConfig,
     """Resolve ``sync_delay="auto"`` to d* from the overlap step-time model.
 
     d* is the smallest delay that fully hides the outer collective given
-    the mesh and a ``chip`` hint (benchmarks/overlap.py). Falls back to 0
-    (eager) whenever the model has no estimate: no/unknown chip hint, or
-    the benchmarks package not importable from this deployment.
+    the mesh and a ``chip`` hint (benchmarks/overlap.py). Warns and falls
+    back to 0 (eager) whenever the model has no estimate: no/unknown chip
+    hint, or the benchmarks package not importable from this deployment.
+    The Trainer itself goes further and *measures* t_comm/t_inner on-line
+    (repro/sync/delay.py); this analytic resolution is the fallback and
+    the standalone entry point.
     """
     if tc.sync_delay != "auto":
         return tc.sync_delay
-    try:
-        from benchmarks.overlap import resolve_sync_delay
-    except ImportError:
-        return 0
-    d = resolve_sync_delay(
-        n_params=mc.param_count(), n_devices=pc.num_devices,
-        group_size=pc.group_size, sync_interval=tc.sync_interval,
-        chip=chip or None,
-        bits=(tc.outer_comm_bits if tc.outer_compression != "none" else 32),
-        block=tc.outer_comm_block,
-        hierarchical=tc.hierarchical_reduce, pods=pc.num_pods)
-    if d is None:
-        return 0
-    return max(0, min(int(d), tc.sync_interval - 1))
+    return ModelDelayController(tc, mc, pc, chip=chip).initial_delay()
 
 
 class Trainer:
@@ -64,13 +55,20 @@ class Trainer:
     def __init__(self, mc: ModelConfig, tc: TrainConfig, pc: ParallelConfig,
                  mesh, *, checkpoint_dir: Optional[str] = None,
                  chip_hint: str = ""):
+        self.strategy = resolve_strategy(tc)
+        # sync_delay="auto": the strategy injects a DelayController —
+        # measured t_comm/t_inner once enough sync windows are observed,
+        # the analytic --chip model (or eager) until then.
+        self.delay_controller = None
         if tc.sync_delay == "auto":
-            tc = tc.replace(sync_delay=resolve_auto_sync_delay(
-                tc, mc, pc, chip=chip_hint))
+            self.delay_controller = self.strategy.make_delay_controller(
+                tc, mc, pc, chip=chip_hint)
+            tc = tc.replace(sync_delay=self.delay_controller.initial_delay())
         self.mc, self.tc, self.pc = mc, tc, pc
         self.mesh = mesh
         self.sched = PierSchedule(tc)
-        self.bundle = build_train_steps(mc, tc, pc, mesh)
+        self.bundle = build_train_steps(mc, tc, pc, mesh,
+                                        strategy=self.strategy)
         self.state = self.bundle.init_state(jax.random.PRNGKey(tc.seed))
         self.outer = self.bundle.init_outer(self.state)
         self.step = 0
@@ -111,17 +109,34 @@ class Trainer:
         step = self.step
         phase = sched.phase(step)
         step_arr = jnp.asarray(step, jnp.int32)
+        t0 = time.perf_counter()
         if phase == "warmup":
             self.state, metrics = self.bundle.warmup_step(
                 self.state, batch, step_arr)
         else:
             self.state, metrics = self.bundle.inner_step(
                 self.state, batch, step_arr)
+        if (self.delay_controller is not None
+                and self.delay_controller.wants_measurement):
+            # materializing the metrics blocks on the inner step — the
+            # wall time is the measured t_inner fed to the controller.
+            # Outside the measurement windows the conversion stays at
+            # return, off the dispatch-enqueue critical path.
+            metrics = {k: float(v) for k, v in metrics.items()}
+            self.delay_controller.observe_step(time.perf_counter() - t0)
         events = sched.events(step)
         fused = (len(events) == 2 and events[0].kind == "dispatch"
                  and events[1].kind == "apply")
-        chunked = self.bundle.dispatch_chunk_steps is not None
-        if fused and not chunked:
+        chunked = self.bundle.chunk_dispatch_steps is not None
+        # while the delay controller still wants t_comm samples the sync
+        # must go through dispatch/apply (bit-identical at d=0); once
+        # measurement is done a resolved d*=0 takes the fused eager step
+        measuring = (self.delay_controller is not None
+                     and self.delay_controller.wants_measurement)
+        if fused and not chunked and not measuring:
+            # a delay re-resolution to 0 can leave the last measured
+            # window's dispatch in flight — install it before the eager step
+            self._apply_inflight()
             self._outer_to_device()
             self.state, self.outer = self.bundle.outer_step(
                 self.state, self.outer,
@@ -137,8 +152,15 @@ class Trainer:
                         jnp.float32(sched.mu_at(step)))
                     self._outer_to_host()
                 elif ev.kind == "dispatch":
+                    # a delay re-resolution may have shrunk the window to
+                    # nothing — never strand (or double-book) an in-flight
+                    # dispatch
+                    self._apply_inflight()
                     dispatch = self._dispatch(step)
-                    self._inflight = (sched.apply_step_for(step), dispatch)
+                    apply_at = self.sched.apply_step_for(step)
+                    self._inflight = (apply_at, dispatch)
+                    if apply_at <= step:
+                        self._apply_inflight()
                 else:  # apply
                     self._apply_inflight()
         self.step += 1
@@ -147,29 +169,52 @@ class Trainer:
     def _dispatch(self, step: int):
         """Launch the outer collective for the sync boundary at ``step``.
 
-        With ``comm_chunks > 1`` the Δθ leaf spans dispatch as separate
-        XLA computations enqueued back to back (none blocks the host), so
-        chunk k's cross-domain reduce overlaps chunk k+1's quantization;
-        the finalize that folds every reduced payload into the Nesterov
-        target is enqueued last and rides the same in-flight window.
+        With a chunked strategy plan the Δθ leaf spans dispatch as
+        separate XLA computations enqueued back to back (none blocks the
+        host), so chunk k's cross-domain reduce overlaps chunk k+1's
+        quantization; each chunk carries its own ChunkDispatch, so the
+        per-chunk applies later install early chunks while late chunks'
+        collectives are still in flight.
+
+        While the delay controller is measuring, the host blocks on the
+        dispatched targets to wall-clock t_comm (overlap is sacrificed for
+        those windows only) and d* is re-resolved from the EMAs.
         """
         sched = self.sched
         mu = jnp.float32(sched.mu_at(step))
         olr = jnp.float32(sched.outer_lr_at(step))
+        ctrl = self.delay_controller
+        measure = ctrl is not None and ctrl.wants_measurement
+        t0 = time.perf_counter() if measure else 0.0
         self._outer_to_device()
-        if self.bundle.dispatch_chunk_steps is not None:
-            payload, res = [], []
-            for chunk in self.bundle.dispatch_chunk_steps:
-                p, r = chunk(self.state, self.outer)
-                payload.extend(p)
-                res.extend(r)
-            dispatch, self.outer = self.bundle.dispatch_finalize_step(
-                self.state, self.outer, tuple(payload), tuple(res), mu, olr)
+        if self.bundle.chunk_dispatch_steps is not None:
+            chunks, chunk_leaves = [], []
+            for chunk_step in self.bundle.chunk_dispatch_steps:
+                chunk, leaves = chunk_step(self.state, self.outer, mu, olr)
+                chunks.append(chunk)
+                chunk_leaves.append(leaves)
+            self.outer = self.bundle.stitch_outer(self.outer, chunk_leaves)
+            dispatch = chunks  # a list marks the per-chunk in-flight shape
         else:
             dispatch, self.outer = self.bundle.dispatch_step(
                 self.state, self.outer, mu, olr)
         self._outer_to_host()
+        if measure:
+            jax.block_until_ready(
+                [c.targets for c in dispatch] if isinstance(dispatch, list)
+                else dispatch.target)
+            ctrl.observe_window(t_comm=time.perf_counter() - t0)
+            self._re_resolve_delay()
         return dispatch
+
+    def _re_resolve_delay(self):
+        """Adopt the controller's current d* for the following windows."""
+        d = self.delay_controller.current_delay()
+        if d != self.tc.sync_delay:
+            print(f"sync_delay re-resolved: {self.tc.sync_delay} -> {d} "
+                  f"(measured t_comm/t_inner)", flush=True)
+            self.tc = self.tc.replace(sync_delay=d)
+            self.sched = PierSchedule(self.tc)
 
     def _apply_inflight(self):
         # The schedule emits apply events purely by step count; if flush()
@@ -178,7 +223,12 @@ class Trainer:
         if self._inflight is None:
             return
         _, dispatch = self._inflight
-        self.state = self.bundle.apply_step(self.state, dispatch)
+        if isinstance(dispatch, list):  # per-chunk apply, span order
+            for chunk, apply_step in zip(dispatch,
+                                         self.bundle.chunk_apply_steps):
+                self.state = apply_step(self.state, chunk)
+        else:
+            self.state = self.bundle.apply_step(self.state, dispatch)
         self._inflight = None
 
     def flush(self):
@@ -294,22 +344,23 @@ def main(argv=None):
         offload_outer_state=args.offload,
         seed=args.seed,
         lazy_start=args.optimizer != "diloco",
-        outer_compression=args.outer_compression,
-        outer_comm_bits=args.outer_comm_bits,
-        hierarchical_reduce=args.hierarchical_reduce,
-        comm_chunks=args.comm_chunks,
+        outer_comm=OuterCommConfig(
+            compression=args.outer_compression,
+            bits=args.outer_comm_bits,
+            hierarchical=args.hierarchical_reduce,
+            chunks=args.comm_chunks),
     )
-    if tc.sync_delay == "auto":
-        d = resolve_auto_sync_delay(tc, mc, pc, chip=args.chip)
-        print(f"sync_delay=auto resolved to d*={d}"
-              f" (chip={args.chip or 'none'})")
-        tc = tc.replace(sync_delay=d)
     print(f"arch={mc.name} optimizer={tc.optimizer} mesh={shape} "
-          f"groups={pc.num_groups} devices={jax.device_count()}")
+          f"groups={pc.num_groups} devices={jax.device_count()} "
+          f"outer_sync={resolve_strategy(tc).name}")
     trainer = Trainer(mc, tc, pc, mesh,
                       checkpoint_dir=args.checkpoint_dir or None,
                       chip_hint=args.chip)
-    pipeline = synthetic_pipeline(mesh, M.data_axes(mesh), mc, tc)
+    if tc.sync_delay == "auto":
+        print(f"sync_delay=auto resolved to d*={trainer.tc.sync_delay} "
+              f"(chip={args.chip or 'none'}; re-resolves from measured "
+              f"sync windows)")
+    pipeline = synthetic_pipeline(mesh, M.data_axes(mesh), mc, trainer.tc)
     try:
         trainer.run(args.steps, pipeline, log_every=args.log_every,
                     ckpt_every=args.ckpt_every)

@@ -14,14 +14,13 @@ Both use exponential gating with the max-tracker stabilizer from the paper.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.models import layers as L
-from repro.parallel.axes import logical_constraint
 
 PF = 2  # mLSTM up-projection factor
 

@@ -14,7 +14,7 @@ MoE architectures replace the MLP with the routed-experts layer from layer
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

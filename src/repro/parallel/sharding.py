@@ -18,7 +18,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.config import ModelConfig, ParallelConfig
+from repro.config import ParallelConfig
 
 # logical axes used in the tables below
 TP = "tp"

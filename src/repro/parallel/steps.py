@@ -22,26 +22,27 @@ Step functions:
   sync (sync_delay>0): dispatch launches the global Δθ pmean + Nesterov math
   without blocking the host, apply installs the target ``d`` steps later with
   the stale-delta correction (see core/outer.py and DESIGN.md).
-- ``dispatch_chunk_steps`` / ``dispatch_finalize_step`` — chunked dispatch
-  (``comm_chunks > 1``, DESIGN.md §6): the Δθ tree is split into contiguous
-  leaf spans, each reduced by its own XLA computation, so early chunks'
-  collectives run while later chunks are still being quantized; finalize
-  consumes the reduced payloads into the Nesterov target.
+- ``chunk_dispatch_steps`` / ``chunk_apply_steps`` — chunked dispatch and
+  per-chunk apply (strategy plans with > 1 span, DESIGN.md §7): the Δθ
+  tree is split into contiguous leaf spans, each reduced by its own XLA
+  computation carrying its own per-chunk :class:`ChunkDispatch`, so early
+  chunks' collectives run while later chunks are still being quantized —
+  and early chunks *apply* (with their partial stale-delta correction)
+  while later chunks' collectives are still in flight.
 - ``serve_step`` / ``prefill_step`` — inference (plain GSPMD, no groups).
 
-The outer collective itself has two orthogonal knobs (DESIGN.md §6), both
-off by default and bit-identical to the flat fp32 pmean when off:
-``hierarchical_reduce`` (full-precision psum over the fast ``data_outer``
-axis first, then exchange over the slow ``pod`` axis) and
-``outer_compression`` (blockwise-quantized payload with an error-feedback
-residual carried group-locally in ``OuterState.residual``).
+The outer collective itself is a pluggable :class:`OuterSyncStrategy`
+(DESIGN.md §7, ``repro/sync/``): the strategy owns the per-leaf reduce
+(flat fp32 pmean — the seed path, bit for bit — or hierarchical two-stage
+and/or blockwise-quantized with an error-feedback residual carried
+group-locally in ``OuterState.residual``) and the chunking plan; this
+module only builds the jitted shard_map scaffolding around it.
 """
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,9 +50,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.config import ModelConfig, ParallelConfig, TrainConfig
-from repro.core.outer import (OuterState, compress_delta, outer_apply,
-                              outer_init, outer_reduce, outer_update,
-                              warmup_accumulate)
+from repro.core.outer import (OuterState, outer_apply, outer_init,
+                              outer_reduce, outer_reduce_leaves,
+                              outer_update, warmup_accumulate)
 from repro.launch import mesh as M
 from repro.models import registry as R
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
@@ -59,6 +60,8 @@ from repro.optim.clip import clip_by_global_norm
 from repro.optim.schedules import lr_at
 from repro.parallel import sharding as S
 from repro.parallel.axes import pier_rules, use_rules
+from repro.sync import (ChunkDispatch, OuterSyncStrategy, ReduceCtx,
+                        SyncPlan, resolve_strategy)
 
 
 class TrainState(NamedTuple):
@@ -84,6 +87,8 @@ class StepBundle:
     mesh: Mesh
     manual: Tuple[str, ...]
     num_groups: int
+    strategy: OuterSyncStrategy
+    plan: SyncPlan
     pspec: Any  # unstacked param specs
     stacked_pspec: Any
     state_shardings: Any
@@ -98,35 +103,16 @@ class StepBundle:
     dispatch_step: Callable
     apply_step: Callable
     eval_step: Callable
-    # chunked dispatch (comm_chunks > 1): one jitted computation per
-    # contiguous Δθ-leaf span, plus the finalize that consumes them all.
-    # None when comm_chunks == 1 (single fused dispatch).
-    dispatch_chunk_steps: Optional[Tuple[Callable, ...]] = None
-    dispatch_finalize_step: Optional[Callable] = None
-
-
-def _balanced_spans(sizes, num_chunks: int):
-    """Split leaf indices into <= num_chunks contiguous spans of ~equal
-    element count (the chunk payloads that dispatch as separate XLA
-    computations). Every span is non-empty."""
-    n = len(sizes)
-    num_chunks = max(1, min(num_chunks, n))
-    total = sum(sizes)
-    spans, lo, acc = [], 0, 0
-    for i, s in enumerate(sizes):
-        acc += s
-        # close the span once it reaches its fair share, keeping enough
-        # leaves behind for the remaining chunks
-        remaining_chunks = num_chunks - len(spans)
-        if (acc >= total * (len(spans) + 1) / num_chunks
-                and n - (i + 1) >= remaining_chunks - 1) or i == n - 1:
-            spans.append((lo, i + 1))
-            lo = i + 1
-            if len(spans) == num_chunks:
-                break
-    if lo < n:  # fold any tail into the last span
-        spans[-1] = (spans[-1][0], n)
-    return spans
+    # chunked dispatch / per-chunk apply (plan.num_chunks > 1): one jitted
+    # dispatch computation per contiguous Δθ-leaf span, each returning its
+    # own ChunkDispatch plus the span's updated outer leaves, and one
+    # jitted apply per span installing that chunk's target. None when the
+    # plan is a single fused span.
+    chunk_dispatch_steps: Optional[Tuple[Callable, ...]] = None
+    chunk_apply_steps: Optional[Tuple[Callable, ...]] = None
+    # host-side: fold the per-chunk outer leaves back into one OuterState
+    # (num_syncs advances exactly once per sync, regardless of chunks).
+    stitch_outer: Optional[Callable] = None
 
 
 def _param_shapes(mc: ModelConfig, scan_layers: bool = False):
@@ -140,8 +126,10 @@ def _stack(tree, g: int):
 
 
 def build_train_steps(
-    mc: ModelConfig, tc: TrainConfig, pc: ParallelConfig, mesh: Mesh
+    mc: ModelConfig, tc: TrainConfig, pc: ParallelConfig, mesh: Mesh,
+    strategy: Optional[OuterSyncStrategy] = None,
 ) -> StepBundle:
+    strategy = strategy if strategy is not None else resolve_strategy(tc)
     manual = M.manual_axes(mesh)
     sizes = M.axis_sizes(mesh)
     G = 1
@@ -168,7 +156,8 @@ def build_train_steps(
         nu=S.stack_spec(opt_spec.nu, manual))
     state_spec = TrainState(params=stacked_pspec, opt=stacked_opt_spec)
     state_shardings = S.shardings(state_spec, mesh)
-    compress = tc.outer_compression != "none"
+    plan = strategy.plan(pshapes, tc, mesh)
+    compress = plan.needs_residual
     # The error-feedback residual is group-local (each group quantizes its
     # own payload), so unlike momentum/anchor it is (G,)-stacked.
     outer_spec = OuterState(
@@ -198,7 +187,8 @@ def build_train_steps(
     def init_outer(state: TrainState) -> OuterState:
         def f(state):
             params = jax.tree.map(lambda x: x[0], state.params)
-            return outer_init(params, tc, num_groups=G)
+            return outer_init(params, tc, num_groups=G,
+                              needs_residual=compress)
         return jax.jit(f, out_shardings=outer_shardings)(state)
 
     # ---- the shared inner/warmup body -------------------------------------
@@ -308,12 +298,18 @@ def build_train_steps(
 
     fast_axes = tuple(a for a in manual if a != "pod")
     slow_axes = tuple(a for a in manual if a == "pod")
+    # The mesh-axis context threaded to the strategy's per-leaf reduce:
+    # the exchange starts at the full manual set; the hierarchical
+    # combinator narrows it to the slow axes after its fast-domain mean.
+    reduce_ctx = ReduceCtx(manual=manual, fast_axes=fast_axes,
+                           slow_axes=slow_axes, exchange_axes=manual,
+                           use_pallas=pc.use_pallas)
 
     def _global_pmean(tree):
         """Flat or two-stage pmean over the manual axes (same mean)."""
         if not manual:
             return tree
-        if tc.hierarchical_reduce:
+        if strategy.two_stage:
             if fast_axes:
                 tree = jax.lax.pmean(tree, fast_axes)
             if slow_axes:
@@ -324,27 +320,11 @@ def build_train_steps(
     def _reduce_delta_leaf(d, r):
         """One Δθ leaf -> (globally averaged payload, new residual | None).
 
-        Knobs off: exactly ``pmean(d, manual)`` — the seed collective, bit
-        for bit. Hierarchical: full-precision psum over the fast intra-pod
-        axes first, so only 1/pods of the traffic crosses the slow domain.
-        Compressed: blockwise quantize+dequantize with error feedback — the
-        dequantized payload is the numeric value of int8+scales on the wire.
+        Delegates to the strategy: flat fp32 pmean is the seed collective
+        bit for bit; hierarchical / quantized strategies stage and
+        compress the payload (DESIGN.md §6/§7).
         """
-        if not compress and not tc.hierarchical_reduce:
-            return (jax.lax.pmean(d, manual) if manual else d), r
-        exchange = manual
-        if tc.hierarchical_reduce and fast_axes:
-            d = jax.lax.pmean(d, fast_axes)  # stage 1: fast domain, fp32
-            exchange = slow_axes
-        if compress:
-            d, r = compress_delta(d, r, tc, use_pallas=pc.use_pallas)
-            if tc.hierarchical_reduce and fast_axes:
-                # the residual stopped varying over the fast axes at the
-                # stage-1 pmean; re-mark it for the stacked P(manual) spec
-                r = compat.pvary(r, fast_axes)
-        if exchange:
-            d = jax.lax.pmean(d, exchange)  # stage 2: slow domain
-        return d, r
+        return strategy.reduce_leaf(d, r, tc, reduce_ctx)
 
     def _reduced_delta(params, outer):
         """(delta_avg tree, new residual tree | None) for one group."""
@@ -441,32 +421,34 @@ def build_train_steps(
     # fresh copy of the params while inner steps keep donating the live ones.
     dispatch_step = jax.jit(dispatch_fn, donate_argnums=(1,))
 
-    # ---- chunked dispatch (comm_chunks > 1) --------------------------------
-    # The Δθ leaves are split into contiguous spans; each span's reduce is
-    # its own jitted computation, so the host enqueues them back to back and
-    # chunk k's collective overlaps chunk k+1's quantization/compute. The
-    # finalize computation consumes every reduced payload into the Nesterov
-    # target — per-leaf math is identical to the fused dispatch, so
-    # chunking never changes numerics.
-    dispatch_chunk_steps = None
-    dispatch_finalize_step = None
-    if tc.comm_chunks > 1:
+    # ---- chunked dispatch + per-chunk apply (plan.num_chunks > 1) ----------
+    # The Δθ leaves are split into contiguous spans; each span's reduce AND
+    # its slice of the Nesterov update is its own jitted computation, so the
+    # host enqueues them back to back and chunk k's collective overlaps
+    # chunk k+1's quantization/compute. Each chunk returns its own
+    # ChunkDispatch (targets + snapshots for the span), so the later
+    # per-chunk applies install early-arriving chunks while late chunks'
+    # collectives are still in flight (partial stale-delta correction per
+    # span). Per-leaf math is identical to the fused dispatch
+    # (outer_reduce_leaves is shared), so chunking never changes numerics.
+    chunk_dispatch_steps = None
+    chunk_apply_steps = None
+    stitch_outer = None
+    if plan.num_chunks > 1:
         pflat_shapes, ptreedef = jax.tree_util.tree_flatten(pshapes)
-        spans = _balanced_spans(
-            [int(functools.reduce(lambda a, b: a * b, l.shape, 1))
-             for l in pflat_shapes],
-            tc.comm_chunks)
+        spans = plan.spans
 
-        def make_chunk_fn(lo, hi):
-            def chunk_body(state, outer):
+        def make_chunk_dispatch(lo, hi):
+            def chunk_body(state, outer, mu, olr):
                 with use_rules(rules):
                     params = jax.tree.map(lambda x: x[0], state.params)
                     p_flat = ptreedef.flatten_up_to(params)
                     a_flat = ptreedef.flatten_up_to(outer.anchor)
+                    m_flat = ptreedef.flatten_up_to(outer.momentum)
                     r_flat = (ptreedef.flatten_up_to(jax.tree.map(
                         lambda x: x[0], outer.residual))
                         if compress else [None] * len(p_flat))
-                    payload, new_res = [], []
+                    payload, new_res, snaps = [], [], []
                     for j in range(lo, hi):
                         d = (p_flat[j].astype(jnp.float32)
                              - a_flat[j].astype(jnp.float32))
@@ -474,56 +456,90 @@ def build_train_steps(
                         payload.append(da)
                         if compress:
                             new_res.append(jnp.expand_dims(nr, 0))
-                    return tuple(payload), tuple(new_res)
+                        snaps.append(jnp.expand_dims(p_flat[j], 0))
+                    targets, new_m, new_anchor = outer_reduce_leaves(
+                        m_flat[lo:hi], a_flat[lo:hi], payload, tc,
+                        mu=mu, lr=olr, use_pallas=pc.use_pallas)
+                    chunk = ChunkDispatch(targets=tuple(targets),
+                                          snapshots=tuple(snaps))
+                    return chunk, (tuple(new_m), tuple(new_anchor),
+                                   tuple(new_res))
 
-            def chunk_fn(state, outer):
-                pay_spec = tuple(P() for _ in range(lo, hi))
-                res_spec = (tuple(P(manual) for _ in range(lo, hi))
-                            if compress else ())
+            def chunk_fn(state, outer, mu, olr):
+                n = hi - lo
+                chunk_spec = ChunkDispatch(
+                    targets=tuple(P() for _ in range(n)),
+                    snapshots=tuple(P(manual) for _ in range(n)))
+                leaves_spec = (tuple(P() for _ in range(n)),
+                               tuple(P() for _ in range(n)),
+                               (tuple(P(manual) for _ in range(n))
+                                if compress else ()))
                 f = compat.shard_map(
                     chunk_body, mesh=mesh,
-                    in_specs=(_sspec(), _ospec()),
-                    out_specs=(pay_spec, res_spec),
+                    in_specs=(_sspec(), _ospec(), P(), P()),
+                    out_specs=(chunk_spec, leaves_spec),
                     axis_names=set(manual))
-                return f(state, outer)
+                return f(state, outer, mu, olr)
 
+            # NOTE: neither state (snapshots force fresh buffers) nor outer
+            # (read by every chunk computation) is donated here; the outer
+            # copy is retired host-side by stitch_outer after the last chunk.
             return jax.jit(chunk_fn)
 
-        dispatch_chunk_steps = tuple(
-            make_chunk_fn(lo, hi) for lo, hi in spans)
+        chunk_dispatch_steps = tuple(
+            make_chunk_dispatch(lo, hi) for lo, hi in spans)
 
-        def finalize_body(state, outer, payload, res_leaves, mu, olr):
-            with use_rules(rules):
-                params = jax.tree.map(lambda x: x[0], state.params)
-                delta = jax.tree_util.tree_unflatten(ptreedef, list(payload))
-                new_res = (jax.tree_util.tree_unflatten(
-                    ptreedef, list(res_leaves)) if compress else None)
-                target_f32, new_outer = outer_reduce(
-                    outer, delta, tc, mu=mu, lr=olr,
-                    use_pallas=pc.use_pallas, **_residual_kw(new_res))
-                dispatch = DispatchState(
-                    target=target_f32,
-                    snapshot=jax.tree.map(lambda x: x[None], params))
-                return dispatch, new_outer
+        def make_chunk_apply(lo, hi):
+            def apply_chunk_body(state, chunk):
+                with use_rules(rules):
+                    params = jax.tree.map(lambda x: x[0], state.params)
+                    p_flat = ptreedef.flatten_up_to(params)
+                    span = tuple(p_flat[lo:hi])
+                    snaps = tuple(s[0] for s in chunk.snapshots)
+                    new_span = outer_apply(chunk.targets, snaps, span)
+                    p_flat[lo:hi] = list(new_span)
+                    new_params = jax.tree_util.tree_unflatten(
+                        ptreedef, p_flat)
+                    return TrainState(
+                        params=jax.tree.map(lambda x: x[None], new_params),
+                        opt=state.opt)
 
-        def finalize_fn(state, outer, payload, res_leaves, mu, olr):
-            sspec, ospec = _sspec(), _ospec()
-            dspec = _dspec(sspec)
-            n_leaves = len(pflat_shapes)
-            pay_spec = tuple(P() for _ in range(n_leaves))
-            res_spec = (tuple(P(manual) for _ in range(n_leaves))
-                        if compress else ())
-            f = compat.shard_map(
-                finalize_body, mesh=mesh,
-                in_specs=(sspec, ospec, pay_spec, res_spec, P(), P()),
-                out_specs=(dspec, ospec),
-                axis_names=set(manual))
-            return f(state, outer, payload, res_leaves, mu, olr)
+            def apply_chunk_fn(state, chunk):
+                n = hi - lo
+                sspec = _sspec()
+                chunk_spec = ChunkDispatch(
+                    targets=tuple(P() for _ in range(n)),
+                    snapshots=tuple(P(manual) for _ in range(n)))
+                f = compat.shard_map(
+                    apply_chunk_body, mesh=mesh,
+                    in_specs=(sspec, chunk_spec),
+                    out_specs=sspec,
+                    axis_names=set(manual))
+                return f(state, chunk)
 
-        # outer is donated like the fused dispatch; chunk computations that
-        # still read it were enqueued first, so the runtime keeps their view
-        # alive (at worst the donation is unusable, never unsound)
-        dispatch_finalize_step = jax.jit(finalize_fn, donate_argnums=(1,))
+            return jax.jit(apply_chunk_fn, donate_argnums=(0, 1))
+
+        chunk_apply_steps = tuple(
+            make_chunk_apply(lo, hi) for lo, hi in spans)
+
+        def stitch_outer(outer, chunk_leaves):
+            """Fold per-chunk outer leaves into one OuterState (host-side).
+
+            ``chunk_leaves`` holds each chunk's (momentum, anchor, residual)
+            span tuples in span order; num_syncs advances exactly once per
+            sync regardless of the chunk count.
+            """
+            m_leaves, a_leaves, r_leaves = [], [], []
+            for nm, na, nr in chunk_leaves:
+                m_leaves.extend(nm)
+                a_leaves.extend(na)
+                r_leaves.extend(nr)
+            unf = jax.tree_util.tree_unflatten
+            return OuterState(
+                momentum=unf(ptreedef, m_leaves),
+                anchor=unf(ptreedef, a_leaves),
+                num_syncs=outer.num_syncs + 1,
+                residual=unf(ptreedef, r_leaves) if compress else None)
 
     def apply_body(state, dispatch):
         with use_rules(rules):
@@ -571,6 +587,7 @@ def build_train_steps(
 
     return StepBundle(
         mesh=mesh, manual=manual, num_groups=G,
+        strategy=strategy, plan=plan,
         pspec=pspec, stacked_pspec=stacked_pspec,
         state_shardings=state_shardings, outer_shardings=outer_shardings,
         batch_sharding=batch_sharding,
@@ -579,8 +596,9 @@ def build_train_steps(
         accumulate_step=accumulate_step, outer_step=outer_step,
         dispatch_step=dispatch_step, apply_step=apply_step,
         eval_step=eval_step,
-        dispatch_chunk_steps=dispatch_chunk_steps,
-        dispatch_finalize_step=dispatch_finalize_step)
+        chunk_dispatch_steps=chunk_dispatch_steps,
+        chunk_apply_steps=chunk_apply_steps,
+        stitch_outer=stitch_outer)
 
 
 # ===========================================================================

@@ -1,0 +1,25 @@
+"""Pluggable outer-sync strategies (DESIGN.md §7).
+
+The outer collective — the only global communication in a Pier run — is a
+first-class, composable object here: ``resolve_strategy(tc)`` maps a
+config (grouped ``OuterCommConfig`` or the legacy flat flags, via the
+deprecation shim) onto an ``OuterSyncStrategy`` consumed by the
+distributed steps, the simulator, and the Trainer.
+"""
+
+from repro.sync.base import (ChunkDispatch, OuterSyncStrategy, ReduceCtx,
+                             SyncPlan, balanced_spans)
+from repro.sync.delay import (DelayController, FixedDelayController,
+                              MeasuredDelayController, ModelDelayController)
+from repro.sync.strategies import (Chunked, FlatFP32, Hierarchical,
+                                   Quantized, resolve_strategy,
+                                   strategy_name)
+
+__all__ = [
+    "ChunkDispatch", "OuterSyncStrategy", "ReduceCtx", "SyncPlan",
+    "balanced_spans",
+    "DelayController", "FixedDelayController", "MeasuredDelayController",
+    "ModelDelayController",
+    "Chunked", "FlatFP32", "Hierarchical", "Quantized",
+    "resolve_strategy", "strategy_name",
+]

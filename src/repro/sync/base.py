@@ -1,0 +1,202 @@
+"""The outer-sync strategy protocol (DESIGN.md §7).
+
+PR 1/2 grew the outer collective three orthogonal knobs (delayed sync,
+blockwise quantization, hierarchical two-stage reduce, chunked dispatch)
+expressed as loose ``TrainConfig`` flags branched on in the distributed
+steps, the simulator, and the Trainer. This module makes the collective a
+first-class object instead: an :class:`OuterSyncStrategy` owns
+
+- **planning** — :meth:`OuterSyncStrategy.plan` splits the Δθ leaf tree
+  into contiguous spans (one per dispatch chunk) and declares whether the
+  strategy carries an error-feedback residual;
+- **dispatch** — :meth:`OuterSyncStrategy.reduce_leaf` is the per-leaf
+  collective run inside the distributed ``shard_map`` (given a
+  :class:`ReduceCtx` naming the mesh axes), and
+  :meth:`OuterSyncStrategy.sim_dispatch` is the simulator's numeric model
+  of the same reduction over ``(G, ...)``-stacked replicas;
+- **apply** — :meth:`OuterSyncStrategy.apply` installs a dispatched target
+  with the stale-delta correction (per chunk, on the chunked combinator);
+- **delay** — :meth:`OuterSyncStrategy.make_delay_controller` is the
+  injection point for resolving ``sync_delay="auto"`` (analytic model or
+  on-line measurement, see :mod:`repro.sync.delay`).
+
+Concrete strategies live in :mod:`repro.sync.strategies`; every legacy
+flag combination resolves (via :func:`repro.sync.strategies.resolve_strategy`)
+to a strategy that is bit-identical to the old flag-branched path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Tuple
+
+import jax
+
+from repro.core.outer import outer_apply, outer_reduce
+
+
+class SyncPlan(NamedTuple):
+    """Host-side dispatch plan for one strategy × param tree.
+
+    ``spans`` are contiguous ``[lo, hi)`` index ranges into the flattened
+    Δθ leaf list; each span dispatches (and applies) as its own XLA
+    computation, carrying its own per-chunk dispatch state.
+    """
+
+    num_leaves: int
+    spans: Tuple[Tuple[int, int], ...]
+    needs_residual: bool
+    name: str
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self.spans)
+
+
+class ChunkDispatch(NamedTuple):
+    """One in-flight chunk (a leaf span) of a dispatched outer sync.
+
+    ``targets`` are the synchronized fp32 leaves for the span (identical
+    across groups); ``snapshots`` the (G,)-stacked θ_dispatch leaves,
+    materialized fresh because inner steps donate the live params during
+    the in-flight window. Apply installs ``target + (θ_t − snapshot)``
+    per leaf — the *partial* stale-delta correction: early-arriving chunks
+    can land while later chunks' collectives are still in flight.
+    """
+
+    targets: Tuple[Any, ...]
+    snapshots: Tuple[Any, ...]
+
+
+@dataclass(frozen=True)
+class ReduceCtx:
+    """Mesh-axis context threaded to :meth:`OuterSyncStrategy.reduce_leaf`.
+
+    ``exchange_axes`` is what the payload exchange reduces over — the full
+    manual set at the top level; the hierarchical combinator narrows it to
+    the slow (pod) axes after its full-precision stage-1 mean.
+    """
+
+    manual: Tuple[str, ...]
+    fast_axes: Tuple[str, ...]
+    slow_axes: Tuple[str, ...]
+    exchange_axes: Tuple[str, ...]
+    use_pallas: bool = False
+
+    def narrowed(self, exchange_axes: Tuple[str, ...]) -> "ReduceCtx":
+        return dataclasses.replace(self, exchange_axes=exchange_axes)
+
+
+def balanced_spans(sizes, num_chunks: int) -> Tuple[Tuple[int, int], ...]:
+    """Split leaf indices into <= num_chunks contiguous spans of ~equal
+    element count (the chunk payloads that dispatch as separate XLA
+    computations). Every span is non-empty."""
+    n = len(sizes)
+    num_chunks = max(1, min(num_chunks, n))
+    total = sum(sizes)
+    spans, lo, acc = [], 0, 0
+    for i, s in enumerate(sizes):
+        acc += s
+        # close the span once it reaches its fair share, keeping enough
+        # leaves behind for the remaining chunks
+        remaining_chunks = num_chunks - len(spans)
+        if (acc >= total * (len(spans) + 1) / num_chunks
+                and n - (i + 1) >= remaining_chunks - 1) or i == n - 1:
+            spans.append((lo, i + 1))
+            lo = i + 1
+            if len(spans) == num_chunks:
+                break
+    if lo < n:  # fold any tail into the last span
+        spans[-1] = (spans[-1][0], n)
+    return tuple(spans)
+
+
+def _leaf_sizes(pshapes):
+    leaves = jax.tree_util.tree_leaves(pshapes)
+    sizes = []
+    for leaf in leaves:
+        n = 1
+        for d in leaf.shape:
+            n *= int(d)
+        sizes.append(n)
+    return sizes
+
+
+class OuterSyncStrategy:
+    """Base class / protocol for outer-sync strategies.
+
+    Subclasses override the per-leaf distributed reduce and the simulator
+    reduction; the dispatch/apply composition and the delay-controller
+    hook are shared.
+    """
+
+    # Whether this strategy carries a per-group error-feedback residual in
+    # ``OuterState.residual`` (compressed payloads only).
+    needs_residual: bool = False
+    # Whether the reduce runs as two stages (fp32 fast-domain mean, then
+    # the payload exchange over the slow domain).
+    two_stage: bool = False
+
+    # ------------------------------------------------------------- identity
+    @property
+    def name(self) -> str:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"<{type(self).__name__} {self.name}>"
+
+    # ------------------------------------------------------------- planning
+    def plan(self, pshapes, tc, mesh=None) -> SyncPlan:
+        """Single fused span by default; the chunked combinator splits."""
+        n = len(jax.tree_util.tree_leaves(pshapes))
+        return SyncPlan(num_leaves=n, spans=((0, n),),
+                        needs_residual=self.needs_residual, name=self.name)
+
+    # ------------------------------------------------- distributed dispatch
+    def reduce_leaf(self, d, r, tc, ctx: ReduceCtx):
+        """One Δθ leaf -> (globally averaged payload, new residual | None).
+
+        Runs inside the distributed ``shard_map``; ``ctx`` names the mesh
+        axes. Must be bit-identical to the legacy flag branch it replaces.
+        """
+        raise NotImplementedError
+
+    # --------------------------------------------------- simulator dispatch
+    def sim_dispatch(self, group_params, outer, tc, *, mu, lr, num_pods=1):
+        """(G, ...)-stacked replicas -> (target_f32, new OuterState).
+
+        Default: per-group Δθ, strategy-specific reduction, then the
+        Nesterov math of :func:`repro.core.outer.outer_reduce`.
+        """
+        import jax.numpy as jnp
+
+        delta = jax.tree.map(
+            lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32)[None],
+            group_params, outer.anchor)
+        delta_avg, new_res = self.sim_reduce(
+            delta, outer.residual, tc, num_pods=num_pods)
+        return outer_reduce(outer, delta_avg, tc, mu=mu, lr=lr,
+                            residual=new_res)
+
+    def sim_reduce(self, delta, residual, tc, *, num_pods=1):
+        """Stacked (G, ...) Δθ -> (averaged payload, new residual)."""
+        raise NotImplementedError
+
+    # ---------------------------------------------------------------- apply
+    def apply(self, target_f32, dispatch_params, current_params):
+        """Install a dispatched target with the stale-delta correction."""
+        return outer_apply(target_f32, dispatch_params, current_params)
+
+    # ------------------------------------------------------ delay injection
+    def make_delay_controller(self, tc, mc, pc, *, chip: str = "",
+                              measured: bool = True):
+        """The ``sync_delay="auto"`` hook: measured d* with the analytic
+        step-time model as fallback (or model-only with measured=False)."""
+        from repro.sync.delay import (MeasuredDelayController,
+                                      ModelDelayController)
+
+        model = ModelDelayController(tc, mc, pc, chip=chip)
+        if not measured:
+            return model
+        return MeasuredDelayController(tc, fallback=model)

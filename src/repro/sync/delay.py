@@ -1,0 +1,161 @@
+"""Delay controllers: how ``sync_delay="auto"`` resolves d*.
+
+d* is the smallest delay (in inner steps) that fully hides the outer
+collective: ``d* = ceil(t_comm / t_inner)``. Two sources for the times:
+
+- :class:`ModelDelayController` — the analytic step-time model of
+  ``benchmarks/overlap.py`` (roofline compute + ring-all-reduce bandwidth
+  terms), keyed by a ``--chip`` hint. Warn-and-fallback to eager (d*=0)
+  on an unknown chip or when the benchmarks package is not deployed.
+- :class:`MeasuredDelayController` — on-line measurement: EMAs of the
+  wall-clock inner-step time and the dispatch-to-ready time of the first
+  few sync windows, re-resolving d* once at least ``min_windows`` windows
+  are measured; before that it defers to the fallback (the model). This
+  replaces the analytic-model-only path: no chip hint needed, and the
+  resolved delay tracks the fabric actually underneath the run.
+
+Controllers are created through the strategy hook
+:meth:`repro.sync.base.OuterSyncStrategy.make_delay_controller`, so a
+custom strategy can inject its own resolution policy.
+"""
+
+from __future__ import annotations
+
+import math
+import warnings
+from typing import Optional
+
+
+class DelayController:
+    """Protocol: decides (and possibly re-decides) the sync delay d*."""
+
+    def initial_delay(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def wants_measurement(self) -> bool:
+        """True while the host loop should wall-clock sync windows for
+        :meth:`observe_window` (the measured controller's warmup)."""
+        return False
+
+    def observe_step(self, t_inner: float) -> None:
+        """Record one inner step's wall-clock seconds."""
+
+    def observe_window(self, *, t_comm: float,
+                       t_inner: Optional[float] = None) -> None:
+        """Record one measured sync window (dispatch-to-ready seconds)."""
+
+    def current_delay(self) -> int:
+        return self.initial_delay()
+
+
+class FixedDelayController(DelayController):
+    def __init__(self, delay: int):
+        self._delay = int(delay)
+
+    def initial_delay(self) -> int:
+        return self._delay
+
+
+class ModelDelayController(DelayController):
+    """Analytic d* from the overlap step-time model (``--chip`` hint).
+
+    Falls back to 0 (eager) with a warning whenever the model has no
+    estimate: no/unknown chip hint, or the benchmarks package not
+    importable from this deployment.
+    """
+
+    def __init__(self, tc, mc, pc, *, chip: str = ""):
+        self.tc, self.mc, self.pc = tc, mc, pc
+        self.chip = chip or ""
+        self._cached: Optional[int] = None
+
+    def initial_delay(self) -> int:
+        if self._cached is not None:
+            return self._cached
+        self._cached = self._resolve()
+        return self._cached
+
+    def _resolve(self) -> int:
+        tc, mc, pc = self.tc, self.mc, self.pc
+        try:
+            from benchmarks.overlap import resolve_sync_delay
+        except ImportError:
+            if self.chip:
+                warnings.warn(
+                    "sync_delay='auto': benchmarks package not importable; "
+                    "falling back to eager (d*=0)", stacklevel=3)
+            return 0
+        comm = tc.outer_comm
+        d = resolve_sync_delay(
+            n_params=mc.param_count(), n_devices=pc.num_devices,
+            group_size=pc.group_size, sync_interval=tc.sync_interval,
+            chip=self.chip or None,
+            bits=(comm.bits if comm.compression != "none" else 32),
+            block=comm.block,
+            hierarchical=comm.hierarchical, pods=pc.num_pods)
+        if d is None:
+            # resolve_sync_delay already warned for an unknown chip; an
+            # empty hint is the documented "no estimate" case.
+            return 0
+        return max(0, min(int(d), tc.sync_interval - 1))
+
+
+class MeasuredDelayController(DelayController):
+    """Measured d*: EMA ``t_comm``/``t_inner`` over the first sync windows.
+
+    The host loop times every inner step (:meth:`observe_step`) and, while
+    :attr:`wants_measurement` is True, blocks on the dispatched collective
+    to wall-clock it (:meth:`observe_window`) — overlap is sacrificed for
+    the measurement windows only. Once ``min_windows`` windows are in,
+    d* = ceil(ema_t_comm / ema_t_inner) clamped to
+    ``[0, sync_interval - 1]``; before that the fallback (analytic model)
+    answers.
+    """
+
+    def __init__(self, tc, *, fallback: Optional[DelayController] = None,
+                 min_windows: int = 2, max_windows: int = 6,
+                 skip_windows: int = 1, ema: float = 0.5):
+        self.tc = tc
+        self.fallback = fallback or FixedDelayController(0)
+        self.min_windows = int(min_windows)
+        self.max_windows = int(max_windows)
+        # the first window(s) wall-clock jit compilation, not the
+        # collective — observed but not folded into the EMA
+        self.skip_windows = int(skip_windows)
+        self.ema = float(ema)
+        self.windows = 0
+        self.t_inner: Optional[float] = None
+        self.t_comm: Optional[float] = None
+
+    def initial_delay(self) -> int:
+        return self.fallback.initial_delay()
+
+    @property
+    def wants_measurement(self) -> bool:
+        return self.windows < self.max_windows
+
+    def _ema(self, old: Optional[float], new: float) -> float:
+        if old is None:
+            return new
+        return self.ema * new + (1.0 - self.ema) * old
+
+    def observe_step(self, t_inner: float) -> None:
+        self.t_inner = self._ema(self.t_inner, t_inner)
+
+    def observe_window(self, *, t_comm: float,
+                       t_inner: Optional[float] = None) -> None:
+        self.windows += 1
+        if self.windows <= self.skip_windows:
+            return
+        self.t_comm = self._ema(self.t_comm, t_comm)
+        if t_inner is not None:
+            self.t_inner = self._ema(self.t_inner, t_inner)
+
+    def current_delay(self) -> int:
+        if (self.windows < self.min_windows + self.skip_windows
+                or not self.t_comm
+                or not self.t_inner or self.t_inner <= 0):
+            return self.fallback.initial_delay()
+        d = math.ceil(self.t_comm / self.t_inner)
+        return max(0, min(int(d), self.tc.sync_interval - 1))

@@ -1,0 +1,220 @@
+"""Concrete outer-sync strategies + the legacy-flag resolver (DESIGN.md §7).
+
+- :class:`FlatFP32` — the seed collective: one flat fp32 pmean of Δθ over
+  every manual (group) axis. Bit-identical to the pre-strategy path.
+- :class:`Quantized` — blockwise-quantized payload (int8/int4 values +
+  per-block fp32 absmax scales) with an error-feedback residual carried
+  group-locally in ``OuterState.residual``.
+- :class:`Hierarchical` — two-stage combinator: full-precision mean over
+  the fast intra-pod axes first, then the *inner* strategy's exchange over
+  the slow pod axes (1/pods of the traffic crosses the slow domain).
+- :class:`Chunked` — span combinator: the Δθ leaf tree dispatches as
+  ``num_chunks`` contiguous spans, each its own XLA computation with its
+  own per-chunk :class:`~repro.sync.base.ChunkDispatch`, so early chunks'
+  collectives (and applies) overlap later chunks' quantization.
+
+:func:`resolve_strategy` maps an :class:`~repro.config.OuterCommConfig`
+(or a ``TrainConfig`` carrying one — including every legacy flat-flag
+combination via the deprecation shim) onto the equivalent strategy object.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.core.outer import compress_delta, outer_reduce
+from repro.sync.base import (OuterSyncStrategy, ReduceCtx, SyncPlan,
+                             balanced_spans, _leaf_sizes)
+
+
+@dataclass(frozen=True)
+class FlatFP32(OuterSyncStrategy):
+    """Flat fp32 pmean of Δθ over the manual axes — the seed collective."""
+
+    @property
+    def name(self) -> str:
+        return "flat-fp32"
+
+    def reduce_leaf(self, d, r, tc, ctx: ReduceCtx):
+        if ctx.exchange_axes:
+            d = jax.lax.pmean(d, ctx.exchange_axes)
+        return d, r
+
+    def sim_dispatch(self, group_params, outer, tc, *, mu, lr, num_pods=1):
+        # Mean the replicas BEFORE subtracting the anchor — the seed
+        # simulator's operation order, preserved bit for bit (mean-then-
+        # subtract and subtract-then-mean agree mathematically, not in
+        # floating point).
+        mean_params = jax.tree.map(
+            lambda p: jnp.mean(p.astype(jnp.float32), axis=0), group_params)
+        delta = jax.tree.map(
+            lambda m, a: m - a.astype(jnp.float32), mean_params, outer.anchor)
+        return outer_reduce(outer, delta, tc, mu=mu, lr=lr)
+
+    def sim_reduce(self, delta, residual, tc, *, num_pods=1):
+        return jax.tree.map(lambda d: jnp.mean(d, axis=0), delta), residual
+
+
+@dataclass(frozen=True)
+class Quantized(OuterSyncStrategy):
+    """Blockwise-quantized Δθ payload with error feedback.
+
+    Each group (or pod, under :class:`Hierarchical`) quantizes its payload
+    to ``bits`` with per-``block`` fp32 absmax scales; the *dequantized*
+    value — exactly what int8+scales deliver on the wire — is exchanged,
+    and what quantization dropped is carried in the residual so the error
+    telescopes across syncs instead of biasing the Nesterov momentum.
+    """
+
+    bits: int = 8
+    block: int = 256
+
+    needs_residual = True
+
+    @property
+    def name(self) -> str:
+        return f"quantized(int{self.bits},block={self.block})"
+
+    def reduce_leaf(self, d, r, tc, ctx: ReduceCtx):
+        d, r = compress_delta(d, r, bits=self.bits, block=self.block,
+                              use_pallas=ctx.use_pallas)
+        if ctx.exchange_axes:
+            d = jax.lax.pmean(d, ctx.exchange_axes)
+        return d, r
+
+    def sim_reduce(self, delta, residual, tc, *, num_pods=1):
+        payload, new_res = jax.vmap(
+            lambda d, r: compress_delta(d, r, bits=self.bits,
+                                        block=self.block))(delta, residual)
+        return jax.tree.map(lambda d: jnp.mean(d, axis=0), payload), new_res
+
+
+@dataclass(frozen=True)
+class Hierarchical(OuterSyncStrategy):
+    """Two-stage reduce: fp32 intra-pod mean, then ``inner``'s exchange
+    over the slow pod axes. Degenerates to ``inner`` over the full manual
+    set on a pod-less mesh (where the fast-domain mean is already the full
+    reduce)."""
+
+    inner: OuterSyncStrategy = FlatFP32()
+
+    two_stage = True
+
+    @property
+    def name(self) -> str:
+        return f"hierarchical[{self.inner.name}]"
+
+    @property
+    def needs_residual(self) -> bool:  # type: ignore[override]
+        return self.inner.needs_residual
+
+    def reduce_leaf(self, d, r, tc, ctx: ReduceCtx):
+        inner_ctx = ctx
+        if ctx.fast_axes:
+            d = jax.lax.pmean(d, ctx.fast_axes)  # stage 1: fast domain, fp32
+            inner_ctx = ctx.narrowed(ctx.slow_axes)
+        d, r = self.inner.reduce_leaf(d, r, tc, inner_ctx)
+        if r is not None and ctx.fast_axes and self.inner.needs_residual:
+            # the residual stopped varying over the fast axes at the
+            # stage-1 pmean; re-mark it for the stacked P(manual) spec
+            r = compat.pvary(r, ctx.fast_axes)
+        return d, r
+
+    def sim_reduce(self, delta, residual, tc, *, num_pods=1):
+        P = max(num_pods, 1)
+
+        # stage 1: full-precision mean over the fast intra-pod axis,
+        # broadcast back so every group in a pod holds the pod mean
+        # (== its payload input; residuals stay pod-identical). P == 1
+        # degenerates to reducing the *global* mean once — exactly the
+        # distributed path on a pod-less mesh.
+        def pod_mean(d):
+            G = d.shape[0]
+            pm = jnp.mean(d.reshape(P, G // P, *d.shape[1:]), axis=1,
+                          keepdims=True)
+            return jnp.broadcast_to(pm, (P, G // P, *d.shape[1:])
+                                    ).reshape(d.shape)
+
+        delta = jax.tree.map(pod_mean, delta)
+        return self.inner.sim_reduce(delta, residual, tc, num_pods=num_pods)
+
+
+@dataclass(frozen=True)
+class Chunked(OuterSyncStrategy):
+    """Span combinator: dispatch the Δθ leaf tree as ``num_chunks``
+    contiguous spans, each its own XLA computation over ``inner``'s
+    reduction, each carrying its own per-chunk dispatch state so apply can
+    start on early-arriving chunks. Numerically identical to ``inner``
+    (the per-leaf math never changes); only host dispatch order does."""
+
+    inner: OuterSyncStrategy = FlatFP32()
+    num_chunks: int = 2
+
+    @property
+    def name(self) -> str:
+        return f"chunked({self.num_chunks})[{self.inner.name}]"
+
+    @property
+    def needs_residual(self) -> bool:  # type: ignore[override]
+        return self.inner.needs_residual
+
+    @property
+    def two_stage(self) -> bool:  # type: ignore[override]
+        return self.inner.two_stage
+
+    def plan(self, pshapes, tc, mesh=None) -> SyncPlan:
+        sizes = _leaf_sizes(pshapes)
+        spans = balanced_spans(sizes, self.num_chunks)
+        return SyncPlan(num_leaves=len(sizes), spans=spans,
+                        needs_residual=self.needs_residual, name=self.name)
+
+    def reduce_leaf(self, d, r, tc, ctx: ReduceCtx):
+        return self.inner.reduce_leaf(d, r, tc, ctx)
+
+    def sim_dispatch(self, group_params, outer, tc, *, mu, lr, num_pods=1):
+        return self.inner.sim_dispatch(group_params, outer, tc, mu=mu,
+                                       lr=lr, num_pods=num_pods)
+
+    def sim_reduce(self, delta, residual, tc, *, num_pods=1):
+        return self.inner.sim_reduce(delta, residual, tc, num_pods=num_pods)
+
+
+# ---------------------------------------------------------------------------
+# resolution
+# ---------------------------------------------------------------------------
+
+
+def resolve_strategy(cfg) -> OuterSyncStrategy:
+    """Map an ``OuterCommConfig`` (or a ``TrainConfig`` carrying one) onto
+    the equivalent strategy object. Every legacy flat-flag combination
+    resolves here — the strategies are bit-identical to the flag branches
+    they replaced (asserted by tests/test_sync_strategies.py)."""
+    comm = getattr(cfg, "outer_comm", cfg)
+    core: OuterSyncStrategy
+    if comm.compression == "quantize":
+        core = Quantized(bits=comm.bits, block=comm.block)
+    elif comm.compression == "none":
+        core = FlatFP32()
+    else:
+        raise ValueError(f"unknown outer compression {comm.compression!r}")
+    if comm.hierarchical:
+        core = Hierarchical(inner=core)
+    if comm.chunks > 1:
+        core = Chunked(inner=core, num_chunks=comm.chunks)
+    return core
+
+
+def strategy_name(*, bits: int = 32, block: int = 256,
+                  hierarchical: bool = False, chunks: int = 1) -> str:
+    """Resolved-strategy name for benchmark knobs (bits >= 32 = fp32)."""
+    from repro.config import OuterCommConfig
+
+    comm = OuterCommConfig(
+        compression="none" if bits >= 32 else "quantize",
+        bits=bits if bits < 32 else 8, block=block,
+        hierarchical=hierarchical, chunks=chunks)
+    return resolve_strategy(comm).name

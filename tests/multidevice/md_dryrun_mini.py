@@ -11,7 +11,6 @@ from repro.launch.dryrun import (  # noqa: E402  (must be first: sets XLA_FLAGS)
     make_train_batch_specs)
 
 import jax
-import jax.numpy as jnp
 
 from repro.config import ParallelConfig, TrainConfig, InputShape
 from repro.configs import get_reduced_config

@@ -9,7 +9,7 @@ import numpy as np
 
 from repro.config import ModelConfig, TrainConfig, ParallelConfig
 from repro.core.simulate import SimulatedRun
-from repro.launch.mesh import small_mesh, data_axes
+from repro.launch.mesh import small_mesh
 from repro.launch.train import Trainer
 
 assert jax.device_count() == 8
@@ -110,5 +110,21 @@ assert worst < 5e-4, worst
 # group-local residuals survived the round trip on both sides
 assert any(float(jnp.abs(r).max()) > 0
            for r in jax.tree.leaves(trainer_q.outer.residual))
+
+# ---- chunked dispatch + per-chunk apply: bitwise == the unchunked
+# delayed Trainer on the same mesh (spans only repartition host dispatch;
+# each chunk installs through its own apply with a per-span correction) ----
+tc_c = tc_d.replace(comm_chunks=3)
+trainer_c = Trainer(mc, tc_c, pc, mesh)
+assert trainer_c.bundle.plan.num_chunks == 3
+for step in range(16):  # sim_d's batch stream is pure in (seed, step)
+    batch = sim_d._global_batch(step)
+    dist_batch = jax.device_put(
+        batch, trainer_c.bundle.batch_sharding(batch))
+    trainer_c.train_step(dist_batch)
+for a, b in zip(jax.tree.leaves(trainer_d.state.params),
+                jax.tree.leaves(trainer_c.state.params)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("chunked(3) delayed Trainer bitwise == unchunked")
 
 print("MD_EQUIVALENCE_OK")

@@ -5,7 +5,6 @@ Exits non-zero on failure.
 """
 
 import re
-from collections import Counter
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,7 @@ import numpy as np
 import pytest
 from _hyp import given, settings, st  # hypothesis, or example-based shim
 
-from repro.config import ModelConfig, ParallelConfig, TrainConfig
+from repro.config import ParallelConfig, TrainConfig
 from repro.core.outer import compress_delta, outer_init
 from repro.core.simulate import SimulatedRun
 from repro.kernels import ops as kops

@@ -1,6 +1,5 @@
 """Data pipeline determinism + checkpoint roundtrip/resume."""
 
-import os
 
 import jax
 import jax.numpy as jnp

@@ -10,8 +10,6 @@ pytest.importorskip("jax")
 # a controlled import of the functions only.
 import importlib.util
 import os
-import sys
-import types
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro", "launch",
                    "dryrun.py")

@@ -1,9 +1,7 @@
 """AdamW / clipping / LR schedule unit tests against hand-rolled references."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, st  # hypothesis, or example-based shim
 
 from repro.config import TrainConfig

@@ -1,7 +1,6 @@
 """Pier outer optimizer: Algorithm 1 & 2 algebra, incl. the PyTorch-Nesterov
 formulation equivalence the paper discusses in §V."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

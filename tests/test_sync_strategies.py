@@ -1,0 +1,410 @@
+"""Pluggable outer-sync strategy API (DESIGN.md §7).
+
+The contract under test:
+
+- **Config shim**: every legacy flat flag combination (``outer_compression``
+  × ``hierarchical_reduce`` × ``comm_chunks`` × ``sync_delay``) folds into
+  the grouped ``OuterCommConfig`` (with a DeprecationWarning), reads back
+  through the legacy properties, survives ``replace()`` round-trips, and
+  resolves to the expected strategy object.
+- **Equivalence matrix**: a legacy-flag config and its grouped
+  ``OuterCommConfig`` spelling produce bit-identical params/momentum on the
+  simulator, for every combination the legacy tests cover. (Bit-identity of
+  the strategy path to the *pre-refactor* numerics is pinned separately by
+  tests/test_delayed_sync.py's inlined legacy loop and
+  tests/test_compression.py's knobs-off/int8 suites, which predate the
+  strategy API and must keep passing unchanged.)
+- **Per-chunk apply**: a chunked plan installs each leaf span through its
+  own per-chunk apply; spans are disjoint, so any apply order is
+  bit-identical (property test over permutations), the distributed
+  per-chunk apply reproduces the unchunked Trainer bitwise, and
+  ``comm_chunks > 1, sync_delay > 0`` converges within the same 5% bound
+  used by tests/test_delayed_sync.py.
+- **Delay controllers**: ``MeasuredDelayController`` defers to the
+  analytic-model fallback below 2 measured windows and re-resolves
+  d* = ceil(t_comm/t_inner) (clamped) after; unknown ``--chip`` values
+  warn and fall back to eager instead of raising mid-run.
+"""
+
+import itertools
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis, or example-based shim
+
+from repro.config import OuterCommConfig, ParallelConfig, TrainConfig
+from repro.core.simulate import SimulatedRun
+from repro.sync import (Chunked, FlatFP32, Hierarchical, MeasuredDelayController,
+                        ModelDelayController, Quantized, balanced_spans,
+                        resolve_strategy, strategy_name)
+from test_delayed_sync import MC, _tc
+
+BLOCK = 64
+
+
+def _legacy_tc(compression, hier, chunks, delay, **kw):
+    base = dict(total_steps=40, global_batch_size=8, seq_len=16,
+                sync_interval=5, inner_lr=1e-3, inner_min_lr=1e-4,
+                warmup_frac=0.25, sync_delay=delay,
+                outer_compression=compression, outer_comm_block=BLOCK,
+                hierarchical_reduce=hier, comm_chunks=chunks)
+    base.update(kw)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return TrainConfig(**base)
+
+
+def _grouped_tc(compression, hier, chunks, delay, **kw):
+    base = dict(total_steps=40, global_batch_size=8, seq_len=16,
+                sync_interval=5, inner_lr=1e-3, inner_min_lr=1e-4,
+                warmup_frac=0.25, sync_delay=delay,
+                outer_comm=OuterCommConfig(
+                    compression=compression, block=BLOCK,
+                    hierarchical=hier, chunks=chunks))
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# config shim
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_flags_fold_into_outer_comm_with_deprecation():
+    with pytest.warns(DeprecationWarning):
+        tc = TrainConfig(outer_compression="quantize", outer_comm_bits=4,
+                         outer_comm_block=32, hierarchical_reduce=True,
+                         comm_chunks=3)
+    assert tc.outer_comm == OuterCommConfig(
+        compression="quantize", bits=4, block=32, hierarchical=True,
+        chunks=3)
+    # legacy reads go through the grouped config
+    assert tc.outer_compression == "quantize"
+    assert tc.outer_comm_bits == 4
+    assert tc.outer_comm_block == 32
+    assert tc.hierarchical_reduce is True
+    assert tc.comm_chunks == 3
+
+
+def test_grouped_config_replace_roundtrips():
+    tc = TrainConfig(outer_comm=OuterCommConfig(compression="quantize"))
+    assert tc.outer_comm.compression == "quantize"
+    # a legacy-key replace folds into the grouped config...
+    with pytest.warns(DeprecationWarning):
+        tc2 = tc.replace(comm_chunks=4)
+    assert tc2.outer_comm.chunks == 4
+    assert tc2.outer_comm.compression == "quantize"
+    # ...a grouped replace swaps it wholesale...
+    tc3 = tc2.replace(outer_comm=OuterCommConfig(hierarchical=True))
+    assert tc3.outer_comm == OuterCommConfig(hierarchical=True)
+    # ...and non-comm replaces carry it through unchanged.
+    tc4 = tc3.replace(sync_delay=2, sync_interval=9)
+    assert tc4.outer_comm == tc3.outer_comm
+    assert tc4.replace() == tc4
+
+
+def test_grouped_config_validation():
+    with pytest.raises(ValueError):
+        OuterCommConfig(compression="int8")
+    with pytest.raises(ValueError):
+        OuterCommConfig(compression="quantize", bits=5)
+    with pytest.raises(ValueError):
+        OuterCommConfig(chunks=0)
+    with pytest.raises(ValueError):
+        OuterCommConfig(block=0)
+
+
+# ---------------------------------------------------------------------------
+# strategy resolution
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_strategy_structure():
+    assert resolve_strategy(OuterCommConfig()) == FlatFP32()
+    assert resolve_strategy(OuterCommConfig(
+        compression="quantize", bits=4, block=32)) == Quantized(4, 32)
+    assert resolve_strategy(OuterCommConfig(hierarchical=True)) \
+        == Hierarchical(inner=FlatFP32())
+    s = resolve_strategy(OuterCommConfig(
+        compression="quantize", hierarchical=True, chunks=3))
+    assert s == Chunked(inner=Hierarchical(inner=Quantized(8, 256)),
+                        num_chunks=3)
+    assert s.needs_residual and s.two_stage
+    # TrainConfig carrying the grouped (or legacy) knobs resolves the same
+    tc = _legacy_tc("quantize", True, 3, 0, outer_comm_bits=8,
+                    outer_comm_block=256)
+    assert resolve_strategy(tc) == s
+
+
+def test_strategy_names():
+    assert strategy_name() == "flat-fp32"
+    assert strategy_name(bits=8, hierarchical=True) \
+        == "hierarchical[quantized(int8,block=256)]"
+    assert strategy_name(bits=4, block=64, chunks=2) \
+        == "chunked(2)[quantized(int4,block=64)]"
+    assert strategy_name(chunks=4) == "chunked(4)[flat-fp32]"
+
+
+def test_balanced_spans_cover_and_order():
+    spans = balanced_spans([5, 1, 1, 10, 2, 2], 3)
+    assert spans[0][0] == 0 and spans[-1][1] == 6
+    for (a, b), (c, d) in zip(spans, spans[1:]):
+        assert b == c and a < b and c < d
+    assert balanced_spans([3], 4) == ((0, 1),)
+
+
+# ---------------------------------------------------------------------------
+# equivalence matrix: legacy flat flags == grouped OuterCommConfig
+# ---------------------------------------------------------------------------
+
+MATRIX = list(itertools.product(
+    ("none", "quantize"), (False, True), (1, 3), (0, 2)))
+
+
+@pytest.mark.parametrize("compression,hier,chunks,delay", MATRIX)
+def test_legacy_flags_resolve_identically_to_grouped_config(
+        compression, hier, chunks, delay):
+    """Every (compression × hierarchy × chunks × delay) legacy flag
+    combination covered by test_compression.py / test_delayed_sync.py
+    folds into a TrainConfig *equal* to its grouped spelling and resolves
+    to the same strategy — equal frozen configs drive the deterministic
+    simulator/distributed paths identically (run-level bit-identity is
+    additionally asserted on representative combos below)."""
+    legacy = _legacy_tc(compression, hier, chunks, delay)
+    grouped = _grouped_tc(compression, hier, chunks, delay)
+    assert legacy == grouped
+    assert hash(legacy) == hash(grouped)
+    assert resolve_strategy(legacy) == resolve_strategy(grouped)
+
+
+@pytest.mark.parametrize("compression,hier,chunks,delay",
+                         [("none", True, 1, 2), ("quantize", False, 2, 2)])
+def test_legacy_flags_bit_identical_to_grouped_config_sim(
+        compression, hier, chunks, delay):
+    """Run-level half of the equivalence matrix: legacy-flag and grouped
+    configs produce bit-identical simulator params/momentum."""
+    legacy = _legacy_tc(compression, hier, chunks, delay)
+    grouped = _grouped_tc(compression, hier, chunks, delay)
+    a = SimulatedRun(MC, legacy, num_groups=2, seed=0)
+    a.run(25)
+    b = SimulatedRun(MC, grouped, num_groups=2, seed=0)
+    b.run(25)
+    for x, y in zip(jax.tree.leaves(a.state.group_params),
+                    jax.tree.leaves(b.state.group_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    for x, y in zip(jax.tree.leaves(a.state.outer.momentum),
+                    jax.tree.leaves(b.state.outer.momentum)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# per-chunk apply: ordering / interleaving properties
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mid_flight_chunked():
+    """One chunked run paused mid-flight (dispatch at 14, apply due 16),
+    shared by the ordering/interleaving tests (its in-flight tuple is
+    read-only for them)."""
+    tc = _legacy_tc("none", False, 3, 2)
+    r = SimulatedRun(MC, tc, num_groups=2, seed=0)
+    r.run(15)
+    assert r._inflight is not None
+    return r
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=8, deadline=None)
+def test_per_chunk_apply_order_invariant(mid_flight_chunked, seed):
+    """Chunks install disjoint leaf spans with per-span corrections, so
+    every apply order (early-arriving chunk first, reversed, shuffled)
+    lands bit-identically — exercised through the simulator's own
+    per-chunk apply path, restoring the in-flight state between orders."""
+    r = mid_flight_chunked
+    saved_inflight = r._inflight
+    saved_group = r.state.group_params
+    saved_params = r.state.params
+    assert saved_inflight is not None
+
+    def apply_in_order(order):
+        r._inflight = saved_inflight
+        r.state.group_params = saved_group
+        r.state.params = saved_params
+        r._apply_inflight(order=order)
+        leaves = jax.tree.leaves(r.state.group_params)
+        # restore the mid-flight state for the next order / test
+        r._inflight = saved_inflight
+        r.state.group_params = saved_group
+        r.state.params = saved_params
+        return leaves
+
+    rng = np.random.default_rng(seed)
+    n = r.plan.num_chunks
+    ref = apply_in_order(list(range(n)))
+    for order in (list(range(n))[::-1], list(rng.permutation(n))):
+        got = apply_in_order(order)
+        for x, y in zip(ref, got):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_per_chunk_apply_interleaves_with_inner_steps(mid_flight_chunked):
+    """Between dispatch and the per-chunk applies the groups keep training;
+    the partial corrections preserve that in-flight progress exactly as
+    the fused apply does (bitwise, since spans partition the leaves)."""
+    r = mid_flight_chunked
+    leaf = jax.tree.leaves(r.state.group_params)[0]
+    assert float(jnp.abs(leaf[0] - leaf[1]).max()) > 0  # still diverged
+    r.run(2)  # apply lands at 16, span by span
+    assert r._inflight is None
+    ref = SimulatedRun(MC, _tc(sync_delay=2), num_groups=2, seed=0)
+    ref.run(17)
+    for x, y in zip(jax.tree.leaves(ref.state.group_params),
+                    jax.tree.leaves(r.state.group_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_per_chunk_apply_convergence_within_5pct():
+    """comm_chunks>1 with sync_delay>0 (the per-chunk apply pipeline, with
+    a quantized payload) stays within the 5% bound of the eager fp32
+    baseline — the acceptance bound of tests/test_delayed_sync.py."""
+    tc = _tc(total_steps=60, warmup_frac=0.2, sync_interval=5)
+    eager = SimulatedRun(MC, tc, num_groups=2, seed=0)
+    he = eager.run(60, eval_every=60)
+    tcc = _legacy_tc("quantize", False, 3, 2, total_steps=60,
+                     warmup_frac=0.2, sync_interval=5)
+    chunked = SimulatedRun(MC, tcc, num_groups=2, seed=0)
+    hc = chunked.run(60, eval_every=60)
+    ve, vc = he["val_loss"][-1], hc["val_loss"][-1]
+    assert vc <= ve * 1.05, (ve, vc)
+
+
+# ---------------------------------------------------------------------------
+# distributed path: grouped config == legacy flags, per-chunk apply bitwise
+# ---------------------------------------------------------------------------
+
+
+def _trainer_run(tc, steps=20):
+    from repro.data.pipeline import synthetic_pipeline
+    from repro.launch import mesh as M
+    from repro.launch.train import Trainer
+
+    pc = ParallelConfig(data_axis_size=1, model_axis_size=1, data_outer=1)
+    mesh = M.small_mesh((1, 1, 1), ("data_outer", "data_inner", "model"))
+    tr = Trainer(MC, tc, pc, mesh)
+    pipe = synthetic_pipeline(mesh, M.data_axes(mesh), MC, tr.tc)
+    try:
+        tr.run(steps, pipe, log_every=0)
+    finally:
+        pipe.close()
+    return tr
+
+
+def test_distributed_grouped_config_matches_legacy_flags():
+    base = dict(optimizer="pier", total_steps=20, global_batch_size=4,
+                seq_len=16, sync_interval=4, warmup_frac=0.25, seed=0)
+    legacy = _trainer_run(TrainConfig(
+        **base, sync_delay=2, comm_chunks=2, outer_compression="quantize",
+        outer_comm_block=BLOCK))
+    grouped = _trainer_run(TrainConfig(
+        **base, sync_delay=2, outer_comm=OuterCommConfig(
+            compression="quantize", block=BLOCK, chunks=2)))
+    assert legacy.strategy == grouped.strategy
+    for a, b in zip(jax.tree.leaves(legacy.state.params),
+                    jax.tree.leaves(grouped.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(legacy.outer.residual),
+                    jax.tree.leaves(grouped.outer.residual)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# delay controllers
+# ---------------------------------------------------------------------------
+
+
+def test_measured_delay_falls_back_below_two_windows():
+    tc = _tc(sync_delay=4, sync_interval=10)
+    model = ModelDelayController(tc, MC, ParallelConfig(), chip="")
+    ctrl = MeasuredDelayController(tc, fallback=model, skip_windows=1)
+    assert ctrl.initial_delay() == 0  # no chip hint -> model says eager
+    assert ctrl.current_delay() == 0  # no windows yet -> fallback
+    ctrl.observe_step(t_inner=0.01)
+    ctrl.observe_window(t_comm=5.0)  # compile-dominated, skipped
+    ctrl.observe_window(t_comm=0.05)
+    assert ctrl.current_delay() == 0  # only 1 measured window -> fallback
+    ctrl.observe_window(t_comm=0.05)
+    # >= 2 measured windows: d* = ceil(0.05 / 0.01) = 5
+    assert ctrl.current_delay() == 5
+
+
+def test_measured_delay_clamps_to_sync_interval():
+    tc = _tc(sync_delay=0, sync_interval=5)
+    ctrl = MeasuredDelayController(tc, skip_windows=0)
+    for _ in range(3):
+        ctrl.observe_step(t_inner=0.001)
+        ctrl.observe_window(t_comm=10.0)
+    assert ctrl.current_delay() == tc.sync_interval - 1
+    assert not ctrl.wants_measurement or ctrl.windows < ctrl.max_windows
+
+
+def test_measured_delay_stops_measuring_after_max_windows():
+    ctrl = MeasuredDelayController(_tc(), min_windows=2, max_windows=3,
+                                   skip_windows=0)
+    assert ctrl.wants_measurement
+    for _ in range(3):
+        ctrl.observe_window(t_comm=0.1, t_inner=0.1)
+    assert not ctrl.wants_measurement
+
+
+def test_unknown_chip_warns_and_falls_back_to_eager():
+    """An unknown --chip value must not raise mid-run: resolve warns and
+    the launcher falls back to d*=0."""
+    from repro.launch.train import resolve_auto_sync_delay
+
+    tc = _tc(sync_delay="auto")
+    pc = ParallelConfig(data_axis_size=16, model_axis_size=16, data_outer=4)
+    with pytest.warns(UserWarning, match="unknown chip"):
+        d = resolve_auto_sync_delay(tc, MC, pc, chip="warp-drive")
+    assert d == 0
+
+
+def test_trainer_auto_delay_measures_and_re_resolves():
+    """sync_delay='auto' without a chip hint: starts eager, measures the
+    first sync windows, and re-resolves d* from the EMAs."""
+    tc = TrainConfig(optimizer="pier", total_steps=24, global_batch_size=4,
+                     seq_len=16, sync_interval=4, warmup_frac=0.25,
+                     sync_delay="auto")
+    tr = _trainer_run(tc, steps=24)
+    assert tr.delay_controller is not None
+    assert tr.delay_controller.windows >= 2
+    assert isinstance(tr.tc.sync_delay, int)
+    assert 0 <= tr.tc.sync_delay < tr.tc.sync_interval
+    # the run drained cleanly (no stranded in-flight dispatch)
+    assert tr._inflight is None
+
+
+def test_strategy_delay_controller_hook_is_injectable():
+    """A custom strategy can override the sync_delay='auto' injection
+    point — the hook returns the controller, not a hardcoded lookup."""
+    from repro.sync import DelayController
+
+    class Always3(DelayController):
+        def initial_delay(self):
+            return 3
+
+    class MyStrategy(FlatFP32):
+        def make_delay_controller(self, tc, mc, pc, *, chip="",
+                                  measured=True):
+            return Always3()
+
+    ctrl = MyStrategy().make_delay_controller(_tc(), MC, ParallelConfig())
+    assert ctrl.initial_delay() == 3
+    # the default hook wires measured-with-model-fallback
+    default = FlatFP32().make_delay_controller(
+        _tc(), MC, ParallelConfig(), chip="")
+    assert isinstance(default, MeasuredDelayController)
+    assert isinstance(default.fallback, ModelDelayController)
