@@ -79,8 +79,10 @@ def inner_step_time(n_params: float, n_devices: int, chip: Chip,
 def payload_bytes_per_param(bits: int = 32, block: int = 256) -> float:
     """Bytes per Δθ element on the slow domain: values + per-block scales.
 
-    bits >= 32 means the uncompressed fp32 payload. int4 models 2x nibble
-    packing of the int8-held values (the wire format, not the HBM layout).
+    bits >= 32 means the uncompressed fp32 payload. int4 is 2x nibble
+    packing of the int8-held values — since DESIGN.md §8 the Int8Wire
+    strategy really packs the wire that way (pack_wire), and the
+    measured_* fields report the actual buffer sizes next to this model.
     """
     if bits >= 32:
         return 4.0
@@ -167,6 +169,29 @@ def period_times(n_params: float, n_devices: int, chip: Chip, *,
     }
 
 
+def measured_wire_fields(n_params: float, *, endpoints: int, bits: int,
+                         block: int) -> Dict[str, float]:
+    """Measured (not modeled) wire bytes: run the real quantizer + packer
+    (``repro.kernels.ring_allreduce``) and read the actual buffer sizes,
+    scaled onto the same ring-traffic convention as the analytic model.
+    Empty when the runtime package is not importable (benchmarks-only
+    deployment) — the modeled fields are then all there is.
+    """
+    try:
+        from repro.kernels.ring_allreduce import (
+            measure_wire_bytes, measured_cross_domain_bytes)
+    except ImportError:
+        return {}
+    m = measure_wire_bytes(int(n_params), bits=bits, block=block)
+    return {
+        "measured_payload_bytes_per_param":
+            m["measured_payload_bytes_per_param"],
+        "measured_bytes_cross_per_sync": measured_cross_domain_bytes(
+            int(n_params), endpoints=endpoints, bits=bits, block=block),
+        "measured_sample_elems": m["measured_sample_elems"],
+    }
+
+
 def resolve_sync_delay(*, n_params: float, n_devices: int, group_size: int,
                        sync_interval: int, chip: Optional[str] = None,
                        bits: int = 32, block: int = 256,
@@ -197,15 +222,23 @@ def sweep(chip_name: str, *, n_devices: int, sync_interval: int,
           block: int = 256, hierarchical: bool = False, pods: int = 1,
           comm_chunks: int = 1) -> List[Dict]:
     chip = CHIPS[chip_name]
+    n_groups = max(n_devices // group_size, 1)
     rows = []
     for model, n in PAPER_MODELS.items():
+        # measured (not modeled) wire bytes ride on the reporting rows
+        # only — the analytic resolve_sync_delay path must stay free of
+        # device work (it runs at training startup)
+        measured = measured_wire_fields(
+            n, endpoints=(pods if hierarchical else n_groups),
+            bits=bits, block=block)
         for d in delays:
             r = period_times(n, n_devices, chip, sync_interval=sync_interval,
                             sync_delay=d, group_size=group_size,
                             bits=bits, block=block,
                             hierarchical=hierarchical, pods=pods,
                             comm_chunks=comm_chunks)
-            rows.append({"chip": chip_name, "model": model, "delay": d, **r})
+            rows.append({"chip": chip_name, "model": model, "delay": d,
+                         **measured, **r})
     return rows
 
 

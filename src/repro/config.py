@@ -212,8 +212,12 @@ class OuterCommConfig:
     # quantized Δθ over the slow domain with per-block fp32 absmax scales
     # and an error-feedback residual (carried in OuterState) so
     # quantization error is re-injected into the next Δθ instead of
-    # biasing the Nesterov momentum.
-    compression: str = "none"  # none | quantize
+    # biasing the Nesterov momentum — numerically exact wire model, fp32
+    # on the actual collective. "int8-wire" is the true wire format
+    # (DESIGN.md §8): the packed (q, scales) pairs themselves cross the
+    # slow axes through a ring exchange with per-source-scale sum
+    # semantics; same payload mean as "quantize", real bytes win.
+    compression: str = "none"  # none | quantize | int8-wire
     bits: int = 8  # 4 | 8 (int stored in int8; 4 models packing)
     block: int = 256  # absmax-scale block (elements per scale)
     # Two-stage reduce: full-precision psum over the fast intra-pod axis
@@ -228,11 +232,11 @@ class OuterCommConfig:
     chunks: int = 1
 
     def __post_init__(self):
-        if self.compression not in ("none", "quantize"):
+        if self.compression not in ("none", "quantize", "int8-wire"):
             raise ValueError(
-                f"outer compression must be 'none' or 'quantize', "
-                f"got {self.compression!r}")
-        if self.compression == "quantize" and self.bits not in (4, 8):
+                f"outer compression must be 'none', 'quantize' or "
+                f"'int8-wire', got {self.compression!r}")
+        if self.compression != "none" and self.bits not in (4, 8):
             raise ValueError(
                 f"outer comm bits must be 4 or 8, got {self.bits}")
         if self.block < 1:

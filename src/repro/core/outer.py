@@ -95,6 +95,21 @@ def warmup_accumulate(state: OuterState, params, mu) -> OuterState:
                       residual=state.residual)
 
 
+def quant_fns(*, bits: int, block: int, use_pallas: bool = False):
+    """(quantize, dequantize) callables for the outer payload — the one
+    place the pallas-vs-reference quantizer choice is made (shared by
+    :func:`compress_delta` and the ``Int8Wire`` wire strategy, so the
+    backend selection cannot drift between them)."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return (lambda x: kops.quantize_blockwise(x, bits=bits, block=block),
+                lambda q, s: kops.dequantize_blockwise(q, s, block=block))
+    from repro.kernels.ref import (dequantize_blockwise_ref,
+                                   quantize_blockwise_ref)
+    return (lambda x: quantize_blockwise_ref(x, bits=bits, block=block),
+            lambda q, s: dequantize_blockwise_ref(q, s, block=block))
+
+
 def compress_delta(delta, residual, tc: TrainConfig = None, *,
                    bits: int = None, block: int = None,
                    use_pallas: bool = False):
@@ -116,15 +131,7 @@ def compress_delta(delta, residual, tc: TrainConfig = None, *,
         bits = tc.outer_comm.bits
     if block is None:
         block = tc.outer_comm.block
-    if use_pallas:
-        from repro.kernels import ops as kops
-        quant = lambda x: kops.quantize_blockwise(x, bits=bits, block=block)
-        dequant = lambda q, s: kops.dequantize_blockwise(q, s, block=block)
-    else:
-        from repro.kernels.ref import (dequantize_blockwise_ref,
-                                       quantize_blockwise_ref)
-        quant = lambda x: quantize_blockwise_ref(x, bits=bits, block=block)
-        dequant = lambda q, s: dequantize_blockwise_ref(q, s, block=block)
+    quant, dequant = quant_fns(bits=bits, block=block, use_pallas=use_pallas)
 
     def leaf(d, r):
         c = d.astype(jnp.float32)

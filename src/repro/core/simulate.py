@@ -22,14 +22,19 @@ The outer collective is consumed as a pluggable strategy object
 distributed runner resolves it. The numeric models match the distributed
 path: ``Quantized`` blockwise-quantizes (and *dequantizes* — exactly the
 value an int8+scales wire format delivers) each group's Δθ plus its
-error-feedback residual before averaging; ``Hierarchical`` with
-``num_pods > 1`` first averages the per-group deltas full-precision
-inside each pod (the fast domain), so only the per-pod payloads are
-quantized and exchanged. The ``Chunked`` combinator has no numeric effect
-on dispatch, but the simulator honours its plan at *apply* time: each
-leaf span installs through its own per-chunk apply (in any order — the
-ordering property tests permute them), mirroring the distributed
-per-chunk apply pipeline.
+error-feedback residual before averaging; ``Int8Wire`` additionally
+models the ring exchange's **per-source-scale sum semantics** exactly —
+the per-group dequantized payloads accumulate in canonical source order
+and scale by ``1/E``, the same sequential sum the distributed ring runs,
+so the sim ↔ distributed equivalence binds bit for bit at the reduce
+(DESIGN.md §8); ``Hierarchical`` with ``num_pods > 1`` first averages
+the per-group deltas full-precision inside each pod (the fast domain),
+so only the per-pod payloads are quantized and exchanged (the ring's
+endpoints become the pods, one representative each). The ``Chunked``
+combinator has no numeric effect on dispatch, but the simulator honours
+its plan at *apply* time: each leaf span installs through its own
+per-chunk apply (in any order — the ordering property tests permute
+them), mirroring the distributed per-chunk apply pipeline.
 """
 
 from __future__ import annotations
@@ -44,7 +49,7 @@ from repro.config import ModelConfig, TrainConfig
 from repro.core.outer import (OuterState, outer_apply, outer_init,
                               warmup_accumulate)
 from repro.core.pier import PierSchedule
-from repro.sync import resolve_strategy
+from repro.sync import resolve_strategy, validate_pod_grouping
 from repro.data.synthetic import MarkovLM, make_train_batch
 from repro.models import registry as R
 from repro.optim.adamw import adamw_init, adamw_update
@@ -66,7 +71,7 @@ class SimulatedRun:
                  seed: int = 0, num_pods: int = 1):
         if tc.optimizer != "adamw":
             assert num_groups >= 1
-        assert num_groups % max(num_pods, 1) == 0, (num_groups, num_pods)
+        validate_pod_grouping(num_groups, num_pods)
         assert isinstance(tc.sync_delay, int), (
             "sync_delay='auto' must be resolved before simulation "
             "(see launch/train.py)")

@@ -77,6 +77,12 @@ def dequantize_blockwise(q, scales, *, block: int = 256):
     return _dequantize(q, scales, block=block, interpret=_interpret())
 
 
+# NOTE: the int8-wire ring all-reduce (kernels/ring_allreduce.py) is NOT
+# wrapped here: it resolves its backend from the strategy's ReduceCtx
+# (use_pallas + transport), not from the process-global default, so the
+# Int8Wire strategy imports it directly.
+
+
 # ---------------------------------------------------------------------------
 # rmsnorm
 # ---------------------------------------------------------------------------

@@ -106,7 +106,11 @@ def dequantize_blockwise(
     interpret = default_interpret(interpret)
     (nq,) = q.shape
     nb = nq // block
-    assert nb * block == nq, (nq, block)
+    if nb * block != nq:
+        raise ValueError(
+            f"ragged quantized payload: {nq} values do not fill whole "
+            f"blocks of {block} (quantize_blockwise pads to whole blocks; "
+            f"pass its output unsliced)")
     nbp = _pad_rows(nb)
     q2 = q.reshape(nb, block)
     s = scales

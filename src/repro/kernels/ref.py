@@ -81,8 +81,91 @@ def quantize_blockwise_ref(x, *, bits: int = 8, block: int = 256):
 def dequantize_blockwise_ref(q, scales, *, block: int = 256):
     """Inverse oracle: (nblocks*block,) int8 + (nblocks,) f32 -> f32."""
     nb = q.shape[0] // block
+    if nb * block != q.shape[0]:
+        raise ValueError(
+            f"ragged quantized payload: {q.shape[0]} values do not fill "
+            f"whole blocks of {block}")
     qb = q.reshape(nb, block).astype(jnp.float32)
     return (qb * scales[:, None]).reshape(nb * block)
+
+
+def pack_wire(q, bits: int):
+    """int8 values -> the byte stream that actually crosses the wire.
+
+    ``bits >= 8`` is the identity (int8 is its own wire container);
+    ``bits=4`` packs two's-complement nibbles two-per-byte (odd lengths
+    zero-padded). Exact round-trip with :func:`unpack_wire`.
+    """
+    if bits >= 8:
+        return q
+    (nq,) = q.shape
+    if nq % 2:
+        q = jnp.pad(q, (0, 1))
+    u = q.astype(jnp.uint8) & 0xF
+    return (u[0::2] | (u[1::2] << 4)).astype(jnp.uint8)
+
+
+def unpack_wire(w, bits: int, nq: int):
+    """Inverse of :func:`pack_wire`: wire bytes -> (nq,) int8 values."""
+    if bits >= 8:
+        return w
+    lo = (w & 0xF).astype(jnp.int8)
+    hi = ((w >> 4) & 0xF).astype(jnp.int8)
+    q = jnp.stack([lo, hi], axis=-1).reshape(-1)[:nq]
+    # sign-extend the nibble: int8 shifts are arithmetic
+    return (q << 4) >> 4
+
+
+def dequant_sum_sources(wg, sg, *, bits: int, block: int):
+    """(E, nw) wire bytes + (E, nb) scales -> fp32 (nq,) payload mean.
+
+    THE per-source-scale sum (DESIGN.md §8): dequantize each source's
+    wire payload and accumulate in canonical source order (row 0 first),
+    then multiply by ``1/E``. This one function IS the reduction — the
+    distributed ring (kernels/ring_allreduce.py), the simulator's
+    ``Int8Wire.sim_reduce``, and the test oracle all call it, however
+    their source stacks were produced (remote-DMA gather, ppermute ring,
+    ``jnp.stack``).
+
+    The accumulation deliberately materializes the dequantized partials
+    and adds them inside a ``fori_loop``: an unrolled ``acc + q*s`` chain
+    gets FMA-contracted by XLA differently depending on the surrounding
+    producers (even across an ``optimization_barrier``), which breaks the
+    bit-identity between transports at 1 ulp. A loop body only ever sees
+    a dynamic slice of the materialized stack — there is no multiply for
+    the add to contract with, so every path rounds identically (cf. the
+    reciprocal-multiply note on :func:`quantize_blockwise_ref`).
+    """
+    E, nb = sg.shape
+    nq = nb * block
+    payloads = jnp.stack([
+        dequantize_blockwise_ref(unpack_wire(wg[j], bits, nq), sg[j],
+                                 block=block)
+        for j in range(E)])
+
+    def body(j, acc):
+        return acc + jax.lax.dynamic_index_in_dim(
+            payloads, j, 0, keepdims=False)
+
+    # start from a zero accumulator (0 + x is exact) so even E == 2 keeps
+    # a trip count > 1 — XLA unrolls single-trip loops, which would hand
+    # the add back to the fuser
+    acc = jax.lax.fori_loop(0, E, body, jnp.zeros_like(payloads[0]))
+    return acc * jnp.float32(1.0 / E)
+
+
+def ring_allreduce_qs_ref(q, scales, *, block: int = 256, bits: int = 8):
+    """Per-source-scale sum oracle of the int8 wire ring (DESIGN.md §8).
+
+    ``q``: (E, nblocks*block) int8 values, ``scales``: (E, nblocks) f32 —
+    one row per ring endpoint. Round-trips each row through the actual
+    wire packing (a bit-exact identity on the values) and reduces with
+    :func:`dequant_sum_sources` — exactly what the distributed ring
+    exchange computes on every endpoint, bit for bit.
+    """
+    E = q.shape[0]
+    wg = jnp.stack([pack_wire(q[j], bits) for j in range(E)])
+    return dequant_sum_sources(wg, scales, bits=bits, block=block)
 
 
 def rmsnorm_ref(x, scale, *, eps: float = 1e-5):

@@ -1,0 +1,379 @@
+"""True int8 wire format: ring exchange of quantized Δθ (DESIGN.md §8).
+
+The compressed outer collective of §6 models int8 *numerically* but (until
+PR 4) exchanged the dequantized fp32 payload — the bytes-on-wire win was
+accounting, not reality. This module moves the actual ``(int8 q, fp32
+scales)`` pairs across the slow exchange axes and reduces them with
+**per-source-scale sum semantics**:
+
+    Δθ_avg = (1/E) · Σ_src dequantize(q_src, s_src)        src = 0 … E−1
+
+The sum runs in canonical source order (the linearized mesh index over the
+exchange axes), so every endpoint computes bit-identical results — a hard
+requirement: the reduced payload is replicated across groups (shard_map
+``out_specs=P()``), and an arrival-order sum would diverge per device.
+
+Three transports, one reduction (all reduced by the shared
+:func:`repro.kernels.ref.dequant_sum_sources`, so their numerics are
+identical bit for bit):
+
+- **ppermute ring** (CPU / tier-1 reference): a store-and-forward ring —
+  E−1 neighbor hops, each carrying the packed wire buffer + scales,
+  gathered into canonical source slots. Runs under ``vmap(axis_name=…)``
+  (the single-device test harness) and modern-jax shard_map.
+- **one-hot psum**: each endpoint deposits its payload at its linearized
+  slot of a zero ``(E, ·)`` buffer and psums — exact (one non-zero
+  contributor per slot) and the only gather jax 0.4.x partial-manual
+  shard_map can lower, so the distributed steps select it there.
+- **Pallas remote-DMA** (real TPU): :func:`ring_allgather_wire_tpu`
+  forwards the wire buffers around the ring with
+  ``pltpu.make_async_remote_copy`` (double-buffered slots, neighbor
+  barrier — the guide's ring-collective pattern), then applies the same
+  reduction, so the kernel only moves bytes and the numerics stay
+  oracle-exact.
+
+Wire layout: int8 values live in their int8 container; ``bits=4`` packs
+two's-complement nibbles two-per-byte (:func:`pack_wire` /
+:func:`unpack_wire`, exact round-trip), so the measured bytes match the
+``bits/8 + 4/block`` model instead of silently shipping int8-wide int4.
+:func:`measure_wire_bytes` reads the *actual* device-buffer sizes off a
+real quantize+pack run — the measured (not modeled) bytes that
+``benchmarks/overlap.py --json`` reports next to the analytic model.
+"""
+
+from __future__ import annotations
+
+import functools
+import itertools
+from typing import Mapping, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.backend import on_tpu
+from repro.kernels.ref import (dequant_sum_sources, pack_wire,  # noqa: F401
+                               unpack_wire)
+
+# jax < 0.5 names this TPUCompilerParams; it was renamed to CompilerParams.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+# Per-pallas_call wire slice on the TPU path. All refs live in VMEM
+# (Mosaic cannot index ANY-space refs directly), so one call holds
+# (E + 3) × chunk bytes there: E canonical output slots + the input +
+# two comm slots. 512 KiB keeps that under ~10 MiB up to E = 16.
+_WIRE_CHUNK_BYTES = 1 << 19
+
+
+# The wire packing (pack_wire/unpack_wire) and THE reduction
+# (dequant_sum_sources — canonical-order per-source-scale sum) live in
+# kernels/ref.py so the oracle, the simulator, and this transport all run
+# the *identical* subgraph; this module re-exports them and owns only the
+# transports (how the stacked sources are produced).
+
+# ---------------------------------------------------------------------------
+# reference transports (CPU / tier-1 / non-TPU)
+# ---------------------------------------------------------------------------
+
+
+def _check_axis_sizes(names, axis_sizes):
+    for ax in names:
+        if ax not in (axis_sizes or {}):
+            raise ValueError(
+                f"exchange axis {ax!r} missing from ReduceCtx.axis_sizes "
+                f"(have {sorted(axis_sizes or {})}); the wire exchange "
+                f"needs static ring sizes")
+
+
+def _axis_idx(axis_name: str, axis_coords) -> jax.Array:
+    """The caller's coordinate along one exchange axis.
+
+    Prefer data-threaded coordinates (``ReduceCtx.axis_coords`` — an
+    ``arange`` sharded over the axis, sliced per shard): jax 0.4.x lowers
+    ``lax.axis_index`` inside partial-manual shard_map to a PartitionId
+    instruction its SPMD partitioner rejects. Fall back to
+    ``lax.axis_index`` (vmap harnesses, modern jax) when no coordinate
+    was threaded.
+    """
+    if axis_coords and axis_name in axis_coords:
+        return jnp.asarray(axis_coords[axis_name], jnp.int32)
+    return jax.lax.axis_index(axis_name)
+
+
+def _ring_gather(x: jax.Array, axis_name: str, size: int, idx) -> jax.Array:
+    """All-gather ``x`` into canonical axis-index slots via E−1 ring hops.
+
+    Each hop forwards the buffer to the right neighbor (``ppermute`` —
+    on the wire this is exactly one payload per link per step); after hop
+    ``k`` a device holds source ``(idx − k − 1) mod E``. Works inside
+    modern-jax ``shard_map`` and under ``vmap(axis_name=...)`` (the
+    single-device test harness); jax 0.4.x partial-manual shard_map
+    cannot lower ppermute (XLA CHECK) — the distributed steps use
+    :func:`onehot_gather_wire` there instead.
+    """
+    out = jnp.zeros((size, *x.shape), x.dtype)
+    out = jax.lax.dynamic_update_index_in_dim(out, x, idx, 0)
+    buf = x
+    perm = [(i, (i + 1) % size) for i in range(size)]
+    for k in range(size - 1):
+        buf = jax.lax.ppermute(buf, axis_name, perm)
+        src = (idx - k - 1) % size
+        out = jax.lax.dynamic_update_index_in_dim(out, buf, src, 0)
+    return out
+
+
+def ring_gather_wire(w: jax.Array, s: jax.Array,
+                     axis_names: Sequence[str],
+                     axis_sizes: Mapping[str, int],
+                     axis_coords=None) -> Tuple[jax.Array, jax.Array]:
+    """ppermute transport: gather every source's (wire bytes, scales).
+
+    Multiple exchange axes compose as nested rings (right-to-left), so the
+    flattened leading axis is row-major over ``axis_names`` — the same
+    linearization the (G,)-stacked simulator uses for its group index.
+    Returns ``((E, nw) wire, (E, nb) scales)`` with E = Π sizes.
+    """
+    names = tuple(axis_names)
+    _check_axis_sizes(names, axis_sizes)
+    wg, sg = w[None], s[None]
+    for ax in reversed(names):
+        idx = _axis_idx(ax, axis_coords)
+        wg = _ring_gather(wg, ax, axis_sizes[ax], idx)
+        sg = _ring_gather(sg, ax, axis_sizes[ax], idx)
+    return (wg.reshape(-1, w.shape[0]), sg.reshape(-1, s.shape[0]))
+
+
+def onehot_gather_wire(w: jax.Array, s: jax.Array,
+                       axis_names: Sequence[str],
+                       axis_sizes: Mapping[str, int],
+                       axis_coords=None) -> Tuple[jax.Array, jax.Array]:
+    """psum transport: scatter into the canonical slot, sum the slots.
+
+    Every endpoint deposits its payload at its linearized index of an
+    all-zero ``(E, ...)`` buffer and psums over the exchange axes — each
+    slot has exactly one non-zero contributor, so the gather is exact for
+    the int values and the (non-negative) fp32 scales in any reduction
+    order. This is the transport jax 0.4.x partial-manual shard_map can
+    actually lower (psum works where ppermute CHECK-fails); the wire
+    realism lives in the TPU remote-DMA path either way.
+    """
+    names = tuple(axis_names)
+    _check_axis_sizes(names, axis_sizes)
+    E, idx = 1, jnp.int32(0)
+    for ax in names:
+        E *= int(axis_sizes[ax])
+        idx = idx * int(axis_sizes[ax]) + _axis_idx(ax, axis_coords)
+
+    def gather(x):
+        buf = jnp.zeros((E, *x.shape), x.dtype)
+        buf = jax.lax.dynamic_update_index_in_dim(buf, x, idx, 0)
+        return jax.lax.psum(buf, names)
+
+    return gather(w), gather(s)
+
+
+# ---------------------------------------------------------------------------
+# Pallas remote-DMA transport (real TPU rings only)
+# ---------------------------------------------------------------------------
+
+# Barrier-semaphore ids for the DMA rings, unique among concurrently-live
+# collectives in a traced program (ids are assigned at trace time; the
+# modulus keeps them inside Mosaic's small-id space — a collision needs
+# ~1024 in-flight collectives, far beyond any real leaf count).
+_collective_ids = itertools.count()
+
+
+def _next_collective_id() -> int:
+    return next(_collective_ids) % 1024
+
+
+def _ring_allgather_kernel(x_ref, out_ref, comm_buf, send_sem, recv_sem, *,
+                           num_devices: int, axis_name: str):
+    """Store-and-forward ring all-gather of one buffer (guide pattern).
+
+    Every device forwards the slot it just received to its right neighbor;
+    after E−1 hops ``out_ref`` holds all sources in canonical slots. The
+    neighbor barrier keeps a fast device from issuing into a slot its
+    neighbor has not drained yet.
+    """
+    my = jax.lax.axis_index(axis_name)
+    left = jax.lax.rem(my + num_devices - 1, num_devices)
+    right = jax.lax.rem(my + 1, num_devices)
+
+    out_ref[my] = x_ref[...]
+    comm_buf[0] = x_ref[...]
+
+    barrier = pltpu.get_barrier_semaphore()
+    pltpu.semaphore_signal(barrier, inc=1, device_id=left)
+    pltpu.semaphore_signal(barrier, inc=1, device_id=right)
+    pltpu.semaphore_wait(barrier, 2)
+
+    for step in range(num_devices - 1):
+        slot = step % 2
+        nxt = (step + 1) % 2
+        rdma = pltpu.make_async_remote_copy(
+            src_ref=comm_buf.at[slot],
+            dst_ref=comm_buf.at[nxt],
+            send_sem=send_sem.at[slot],
+            recv_sem=recv_sem.at[nxt],
+            device_id=(right,),
+            device_id_type=pltpu.DeviceIdType.LOGICAL,
+        )
+        rdma.start()
+        rdma.wait()
+        src = jax.lax.rem(my + num_devices - step - 1, num_devices)
+        out_ref[src] = comm_buf[nxt]
+
+
+def _ring_allgather_tpu_1d(x: jax.Array, axis_name: str,
+                           size: int, collective_id: int) -> jax.Array:
+    """(n,) buffer -> (size, n) canonical gather over one mesh axis."""
+    (n,) = x.shape
+    return pl.pallas_call(
+        functools.partial(_ring_allgather_kernel, num_devices=size,
+                          axis_name=axis_name),
+        out_shape=jax.ShapeDtypeStruct((size, n), x.dtype),
+        # whole-array VMEM refs: Mosaic can index these directly, unlike
+        # ANY-space refs; _WIRE_CHUNK_BYTES bounds the footprint
+        in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        scratch_shapes=[
+            pltpu.VMEM((2, n), x.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        compiler_params=_CompilerParams(collective_id=collective_id),
+    )(x)
+
+
+def ring_allgather_wire_tpu(w: jax.Array, s: jax.Array, axis_name: str,
+                            size: int) -> Tuple[jax.Array, jax.Array]:
+    """TPU remote-DMA transport: gather wire bytes + scales ring-wise.
+
+    The wire buffer is sliced into ≤ ``_WIRE_CHUNK_BYTES`` panels so the
+    double-buffered comm slots fit VMEM regardless of leaf size; scales
+    ride as one (small) extra panel. The reduction itself stays in
+    :func:`dequant_sum_sources` — this function only moves bytes.
+    """
+    (nw,) = w.shape
+    chunk = max(_WIRE_CHUNK_BYTES // max(w.dtype.itemsize, 1), 1)
+    parts = []
+    # distinct collective_id per pallas_call, allocated process-wide (not
+    # per ring_allgather_wire_tpu call): chunk rings of one leaf AND the
+    # rings of different leaves in one outer computation are all
+    # data-independent, and any two concurrently-scheduled collectives
+    # sharing an id would alias one barrier semaphore and desynchronize
+    for lo in range(0, nw, chunk):
+        parts.append(_ring_allgather_tpu_1d(
+            w[lo:lo + chunk], axis_name, size,
+            collective_id=_next_collective_id()))
+    wg = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    sg = _ring_allgather_tpu_1d(s, axis_name, size,
+                                collective_id=_next_collective_id())
+    return wg, sg
+
+
+# ---------------------------------------------------------------------------
+# public entry: quantized ring all-reduce
+# ---------------------------------------------------------------------------
+
+
+def ring_allreduce_quantized(q: jax.Array, s: jax.Array, *,
+                             axis_names: Sequence[str],
+                             axis_sizes: Mapping[str, int],
+                             bits: int, block: int,
+                             use_pallas: bool = False,
+                             axis_coords=None,
+                             transport: str = "auto") -> jax.Array:
+    """All-reduce the actual (q, scales) pairs over the exchange axes.
+
+    ``q``: (nb·block,) int8 values, ``s``: (nb,) fp32 scales — one
+    endpoint's quantized payload. Returns the fp32 (nb·block,) mean of all
+    endpoints' dequantized payloads, accumulated in canonical source order
+    (bit-identical on every endpoint, whichever transport produced the
+    source stack). Must run inside ``shard_map`` (or
+    ``vmap(axis_name=...)``) spanning ``axis_names``.
+
+    ``transport``: ``"dma"`` (Pallas remote-DMA ring, real TPU only),
+    ``"ring"`` (ppermute hops), ``"psum"`` (one-hot scatter + psum), or
+    ``"auto"`` — dma on a TPU single-axis exchange, else ring where
+    shard_map can lower ppermute (modern jax), else psum (jax 0.4.x).
+    """
+    from repro import compat
+
+    names = tuple(axis_names)
+    w = pack_wire(q, bits)
+    if transport == "auto":
+        if use_pallas and on_tpu() and len(names) == 1:
+            transport = "dma"
+        elif compat.HAS_NEW_SHARD_MAP:
+            transport = "ring"
+        else:
+            transport = "psum"
+    if transport == "dma":
+        _check_axis_sizes(names[:1], axis_sizes)
+        wg, sg = ring_allgather_wire_tpu(
+            w, s, names[0], axis_sizes[names[0]])
+    elif transport == "ring":
+        wg, sg = ring_gather_wire(w, s, names, axis_sizes, axis_coords)
+    elif transport == "psum":
+        wg, sg = onehot_gather_wire(w, s, names, axis_sizes, axis_coords)
+    else:
+        raise ValueError(f"unknown wire transport {transport!r}")
+    return dequant_sum_sources(wg, sg, bits=bits, block=block)
+
+
+# ---------------------------------------------------------------------------
+# measured bytes-on-wire (benchmarks/overlap.py --json)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=32)
+def _measure_wire_sample(sample: int, bits: int, block: int):
+    """(value_bytes, scale_bytes) of a real quantize+pack of ``sample``
+    elements — cached: the sweep and the sync_delay='auto' startup path
+    ask for the same (sample, bits, block) repeatedly, and the underlying
+    jax work is identical each time."""
+    from repro.kernels.ref import quantize_blockwise_ref
+
+    x = jnp.zeros((sample,), jnp.float32)
+    if bits >= 32:
+        return int(x.nbytes), 0  # fp32 ships uncompressed, no scales
+    q, s = quantize_blockwise_ref(x, bits=bits, block=block)
+    return int(pack_wire(q, bits).nbytes), int(s.nbytes)
+
+
+def measure_wire_bytes(n: int, *, bits: int = 8, block: int = 256,
+                       sample_cap: int = 1 << 22) -> dict:
+    """Measured wire bytes for an n-element payload: run the real
+    quantizer + packer and read ``.nbytes`` off the actual buffers.
+
+    Payloads above ``sample_cap`` elements are measured on a cap-sized
+    sample and scaled (the per-element layout — block padding, scale rows,
+    nibble packing — is what measurement captures; it is size-invariant
+    beyond one block row). Returns per-payload totals and the measured
+    bytes-per-element, for comparison against the ``bits/8 + 4/block``
+    model.
+    """
+    sample = int(min(n, sample_cap))
+    value_bytes, scale_bytes = _measure_wire_sample(sample, bits, block)
+    per_elem = (value_bytes + scale_bytes) / max(sample, 1)
+    total = per_elem * n
+    return {
+        "measured_sample_elems": sample,
+        "measured_value_bytes": value_bytes,
+        "measured_scale_bytes": scale_bytes,
+        "measured_payload_bytes_per_param": per_elem,
+        "measured_payload_bytes": total,
+    }
+
+
+def measured_cross_domain_bytes(n: int, *, endpoints: int, bits: int = 8,
+                                block: int = 256) -> float:
+    """Measured total bytes crossing the slow domain per sync, using the
+    same ring-traffic convention as the analytic model (2·P·(E−1)) but
+    with the *measured* per-payload bytes."""
+    per = measure_wire_bytes(n, bits=bits, block=block)
+    return 2.0 * per["measured_payload_bytes"] * (max(endpoints, 1) - 1)

@@ -297,8 +297,9 @@ def main(argv=None):
                     help="chip hint for --sync-delay auto "
                          "(e.g. tpu-v5e, a100-perlmutter, gh200-vista)")
     ap.add_argument("--outer-compression", default="none",
-                    choices=["none", "quantize"],
-                    help="compress the cross-pod Δθ payload")
+                    choices=["none", "quantize", "int8-wire"],
+                    help="compress the cross-pod Δθ payload (int8-wire: "
+                         "ring-exchange the actual packed q+scales)")
     ap.add_argument("--outer-comm-bits", type=int, default=8,
                     choices=[4, 8])
     ap.add_argument("--hierarchical-reduce", action="store_true",

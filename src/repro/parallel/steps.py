@@ -301,9 +301,25 @@ def build_train_steps(
     # The mesh-axis context threaded to the strategy's per-leaf reduce:
     # the exchange starts at the full manual set; the hierarchical
     # combinator narrows it to the slow axes after its fast-domain mean.
+    # axis_sizes gives wire strategies (plan.wire_format != "fp32") their
+    # static ring-endpoint counts — their hop loops unroll at trace time.
     reduce_ctx = ReduceCtx(manual=manual, fast_axes=fast_axes,
                            slow_axes=slow_axes, exchange_axes=manual,
-                           use_pallas=pc.use_pallas)
+                           use_pallas=pc.use_pallas,
+                           axis_sizes={a: int(sizes[a]) for a in manual})
+
+    # Wire strategies also need each shard's coordinate along the manual
+    # axes (the canonical ring-slot index). jax 0.4.x cannot lower
+    # lax.axis_index inside partial-manual shard_map, so the coordinates
+    # enter as data: an arange sharded over each axis, sliced per shard.
+    def _coord_inputs():
+        return {a: jnp.arange(sizes[a], dtype=jnp.int32) for a in manual}
+
+    def _coord_spec():
+        return {a: P(a) for a in manual}
+
+    def _local_ctx(coords):
+        return reduce_ctx.with_coords({a: c[0] for a, c in coords.items()})
 
     def _global_pmean(tree):
         """Flat or two-stage pmean over the manual axes (same mean)."""
@@ -317,16 +333,18 @@ def build_train_steps(
             return tree
         return jax.lax.pmean(tree, manual)
 
-    def _reduce_delta_leaf(d, r):
+    def _reduce_delta_leaf(d, r, ctx=reduce_ctx):
         """One Δθ leaf -> (globally averaged payload, new residual | None).
 
         Delegates to the strategy: flat fp32 pmean is the seed collective
         bit for bit; hierarchical / quantized strategies stage and
-        compress the payload (DESIGN.md §6/§7).
+        compress the payload (DESIGN.md §6/§7); the int8-wire strategy
+        ring-exchanges the packed payload itself (DESIGN.md §8), using
+        the shard coordinates carried on ``ctx``.
         """
-        return strategy.reduce_leaf(d, r, tc, reduce_ctx)
+        return strategy.reduce_leaf(d, r, tc, ctx)
 
-    def _reduced_delta(params, outer):
+    def _reduced_delta(params, outer, ctx=reduce_ctx):
         """(delta_avg tree, new residual tree | None) for one group."""
         delta = jax.tree.map(
             lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32),
@@ -336,7 +354,7 @@ def build_train_steps(
         flat_d, treedef = jax.tree_util.tree_flatten(delta)
         flat_r = (treedef.flatten_up_to(res) if compress
                   else [None] * len(flat_d))
-        out = [_reduce_delta_leaf(d, r) for d, r in zip(flat_d, flat_r)]
+        out = [_reduce_delta_leaf(d, r, ctx) for d, r in zip(flat_d, flat_r)]
         unf = jax.tree_util.tree_unflatten
         delta_avg = unf(treedef, [p for p, _ in out])
         new_res = (unf(treedef, [jnp.expand_dims(r, 0) for _, r in out])
@@ -366,10 +384,11 @@ def build_train_steps(
 
     accumulate_step = jax.jit(accumulate_fn, donate_argnums=(1,))
 
-    def outer_body(state, outer, mu, olr):
+    def outer_body(state, outer, mu, olr, coords):
         with use_rules(rules):
             params = jax.tree.map(lambda x: x[0], state.params)
-            delta, new_res = _reduced_delta(params, outer)  # THE collective
+            delta, new_res = _reduced_delta(
+                params, outer, _local_ctx(coords))  # THE collective
             new_params_f32, new_outer = outer_update(
                 outer, delta, tc, mu=mu, lr=olr, use_pallas=pc.use_pallas,
                 **_residual_kw(new_res))
@@ -383,10 +402,10 @@ def build_train_steps(
         sspec, ospec = _sspec(), _ospec()
         f = compat.shard_map(
             outer_body, mesh=mesh,
-            in_specs=(sspec, ospec, P(), P()),
+            in_specs=(sspec, ospec, P(), P(), _coord_spec()),
             out_specs=(sspec, ospec),
             axis_names=set(manual))
-        return f(state, outer, mu, olr)
+        return f(state, outer, mu, olr, _coord_inputs())
 
     outer_step = jax.jit(outer_fn, donate_argnums=(0, 1))
 
@@ -395,10 +414,11 @@ def build_train_steps(
     # does not block on it (jax dispatch is async), so the all-reduce runs
     # concurrently with the next ``sync_delay`` inner steps. apply installs
     # the target with the stale-delta correction once the window closes.
-    def dispatch_body(state, outer, mu, olr):
+    def dispatch_body(state, outer, mu, olr, coords):
         with use_rules(rules):
             params = jax.tree.map(lambda x: x[0], state.params)
-            delta, new_res = _reduced_delta(params, outer)  # THE collective
+            delta, new_res = _reduced_delta(
+                params, outer, _local_ctx(coords))  # THE collective
             target_f32, new_outer = outer_reduce(
                 outer, delta, tc, mu=mu, lr=olr, use_pallas=pc.use_pallas,
                 **_residual_kw(new_res))
@@ -412,10 +432,10 @@ def build_train_steps(
         dspec = _dspec(sspec)
         f = compat.shard_map(
             dispatch_body, mesh=mesh,
-            in_specs=(sspec, ospec, P(), P()),
+            in_specs=(sspec, ospec, P(), P(), _coord_spec()),
             out_specs=(dspec, ospec),
             axis_names=set(manual))
-        return f(state, outer, mu, olr)
+        return f(state, outer, mu, olr, _coord_inputs())
 
     # NOTE: the train state is NOT donated — the snapshot output forces a
     # fresh copy of the params while inner steps keep donating the live ones.
@@ -439,8 +459,9 @@ def build_train_steps(
         spans = plan.spans
 
         def make_chunk_dispatch(lo, hi):
-            def chunk_body(state, outer, mu, olr):
+            def chunk_body(state, outer, mu, olr, coords):
                 with use_rules(rules):
+                    ctx = _local_ctx(coords)
                     params = jax.tree.map(lambda x: x[0], state.params)
                     p_flat = ptreedef.flatten_up_to(params)
                     a_flat = ptreedef.flatten_up_to(outer.anchor)
@@ -452,7 +473,7 @@ def build_train_steps(
                     for j in range(lo, hi):
                         d = (p_flat[j].astype(jnp.float32)
                              - a_flat[j].astype(jnp.float32))
-                        da, nr = _reduce_delta_leaf(d, r_flat[j])
+                        da, nr = _reduce_delta_leaf(d, r_flat[j], ctx)
                         payload.append(da)
                         if compress:
                             new_res.append(jnp.expand_dims(nr, 0))
@@ -476,10 +497,10 @@ def build_train_steps(
                                 if compress else ()))
                 f = compat.shard_map(
                     chunk_body, mesh=mesh,
-                    in_specs=(_sspec(), _ospec(), P(), P()),
+                    in_specs=(_sspec(), _ospec(), P(), P(), _coord_spec()),
                     out_specs=(chunk_spec, leaves_spec),
                     axis_names=set(manual))
-                return f(state, outer, mu, olr)
+                return f(state, outer, mu, olr, _coord_inputs())
 
             # NOTE: neither state (snapshots force fresh buffers) nor outer
             # (read by every chunk computation) is donated here; the outer

@@ -12,14 +12,14 @@ from repro.sync.base import (ChunkDispatch, OuterSyncStrategy, ReduceCtx,
 from repro.sync.delay import (DelayController, FixedDelayController,
                               MeasuredDelayController, ModelDelayController)
 from repro.sync.strategies import (Chunked, FlatFP32, Hierarchical,
-                                   Quantized, resolve_strategy,
-                                   strategy_name)
+                                   Int8Wire, Quantized, resolve_strategy,
+                                   strategy_name, validate_pod_grouping)
 
 __all__ = [
     "ChunkDispatch", "OuterSyncStrategy", "ReduceCtx", "SyncPlan",
     "balanced_spans",
     "DelayController", "FixedDelayController", "MeasuredDelayController",
     "ModelDelayController",
-    "Chunked", "FlatFP32", "Hierarchical", "Quantized",
-    "resolve_strategy", "strategy_name",
+    "Chunked", "FlatFP32", "Hierarchical", "Int8Wire", "Quantized",
+    "resolve_strategy", "strategy_name", "validate_pod_grouping",
 ]

@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Any, NamedTuple, Tuple
+from typing import Any, Mapping, NamedTuple, Optional, Tuple
 
 import jax
 
@@ -42,12 +42,17 @@ class SyncPlan(NamedTuple):
     ``spans`` are contiguous ``[lo, hi)`` index ranges into the flattened
     Δθ leaf list; each span dispatches (and applies) as its own XLA
     computation, carrying its own per-chunk dispatch state.
+    ``wire_format`` names what actually crosses the slow exchange axes:
+    ``"fp32"`` for full-width (or dequantized-payload) collectives,
+    ``"int8+scales"`` / ``"int4+scales"`` for the packed ring exchange of
+    :class:`~repro.sync.strategies.Int8Wire`.
     """
 
     num_leaves: int
     spans: Tuple[Tuple[int, int], ...]
     needs_residual: bool
     name: str
+    wire_format: str = "fp32"
 
     @property
     def num_chunks(self) -> int:
@@ -76,6 +81,14 @@ class ReduceCtx:
     ``exchange_axes`` is what the payload exchange reduces over — the full
     manual set at the top level; the hierarchical combinator narrows it to
     the slow (pod) axes after its full-precision stage-1 mean.
+    ``axis_sizes`` carries the static mesh-axis sizes: ring-based wire
+    strategies need the endpoint count at trace time (Python-level hop
+    loops), which collectives-only strategies never did. ``axis_coords``
+    carries the *traced* per-shard coordinate along each manual axis
+    (an ``arange`` sharded over the axis, sliced inside the body): jax
+    0.4.x cannot lower ``lax.axis_index`` inside partial-manual
+    shard_map, so the step builder threads the coordinates in as data
+    (:meth:`with_coords`).
     """
 
     manual: Tuple[str, ...]
@@ -83,9 +96,28 @@ class ReduceCtx:
     slow_axes: Tuple[str, ...]
     exchange_axes: Tuple[str, ...]
     use_pallas: bool = False
+    axis_sizes: Optional[Mapping[str, int]] = None
+    axis_coords: Optional[Mapping[str, Any]] = None
 
     def narrowed(self, exchange_axes: Tuple[str, ...]) -> "ReduceCtx":
         return dataclasses.replace(self, exchange_axes=exchange_axes)
+
+    def with_coords(self, axis_coords) -> "ReduceCtx":
+        """Per-trace copy carrying the shard's manual-axis coordinates."""
+        return dataclasses.replace(self, axis_coords=axis_coords)
+
+    def exchange_size(self) -> int:
+        """Static endpoint count of the payload exchange (Π axis sizes)."""
+        sizes = self.axis_sizes or {}
+        e = 1
+        for ax in self.exchange_axes:
+            if ax not in sizes:
+                raise ValueError(
+                    f"exchange axis {ax!r} has no size in "
+                    f"ReduceCtx.axis_sizes (have {sorted(sizes)}); the "
+                    f"wire ring needs static ring sizes")
+            e *= int(sizes[ax])
+        return e
 
 
 def balanced_spans(sizes, num_chunks: int) -> Tuple[Tuple[int, int], ...]:
@@ -137,6 +169,8 @@ class OuterSyncStrategy:
     # Whether the reduce runs as two stages (fp32 fast-domain mean, then
     # the payload exchange over the slow domain).
     two_stage: bool = False
+    # What actually crosses the slow exchange axes (see SyncPlan).
+    wire_format: str = "fp32"
 
     # ------------------------------------------------------------- identity
     @property
@@ -151,7 +185,8 @@ class OuterSyncStrategy:
         """Single fused span by default; the chunked combinator splits."""
         n = len(jax.tree_util.tree_leaves(pshapes))
         return SyncPlan(num_leaves=n, spans=((0, n),),
-                        needs_residual=self.needs_residual, name=self.name)
+                        needs_residual=self.needs_residual, name=self.name,
+                        wire_format=self.wire_format)
 
     # ------------------------------------------------- distributed dispatch
     def reduce_leaf(self, d, r, tc, ctx: ReduceCtx):
@@ -179,8 +214,17 @@ class OuterSyncStrategy:
         return outer_reduce(outer, delta_avg, tc, mu=mu, lr=lr,
                             residual=new_res)
 
-    def sim_reduce(self, delta, residual, tc, *, num_pods=1):
-        """Stacked (G, ...) Δθ -> (averaged payload, new residual)."""
+    def sim_reduce(self, delta, residual, tc, *, num_pods=1,
+                   pod_grouped=False):
+        """Stacked (G, ...) Δθ -> (averaged payload, new residual).
+
+        ``pod_grouped=True`` (set by the hierarchical combinator after its
+        stage-1 pod mean) marks the stacked entries as pod-duplicated: the
+        exchange endpoints are the ``num_pods`` pods, not the G groups.
+        Collective-mean strategies may ignore it (the mean of duplicated
+        entries is the pod mean); ring strategies with order-sensitive
+        per-source sums must honour it.
+        """
         raise NotImplementedError
 
     # ---------------------------------------------------------------- apply

@@ -153,9 +153,13 @@ class MeasuredDelayController(DelayController):
             self.t_inner = self._ema(self.t_inner, t_inner)
 
     def current_delay(self) -> int:
+        # NOTE: ``is None`` checks, not truthiness — a legitimately
+        # measured 0.0 (coarse timer, sub-ms collective) is a valid
+        # sample and resolves to d*=0; only division by a non-positive
+        # t_inner defers to the fallback.
         if (self.windows < self.min_windows + self.skip_windows
-                or not self.t_comm
-                or not self.t_inner or self.t_inner <= 0):
+                or self.t_comm is None
+                or self.t_inner is None or self.t_inner <= 0):
             return self.fallback.initial_delay()
         d = math.ceil(self.t_comm / self.t_inner)
         return max(0, min(int(d), self.tc.sync_interval - 1))

@@ -4,7 +4,14 @@
   every manual (group) axis. Bit-identical to the pre-strategy path.
 - :class:`Quantized` — blockwise-quantized payload (int8/int4 values +
   per-block fp32 absmax scales) with an error-feedback residual carried
-  group-locally in ``OuterState.residual``.
+  group-locally in ``OuterState.residual``. The *dequantized* value is
+  exchanged — the numeric model of the wire format at fp32 wire width.
+- :class:`Int8Wire` — the true wire format (DESIGN.md §8): the actual
+  packed ``(q, scales)`` pairs cross the slow exchange axes through a
+  ring exchange (Pallas remote-DMA on TPU, ``ppermute`` reference
+  elsewhere) and are reduced with per-source-scale sum semantics —
+  numerically the same payload mean as :class:`Quantized`, with the bytes
+  win real instead of accounted.
 - :class:`Hierarchical` — two-stage combinator: full-precision mean over
   the fast intra-pod axes first, then the *inner* strategy's exchange over
   the slow pod axes (1/pods of the traffic crosses the slow domain).
@@ -55,7 +62,8 @@ class FlatFP32(OuterSyncStrategy):
             lambda m, a: m - a.astype(jnp.float32), mean_params, outer.anchor)
         return outer_reduce(outer, delta, tc, mu=mu, lr=lr)
 
-    def sim_reduce(self, delta, residual, tc, *, num_pods=1):
+    def sim_reduce(self, delta, residual, tc, *, num_pods=1,
+                   pod_grouped=False):
         return jax.tree.map(lambda d: jnp.mean(d, axis=0), delta), residual
 
 
@@ -86,11 +94,115 @@ class Quantized(OuterSyncStrategy):
             d = jax.lax.pmean(d, ctx.exchange_axes)
         return d, r
 
-    def sim_reduce(self, delta, residual, tc, *, num_pods=1):
+    def sim_reduce(self, delta, residual, tc, *, num_pods=1,
+                   pod_grouped=False):
         payload, new_res = jax.vmap(
             lambda d, r: compress_delta(d, r, bits=self.bits,
                                         block=self.block))(delta, residual)
         return jax.tree.map(lambda d: jnp.mean(d, axis=0), payload), new_res
+
+
+@dataclass(frozen=True)
+class Int8Wire(OuterSyncStrategy):
+    """True int8 wire format: ring exchange of the packed (q, scales) pairs.
+
+    Same blockwise quantization + error feedback as :class:`Quantized`,
+    but the *actual* quantized payload crosses the slow exchange axes —
+    packed int8 (or nibble-packed int4) values plus per-block fp32 absmax
+    scales — through a store-and-forward ring (Pallas remote-DMA on a real
+    TPU, a ``jax.lax.ppermute`` reference ring elsewhere). Each endpoint
+    accumulates the per-source dequantized partials in canonical source
+    order and multiplies by ``1/E`` (per-source-scale sum semantics,
+    DESIGN.md §8), so every endpoint produces bit-identical results and
+    the payload mean equals :class:`Quantized`'s dequantized-payload mean.
+    """
+
+    bits: int = 8
+    block: int = 256
+
+    needs_residual = True
+
+    @property
+    def name(self) -> str:
+        return f"int{self.bits}-wire(block={self.block})"
+
+    @property
+    def wire_format(self) -> str:  # type: ignore[override]
+        return f"int{self.bits}+scales"
+
+    def reduce_leaf(self, d, r, tc, ctx: ReduceCtx):
+        from repro.core.outer import quant_fns
+        from repro.kernels.ring_allreduce import ring_allreduce_quantized
+
+        quant, dequant = quant_fns(bits=self.bits, block=self.block,
+                                   use_pallas=ctx.use_pallas)
+        c = d.astype(jnp.float32)
+        if r is not None:
+            c = c + r.astype(jnp.float32)
+        flat = c.reshape(-1)
+        n = flat.shape[0]
+        q, s = quant(flat)
+        # the locally dequantized payload: exactly what every other
+        # endpoint reconstructs from our (q, s) on the wire — the error
+        # feedback telescopes against the value the wire delivers
+        payload_local = dequant(q, s)[:n].reshape(c.shape)
+        new_r = c - payload_local
+        if not ctx.exchange_axes or ctx.exchange_size() <= 1:
+            return payload_local, new_r
+        avg = ring_allreduce_quantized(
+            q, s, axis_names=ctx.exchange_axes, axis_sizes=ctx.axis_sizes,
+            bits=self.bits, block=self.block, use_pallas=ctx.use_pallas,
+            axis_coords=ctx.axis_coords)
+        return avg[:n].reshape(c.shape), new_r
+
+    def sim_reduce(self, delta, residual, tc, *, num_pods=1,
+                   pod_grouped=False):
+        """Exact model of the ring: per-source-scale sum in source order.
+
+        Shares :func:`repro.kernels.ref.dequant_sum_sources` with the
+        distributed transport and the test oracle — the same subgraph on
+        the same packed stacks, so the sim ↔ distributed equivalence
+        binds bit for bit (not just numerically). ``pod_grouped`` (set by
+        the hierarchical combinator) marks the stacked entries as
+        pod-duplicated: the ring endpoints are then the pods, one
+        representative each — including the pod-less ``P == 1`` case,
+        where the distributed path quantizes the global mean once with no
+        exchange at all.
+        """
+        from repro.kernels.ref import (dequant_sum_sources, pack_wire,
+                                       dequantize_blockwise_ref,
+                                       quantize_blockwise_ref)
+
+        bits, block = self.bits, self.block
+
+        def leaf(d, r):
+            G = d.shape[0]
+            c = d.astype(jnp.float32)
+            if r is not None:
+                c = c + r.astype(jnp.float32)
+            flat = c.reshape(G, -1)
+            n = flat.shape[1]
+            q, s = jax.vmap(lambda x: quantize_blockwise_ref(
+                x, bits=bits, block=block))(flat)
+            payload_local = jax.vmap(lambda q1, s1: dequantize_blockwise_ref(
+                q1, s1, block=block))(q, s)[:, :n].reshape(c.shape)
+            new_r = c - payload_local
+            if pod_grouped:
+                P = max(num_pods, 1)
+                q = q.reshape(P, G // P, *q.shape[1:])[:, 0]
+                s = s.reshape(P, G // P, *s.shape[1:])[:, 0]
+            E = q.shape[0]
+            wg = jnp.stack([pack_wire(q[j], bits) for j in range(E)])
+            avg = dequant_sum_sources(wg, s, bits=bits, block=block)
+            return avg[:n].reshape(c.shape[1:]), new_r
+
+        flat_d, treedef = jax.tree_util.tree_flatten(delta)
+        flat_r = (treedef.flatten_up_to(residual) if residual is not None
+                  else [None] * len(flat_d))
+        out = [leaf(d, r) for d, r in zip(flat_d, flat_r)]
+        unf = jax.tree_util.tree_unflatten
+        return (unf(treedef, [p for p, _ in out]),
+                unf(treedef, [r for _, r in out]))
 
 
 @dataclass(frozen=True)
@@ -112,6 +224,10 @@ class Hierarchical(OuterSyncStrategy):
     def needs_residual(self) -> bool:  # type: ignore[override]
         return self.inner.needs_residual
 
+    @property
+    def wire_format(self) -> str:  # type: ignore[override]
+        return self.inner.wire_format
+
     def reduce_leaf(self, d, r, tc, ctx: ReduceCtx):
         inner_ctx = ctx
         if ctx.fast_axes:
@@ -124,8 +240,12 @@ class Hierarchical(OuterSyncStrategy):
             r = compat.pvary(r, ctx.fast_axes)
         return d, r
 
-    def sim_reduce(self, delta, residual, tc, *, num_pods=1):
+    def sim_reduce(self, delta, residual, tc, *, num_pods=1,
+                   pod_grouped=False):
         P = max(num_pods, 1)
+        leaves = jax.tree_util.tree_leaves(delta)
+        if leaves:
+            validate_pod_grouping(leaves[0].shape[0], P)
 
         # stage 1: full-precision mean over the fast intra-pod axis,
         # broadcast back so every group in a pod holds the pod mean
@@ -140,7 +260,8 @@ class Hierarchical(OuterSyncStrategy):
                                     ).reshape(d.shape)
 
         delta = jax.tree.map(pod_mean, delta)
-        return self.inner.sim_reduce(delta, residual, tc, num_pods=num_pods)
+        return self.inner.sim_reduce(delta, residual, tc,
+                                     num_pods=num_pods, pod_grouped=True)
 
 
 @dataclass(frozen=True)
@@ -166,11 +287,21 @@ class Chunked(OuterSyncStrategy):
     def two_stage(self) -> bool:  # type: ignore[override]
         return self.inner.two_stage
 
+    @property
+    def wire_format(self) -> str:  # type: ignore[override]
+        return self.inner.wire_format
+
     def plan(self, pshapes, tc, mesh=None) -> SyncPlan:
         sizes = _leaf_sizes(pshapes)
-        spans = balanced_spans(sizes, self.num_chunks)
+        # clamp to the leaf count: more chunks than leaves would plan
+        # empty spans (an empty tree keeps the fused single span, which
+        # dispatch handles as a no-op computation)
+        chunks = max(1, min(self.num_chunks, len(sizes)))
+        spans = (balanced_spans(sizes, chunks) if sizes
+                 else ((0, 0),))
         return SyncPlan(num_leaves=len(sizes), spans=spans,
-                        needs_residual=self.needs_residual, name=self.name)
+                        needs_residual=self.needs_residual, name=self.name,
+                        wire_format=self.wire_format)
 
     def reduce_leaf(self, d, r, tc, ctx: ReduceCtx):
         return self.inner.reduce_leaf(d, r, tc, ctx)
@@ -179,13 +310,29 @@ class Chunked(OuterSyncStrategy):
         return self.inner.sim_dispatch(group_params, outer, tc, mu=mu,
                                        lr=lr, num_pods=num_pods)
 
-    def sim_reduce(self, delta, residual, tc, *, num_pods=1):
-        return self.inner.sim_reduce(delta, residual, tc, num_pods=num_pods)
+    def sim_reduce(self, delta, residual, tc, *, num_pods=1,
+                   pod_grouped=False):
+        return self.inner.sim_reduce(delta, residual, tc,
+                                     num_pods=num_pods,
+                                     pod_grouped=pod_grouped)
 
 
 # ---------------------------------------------------------------------------
 # resolution
 # ---------------------------------------------------------------------------
+
+
+def validate_pod_grouping(num_groups: int, num_pods: int) -> None:
+    """The hierarchical two-stage reduce partitions the G groups into
+    ``num_pods`` equal pods; an indivisible count used to surface as an
+    opaque reshape error deep inside ``sim_reduce`` — fail loudly and
+    early instead (plan time / run construction)."""
+    P = max(int(num_pods), 1)
+    if num_groups % P != 0:
+        raise ValueError(
+            f"hierarchical reduce needs num_pods ({P}) to divide the "
+            f"group count ({num_groups}); got {num_groups} % {P} = "
+            f"{num_groups % P}")
 
 
 def resolve_strategy(cfg) -> OuterSyncStrategy:
@@ -197,6 +344,8 @@ def resolve_strategy(cfg) -> OuterSyncStrategy:
     core: OuterSyncStrategy
     if comm.compression == "quantize":
         core = Quantized(bits=comm.bits, block=comm.block)
+    elif comm.compression == "int8-wire":
+        core = Int8Wire(bits=comm.bits, block=comm.block)
     elif comm.compression == "none":
         core = FlatFP32()
     else:

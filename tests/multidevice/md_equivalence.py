@@ -111,6 +111,55 @@ assert worst < 5e-4, worst
 assert any(float(jnp.abs(r).max()) > 0
            for r in jax.tree.leaves(trainer_q.outer.residual))
 
+# ---- true int8 wire format (DESIGN.md §8): the packed (q, scales) pairs
+# cross the slow axes through the one-hot/psum gather with per-source-scale
+# sum semantics; the simulator shares the reduction subgraph bit for bit,
+# so sim and distributed stay within inner-step noise. Flat: E=2 ring over
+# data_outer; hierarchical: fp32 intra-pod mean, then the E=2 pod ring ----
+from repro.config import OuterCommConfig
+
+tc_w = tc.replace(outer_comm=OuterCommConfig(
+    compression="int8-wire", bits=8, block=64))
+sim_w = SimulatedRun(mc, tc_w, num_groups=2, seed=0)
+trainer_w = Trainer(mc, tc_w, pc, mesh)
+for step in range(16):
+    batch = sim_w._global_batch(step)
+    dist_batch = jax.device_put(
+        batch, trainer_w.bundle.batch_sharding(batch))
+    trainer_w.train_step(dist_batch)
+    sim_w.run(1)
+worst = 0.0
+for a, b in zip(jax.tree.leaves(jax.tree.map(lambda g: g[0],
+                                             sim_w.state.group_params)),
+                jax.tree.leaves(jax.tree.map(lambda x: x[0],
+                                             trainer_w.state.params))):
+    worst = max(worst, float(jnp.abs(jnp.asarray(a, jnp.float32)
+                                     - jnp.asarray(b, jnp.float32)).max()))
+print("max param divergence (sim vs dist, int8 wire ring):", worst)
+assert worst < 5e-4, worst
+assert any(float(jnp.abs(r).max()) > 0
+           for r in jax.tree.leaves(trainer_w.outer.residual))
+
+tc_wh = tc.replace(outer_comm=OuterCommConfig(
+    compression="int8-wire", bits=8, block=64, hierarchical=True))
+sim_wh = SimulatedRun(mc, tc_wh, num_groups=4, seed=0, num_pods=2)
+trainer_wh = Trainer(mc, tc_wh, pc_q, mesh_q)
+for step in range(16):
+    batch = sim_wh._global_batch(step)
+    dist_batch = jax.device_put(
+        batch, trainer_wh.bundle.batch_sharding(batch))
+    trainer_wh.train_step(dist_batch)
+    sim_wh.run(1)
+worst = 0.0
+for a, b in zip(jax.tree.leaves(jax.tree.map(lambda g: g[0],
+                                             sim_wh.state.group_params)),
+                jax.tree.leaves(jax.tree.map(lambda x: x[0],
+                                             trainer_wh.state.params))):
+    worst = max(worst, float(jnp.abs(jnp.asarray(a, jnp.float32)
+                                     - jnp.asarray(b, jnp.float32)).max()))
+print("max param divergence (sim vs dist, int8 wire hier pod ring):", worst)
+assert worst < 5e-4, worst
+
 # ---- chunked dispatch + per-chunk apply: bitwise == the unchunked
 # delayed Trainer on the same mesh (spans only repartition host dispatch;
 # each chunk installs through its own apply with a per-span correction) ----

@@ -1,0 +1,414 @@
+"""True int8 wire format: ring exchange of quantized Δθ (DESIGN.md §8).
+
+The contract under test:
+
+- The ring all-reduce of actual ``(q, scales)`` pairs matches the
+  ``Quantized`` dequantized-payload reference **bit for bit** in
+  interpret mode — on 2, 4 and odd ring sizes, for int8 and (nibble-
+  packed) int4, on every endpoint, across all transports (ppermute ring,
+  one-hot psum) and against the ``ring_allreduce_qs_ref`` oracle.
+- ``Int8Wire.sim_reduce`` implements the same per-source-scale sum
+  semantics bit for bit (flat and pod-grouped), and the distributed
+  Trainer tracks the simulator step for step.
+- Error feedback telescopes under per-source scales: the accumulated
+  wire means plus the final mean residual reconstruct the accumulated
+  true delta means exactly (up to fp32 addition noise).
+- The measured bytes-on-wire (real buffers off the quantizer + packer)
+  sit within 5% of the ``bits/8 + 4/block`` model.
+- Regressions for the PR-4 satellite bugfixes: a measured ``t_comm`` of
+  0.0 resolves d*=0 instead of deferring to the fallback; an indivisible
+  ``num_pods`` raises a clear ``ValueError``; ``Chunked.plan`` clamps to
+  the leaf count; ragged payloads raise ``ValueError`` (not a bare
+  assert) in ``dequantize_blockwise``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import OuterCommConfig, ParallelConfig, TrainConfig
+from repro.core.simulate import SimulatedRun
+from repro.kernels import ops as kops
+from repro.kernels.ref import (dequantize_blockwise_ref, pack_wire,
+                               quantize_blockwise_ref, ring_allreduce_qs_ref,
+                               unpack_wire)
+from repro.kernels.ring_allreduce import (measure_wire_bytes,
+                                          measured_cross_domain_bytes,
+                                          ring_allreduce_quantized)
+from repro.sync import (Chunked, FlatFP32, Hierarchical, Int8Wire,
+                        MeasuredDelayController, Quantized, resolve_strategy,
+                        validate_pod_grouping)
+from test_delayed_sync import MC
+
+BLOCK = 64
+
+
+def _tc(**kw):
+    base = dict(total_steps=40, global_batch_size=8, seq_len=16,
+                sync_interval=5, inner_lr=1e-3, inner_min_lr=1e-4,
+                warmup_frac=0.25)
+    comm = kw.pop("comm", None)
+    if comm is not None:
+        base["outer_comm"] = comm
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+def _quantize_stack(x, bits):
+    """(E, n) fp32 -> stacked (q, scales) rows via the ref quantizer."""
+    qs = [quantize_blockwise_ref(x[i], bits=bits, block=BLOCK)
+          for i in range(x.shape[0])]
+    return (jnp.stack([q for q, _ in qs]), jnp.stack([s for _, s in qs]))
+
+
+# ---------------------------------------------------------------------------
+# wire packing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 2, 7, 128, 255])
+def test_int4_pack_roundtrip_exact(n):
+    q = jax.random.randint(jax.random.PRNGKey(n), (n,), -7, 8, jnp.int8)
+    w = pack_wire(q, 4)
+    assert w.dtype == jnp.uint8 and w.shape[0] == (n + 1) // 2
+    np.testing.assert_array_equal(np.asarray(unpack_wire(w, 4, n)),
+                                  np.asarray(q))
+
+
+def test_int8_pack_is_identity():
+    q = jnp.array([-127, 0, 5, 127], jnp.int8)
+    assert pack_wire(q, 8) is q
+    assert unpack_wire(q, 8, 4) is q
+
+
+# ---------------------------------------------------------------------------
+# the ring all-reduce vs the Quantized dequantized-payload reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("E", [2, 3, 4])  # even, odd, pow2 ring sizes
+@pytest.mark.parametrize("transport", ["ring", "psum"])
+def test_ring_matches_quantized_payload_reference_bitwise(bits, E, transport):
+    """The acceptance bit: the wire ring == canonical-order mean of the
+    dequantized payloads (what ``Quantized``'s fp32 exchange delivers),
+    identical on every endpoint, in interpret mode."""
+    x = jax.random.normal(jax.random.PRNGKey(E + bits), (E, 200),
+                          jnp.float32)
+    q, s = _quantize_stack(x, bits)
+
+    # the Quantized dequantized-payload reference, canonical source order
+    payloads = jnp.stack([dequantize_blockwise_ref(q[j], s[j], block=BLOCK)
+                          for j in range(E)])
+    oracle = np.asarray(jax.jit(
+        lambda q, s: ring_allreduce_qs_ref(q, s, block=BLOCK, bits=bits)
+    )(q, s))
+    np.testing.assert_allclose(oracle, np.asarray(payloads).mean(0),
+                               atol=1e-6)
+
+    def ring(qi, si):
+        return ring_allreduce_quantized(
+            qi, si, axis_names=("x",), axis_sizes={"x": E}, bits=bits,
+            block=BLOCK, transport=transport)
+
+    got = jax.jit(jax.vmap(ring, axis_name="x"))(q, s)
+    for e in range(E):  # identical bits on every endpoint
+        np.testing.assert_array_equal(np.asarray(got[e]), oracle)
+
+
+def test_ring_multi_axis_linearizes_row_major():
+    """Two exchange axes compose as nested rings; the canonical source
+    order is row-major over the axis names — the simulator's group
+    linearization."""
+    E1, E2 = 2, 3
+    x = jax.random.normal(jax.random.PRNGKey(0), (E1 * E2, 128), jnp.float32)
+    q, s = _quantize_stack(x, 8)
+    oracle = np.asarray(jax.jit(
+        lambda q, s: ring_allreduce_qs_ref(q, s, block=BLOCK))(q, s))
+
+    def ring(qi, si):
+        return ring_allreduce_quantized(
+            qi, si, axis_names=("a", "b"),
+            axis_sizes={"a": E1, "b": E2}, bits=8, block=BLOCK,
+            transport="ring")
+
+    f = jax.vmap(jax.vmap(ring, axis_name="b"), axis_name="a")
+    got = jax.jit(f)(q.reshape(E1, E2, -1), s.reshape(E1, E2, -1))
+    got = np.asarray(got).reshape(E1 * E2, -1)
+    for e in range(E1 * E2):
+        np.testing.assert_array_equal(got[e], oracle)
+
+
+def test_ring_transports_agree_bitwise():
+    """ppermute ring and one-hot psum produce identical stacks, so the
+    shared reduction must give identical bits (per-transport paths are
+    interchangeable on any backend)."""
+    E = 3
+    x = jax.random.normal(jax.random.PRNGKey(7), (E, 300), jnp.float32)
+    q, s = _quantize_stack(x, 4)
+    outs = {}
+    for transport in ("ring", "psum"):
+        def ring(qi, si, t=transport):
+            return ring_allreduce_quantized(
+                qi, si, axis_names=("x",), axis_sizes={"x": E}, bits=4,
+                block=BLOCK, transport=t)
+        outs[transport] = np.asarray(
+            jax.jit(jax.vmap(ring, axis_name="x"))(q, s))
+    np.testing.assert_array_equal(outs["ring"], outs["psum"])
+
+
+def test_ring_unknown_transport_and_missing_axis_size():
+    q, s = _quantize_stack(jnp.ones((1, 128), jnp.float32), 8)
+    with pytest.raises(ValueError, match="transport"):
+        jax.vmap(lambda qi, si: ring_allreduce_quantized(
+            qi, si, axis_names=("x",), axis_sizes={"x": 1}, bits=8,
+            block=BLOCK, transport="carrier-pigeon"),
+            axis_name="x")(q, s)
+    with pytest.raises(ValueError, match="axis_sizes"):
+        jax.vmap(lambda qi, si: ring_allreduce_quantized(
+            qi, si, axis_names=("x",), axis_sizes={}, bits=8,
+            block=BLOCK, transport="ring"), axis_name="x")(q, s)
+
+
+# ---------------------------------------------------------------------------
+# strategy resolution + sim semantics
+# ---------------------------------------------------------------------------
+
+
+def test_int8_wire_resolution_and_names():
+    tc = _tc(comm=OuterCommConfig(compression="int8-wire", bits=8,
+                                  block=BLOCK))
+    st = resolve_strategy(tc)
+    assert isinstance(st, Int8Wire)
+    assert st.name == f"int8-wire(block={BLOCK})"
+    assert st.wire_format == "int8+scales"
+    assert st.needs_residual
+    plan = st.plan({"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)}, tc)
+    assert plan.wire_format == "int8+scales"
+
+    tc2 = _tc(comm=OuterCommConfig(compression="int8-wire", bits=4,
+                                   block=BLOCK, hierarchical=True, chunks=2))
+    st2 = resolve_strategy(tc2)
+    assert isinstance(st2, Chunked) and isinstance(st2.inner, Hierarchical)
+    assert isinstance(st2.inner.inner, Int8Wire)
+    assert st2.wire_format == "int4+scales"
+    assert st2.needs_residual
+    # fp32 strategies keep the fp32 wire format label
+    assert FlatFP32().wire_format == "fp32"
+    assert Quantized().wire_format == "fp32"
+
+    with pytest.raises(ValueError):
+        OuterCommConfig(compression="int8-wire", bits=3)
+    with pytest.raises(ValueError):
+        OuterCommConfig(compression="zip")
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_sim_reduce_matches_oracle_bitwise(bits):
+    tc = _tc(comm=OuterCommConfig(compression="int8-wire", bits=bits,
+                                  block=BLOCK))
+    st = resolve_strategy(tc)
+    G = 4
+    delta = {"w": jax.random.normal(jax.random.PRNGKey(1), (G, 10, 13))}
+    res = {"w": 0.01 * jax.random.normal(jax.random.PRNGKey(2), (G, 10, 13))}
+    avg, new_r = jax.jit(
+        lambda d, r: st.sim_reduce(d, r, tc, num_pods=1))(delta, res)
+    c = (delta["w"] + res["w"]).reshape(G, -1)
+    q, s = _quantize_stack(c, bits)
+    oracle = np.asarray(jax.jit(
+        lambda q, s: ring_allreduce_qs_ref(q, s, block=BLOCK, bits=bits)
+    )(q, s))[:130].reshape(10, 13)
+    np.testing.assert_array_equal(np.asarray(avg["w"]), oracle)
+    # residual telescopes against the locally dequantized payload
+    payload = jnp.stack([
+        dequantize_blockwise_ref(q[g], s[g], block=BLOCK)[:130]
+        for g in range(G)]).reshape(G, 10, 13)
+    np.testing.assert_allclose(np.asarray(new_r["w"]),
+                               np.asarray(c.reshape(G, 10, 13) - payload),
+                               atol=1e-6)
+
+
+def test_sim_reduce_pod_grouped_uses_pod_representatives():
+    """Under Hierarchical the stacked entries are pod-duplicated; the ring
+    endpoints are the pods — one representative each, in pod order."""
+    tc = _tc(comm=OuterCommConfig(compression="int8-wire", bits=8,
+                                  block=BLOCK, hierarchical=True))
+    st = Int8Wire(bits=8, block=BLOCK)
+    P, per = 2, 2
+    G = P * per
+    pod_vals = jax.random.normal(jax.random.PRNGKey(3), (P, 128))
+    delta = {"w": jnp.repeat(pod_vals, per, axis=0)}  # pod-duplicated
+    res = {"w": jnp.zeros((G, 128))}
+    avg, _ = jax.jit(lambda d, r: st.sim_reduce(
+        d, r, tc, num_pods=P, pod_grouped=True))(delta, res)
+    q, s = _quantize_stack(pod_vals, 8)
+    oracle = np.asarray(jax.jit(
+        lambda q, s: ring_allreduce_qs_ref(q, s, block=BLOCK))(q, s))
+    np.testing.assert_array_equal(np.asarray(avg["w"]), oracle)
+
+
+def test_error_feedback_telescopes_under_per_source_scales():
+    """Σ_rounds wire-mean + mean(residual_final) == Σ_rounds mean(Δθ):
+    per group, payload + residual' == Δθ + residual exactly per round, so
+    the mean error telescopes instead of accumulating."""
+    tc = _tc(comm=OuterCommConfig(compression="int8-wire", bits=8,
+                                  block=BLOCK))
+    st = resolve_strategy(tc)
+    G, n = 3, 256
+    key = jax.random.PRNGKey(5)
+    res = {"w": jnp.zeros((G, n))}
+    total_wire = jnp.zeros((n,))
+    total_true = jnp.zeros((n,))
+    for r in range(6):
+        key, k = jax.random.split(key)
+        delta = {"w": jax.random.normal(k, (G, n))}
+        avg, res = st.sim_reduce(delta, res, tc, num_pods=1)
+        total_wire = total_wire + avg["w"]
+        total_true = total_true + jnp.mean(delta["w"], axis=0)
+    recon = total_wire + jnp.mean(res["w"], axis=0)
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(total_true),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# distributed Trainer vs simulator (single-device mesh; the multi-group
+# shard_map rings run in tests/multidevice/md_equivalence.py)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("hier", [False, True])
+def test_trainer_int8_wire_matches_simulator(hier):
+    tc = TrainConfig(optimizer="pier", total_steps=20, global_batch_size=4,
+                     seq_len=16, sync_interval=4, warmup_frac=0.25, seed=0,
+                     outer_comm=OuterCommConfig(
+                         compression="int8-wire", bits=8, block=BLOCK,
+                         hierarchical=hier))
+    from repro.launch import mesh as M
+    from repro.launch.train import Trainer
+
+    sim = SimulatedRun(MC, tc, num_groups=1, seed=0)
+    pc = ParallelConfig(data_axis_size=1, model_axis_size=1, data_outer=1)
+    mesh = M.small_mesh((1, 1, 1), ("data_outer", "data_inner", "model"))
+    tr = Trainer(MC, tc, pc, mesh)
+    for step in range(16):
+        batch = sim._global_batch(step)
+        tr.train_step(jax.device_put(batch, tr.bundle.batch_sharding(batch)))
+        sim.run(1)
+    worst = 0.0
+    simp = (sim.state.group_params if sim.state.group_params is not None
+            else sim.state.params)
+    for a, b in zip(
+            jax.tree.leaves(jax.tree.map(lambda g: g[0], simp)),
+            jax.tree.leaves(jax.tree.map(lambda x: x[0], tr.state.params))):
+        worst = max(worst, float(jnp.abs(jnp.asarray(a, jnp.float32)
+                                         - jnp.asarray(b, jnp.float32)
+                                         ).max()))
+    assert worst < 5e-4, worst
+    # the error-feedback residual survived the wire round trip
+    assert any(float(jnp.abs(r).max()) > 0
+               for r in jax.tree.leaves(tr.outer.residual))
+
+
+def test_int8_wire_convergence_within_5pct_of_fp32():
+    tc = _tc(total_steps=60, warmup_frac=0.2, sync_interval=5)
+    eager = SimulatedRun(MC, tc, num_groups=2, seed=0)
+    he = eager.run(60, eval_every=60)
+    tw = _tc(total_steps=60, warmup_frac=0.2, sync_interval=5,
+             comm=OuterCommConfig(compression="int8-wire", bits=8,
+                                  block=BLOCK))
+    wire = SimulatedRun(MC, tw, num_groups=2, seed=0)
+    hw = wire.run(60, eval_every=60)
+    ve, vw = he["val_loss"][-1], hw["val_loss"][-1]
+    assert vw <= ve * 1.05, (ve, vw)
+
+
+# ---------------------------------------------------------------------------
+# measured bytes-on-wire
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_measured_wire_bytes_within_5pct_of_model(bits):
+    n = 1_000_000
+    m = measure_wire_bytes(n, bits=bits, block=256)
+    model = bits / 8.0 + 4.0 / 256
+    assert abs(m["measured_payload_bytes_per_param"] / model - 1) < 0.05, m
+    # cross-domain totals follow the same ring convention as the model
+    got = measured_cross_domain_bytes(n, endpoints=4, bits=bits, block=256)
+    assert abs(got / (2 * model * n * 3) - 1) < 0.05
+
+
+def test_measured_wire_bytes_fp32_is_exact():
+    m = measure_wire_bytes(1000, bits=32)
+    assert m["measured_payload_bytes_per_param"] == 4.0
+    assert m["measured_scale_bytes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite bugfix regressions
+# ---------------------------------------------------------------------------
+
+
+def test_measured_delay_accepts_zero_t_comm():
+    """A legitimately measured 0.0 t_comm (coarse timer, sub-ms
+    collective) must resolve d*=0, not defer to the fallback forever."""
+    from repro.sync import FixedDelayController
+
+    tc = _tc(sync_delay=0)
+    c = MeasuredDelayController(tc, fallback=FixedDelayController(3),
+                                min_windows=2, skip_windows=1)
+    c.observe_step(0.1)
+    for _ in range(3):  # 1 skip + 2 measured windows, all t_comm == 0.0
+        c.observe_window(t_comm=0.0)
+    assert c.current_delay() == 0  # not the fallback's 3
+
+
+def test_measured_delay_zero_t_inner_still_falls_back():
+    from repro.sync import FixedDelayController
+
+    tc = _tc(sync_delay=0)
+    c = MeasuredDelayController(tc, fallback=FixedDelayController(2),
+                                min_windows=2, skip_windows=0)
+    for _ in range(2):
+        c.observe_window(t_comm=0.5, t_inner=0.0)
+    assert c.current_delay() == 2  # t_inner == 0: division guarded
+
+
+def test_hierarchical_indivisible_pods_raise_clear_error():
+    with pytest.raises(ValueError, match="num_pods"):
+        validate_pod_grouping(3, 2)
+    validate_pod_grouping(4, 2)  # divisible: fine
+    validate_pod_grouping(3, 0)  # pod-less: clamps to 1
+    h = Hierarchical()
+    delta = jnp.zeros((3, 8))
+    with pytest.raises(ValueError, match="num_pods"):
+        h.sim_reduce({"w": delta}, None, _tc(), num_pods=2)
+    with pytest.raises(ValueError, match="num_pods"):
+        SimulatedRun(MC, _tc(), num_groups=3, num_pods=2)
+
+
+def test_chunked_plan_clamps_to_leaf_count():
+    tc = _tc()
+    shapes = {f"l{i}": jax.ShapeDtypeStruct((4,), jnp.float32)
+              for i in range(5)}
+    plan = Chunked(num_chunks=99).plan(shapes, tc)
+    assert plan.num_chunks <= 5
+    assert plan.spans[0][0] == 0 and plan.spans[-1][1] == 5
+    covered = []
+    for lo, hi in plan.spans:
+        assert hi > lo  # every span non-empty
+        covered.extend(range(lo, hi))
+    assert covered == list(range(5))
+    # empty tree: a single empty span, still a valid plan
+    empty = Chunked(num_chunks=4).plan({}, tc)
+    assert empty.spans == ((0, 0),) and empty.num_leaves == 0
+
+
+def test_dequantize_ragged_payload_raises_value_error():
+    q = jnp.zeros((100,), jnp.int8)  # 100 % 64 != 0
+    s = jnp.zeros((2,), jnp.float32)
+    with pytest.raises(ValueError, match="ragged"):
+        dequantize_blockwise_ref(q, s, block=BLOCK)
+    with pytest.raises(ValueError, match="ragged"):
+        kops.dequantize_blockwise(q, s, block=BLOCK)
