@@ -30,9 +30,15 @@ bytes-on-wire model (DESIGN.md §6):
 
 Reports, per chip × model scale: cross-domain bytes per sync and their
 reduction vs the flat fp32 ring, the exposed-comm fraction, the step-time
-reduction from overlap at several delays, and d* — the smallest delay that
-fully hides the collective (smaller bytes => smaller d*). ``--json``
-writes the rows as a machine-readable summary (CI artifact). ``--measure``
+reduction from overlap at several delays, d* — the smallest delay that
+fully hides the collective (smaller bytes => smaller d*) — and the
+per-phase split (DESIGN.md §9): ``warmup_comm_fraction`` /
+``inner_comm_fraction`` (cross-domain comm share of the step time in
+each phase, the warmup accumulate overlapped like any other dispatch
+under the unified event engine) with the matching
+``*_bytes_cross_per_step`` fields. ``--json`` writes the rows as a
+machine-readable summary (CI artifact; the bench-models job consumes the
+per-phase fields). ``--measure``
 additionally wall-clocks the real host loop (Trainer) at sync_delay 0 vs d
 on CPU devices as a smoke check of the dispatch/apply machinery (CPU has
 no async collective engine, so the measured delta there is bookkeeping
@@ -157,6 +163,25 @@ def period_times(n_params: float, n_devices: int, chip: Chip, *,
         n_params, n_groups=n_groups, pods=pods, bits=bits, block=block,
         hierarchical=hierarchical)
     bytes_flat = cross_domain_bytes(n_params, n_groups=n_groups)
+
+    # Per-phase accounting (DESIGN.md §9). Warmup trains globally synced:
+    # the gradient pmean crosses the group boundary every step (fp32, the
+    # in-group leg is already inside t_inner), plus one params-pmean
+    # accumulate per sync_interval — under the unified event engine that
+    # accumulate overlaps the next sync_delay steps exactly like an outer
+    # dispatch. Those steps are WARMUP steps (t_inner + the grad pmean
+    # each), so the hiding budget per overlapped step is the full warmup
+    # step time. Inner phase: only the (compressed) outer sync every
+    # sync_interval, with the row's delay hiding it.
+    t_grad_cross = _allreduce_t(n_params * 4.0, n_groups,
+                                chip.inter_group_bw)
+    acc_exposed = max(0.0, t_grad_cross
+                      - sync_delay * (t_inner + t_grad_cross))
+    warmup_comm_per_step = t_grad_cross + acc_exposed / sync_interval
+    warmup_step = t_inner + warmup_comm_per_step
+    inner_comm_per_step = exposed / sync_interval
+    inner_step = t_inner + inner_comm_per_step
+    grad_cross_bytes = 2.0 * n_params * 4.0 * (n_groups - 1)
     return {
         "t_inner": t_inner, "t_comm": t_comm, "t_update": t_upd,
         "eager": eager, "overlap": overlap,
@@ -166,6 +191,15 @@ def period_times(n_params: float, n_devices: int, chip: Chip, *,
         "bytes_cross_per_sync": bytes_cross,
         "bytes_flat_fp32": bytes_flat,
         "bytes_reduction": bytes_flat / max(bytes_cross, 1e-30),
+        # per-phase comm fractions + bytes (consumed by the bench-models
+        # CI job): cross-domain comm time / total step time in each phase
+        "warmup_comm_fraction": warmup_comm_per_step / max(warmup_step,
+                                                           1e-30),
+        "inner_comm_fraction": inner_comm_per_step / max(inner_step,
+                                                         1e-30),
+        "warmup_bytes_cross_per_step":
+            grad_cross_bytes + grad_cross_bytes / sync_interval,
+        "inner_bytes_cross_per_step": bytes_cross / sync_interval,
     }
 
 

@@ -3,5 +3,7 @@ from repro.core.outer import (  # noqa: F401
     outer_init,
     outer_update,
     warmup_accumulate,
+    warmup_apply,
+    warmup_reduce,
 )
-from repro.core.pier import PierSchedule  # noqa: F401
+from repro.core.pier import OuterEvent, PierSchedule  # noqa: F401

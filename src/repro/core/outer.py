@@ -76,11 +76,17 @@ def outer_init(params, tc: TrainConfig, *, num_groups: int = 1,
     )
 
 
-def warmup_accumulate(state: OuterState, params, mu) -> OuterState:
+def warmup_reduce(state: OuterState, params, mu) -> OuterState:
     """Algorithm 1, lines 5-6: Δθ = θ_t − θ_{t−r};  M ← μM + Δθ.
 
-    Called every ``r`` steps during the lazy-start phase. The momentum is
-    accumulated but NOT applied; the anchor advances to the current model.
+    The *dispatch half* of the warmup accumulate event (DESIGN.md §9),
+    analogous to :func:`outer_reduce`: everything that depends on the
+    dispatch-time model — the delta against the anchor, the momentum
+    advance, and the anchor moving to θ_t — computed from ``params`` as
+    snapshotted at the sync boundary. The momentum is accumulated but NOT
+    applied; the returned state is *pending* until :func:`warmup_apply`
+    installs it ``sync_delay`` steps later (same call, eagerly, on the
+    d = 0 path).
     """
     sdt = jax.tree.leaves(state.momentum)[0].dtype
 
@@ -93,6 +99,35 @@ def warmup_accumulate(state: OuterState, params, mu) -> OuterState:
     return OuterState(momentum=new_m, anchor=new_anchor,
                       num_syncs=state.num_syncs + 1,
                       residual=state.residual)
+
+
+def warmup_apply(pending: OuterState) -> OuterState:
+    """Install a dispatched warmup accumulation — the *apply half*.
+
+    The warmup stale-delta correction is **identically zero**, by the
+    following argument (the analogue of :func:`outer_apply`'s drift term):
+    the accumulate touches only the outer state, never the params, and
+    nothing reads the outer state inside the in-flight window — the next
+    boundary (accumulate or first post-warmup dispatch) is ``sync_interval``
+    steps after this one, and every window closes in ``sync_delay <
+    sync_interval`` steps. The anchor deliberately snapshots the
+    *dispatch-time* θ_t (not the apply-time θ_{t+d}): inner progress made
+    while the event was in flight stays ahead of the anchor and is measured
+    by the *next* Δθ — counted exactly once, exactly as the eager schedule
+    counts it. (Advancing the anchor at apply time instead would silently
+    drop those ``d`` steps of progress from the next delta.) Hence a
+    warmup-overlapped run is bit-identical to eager warmup, not merely
+    within tolerance — asserted by tests/test_event_engine.py.
+    """
+    return pending
+
+
+def warmup_accumulate(state: OuterState, params, mu) -> OuterState:
+    """Eager fused warmup accumulate (sync_delay = 0): reduce then apply
+    with an empty in-flight window — the historical single-event API,
+    bit-identical to :func:`warmup_reduce` composed with
+    :func:`warmup_apply` at any delay."""
+    return warmup_apply(warmup_reduce(state, params, mu))
 
 
 def quant_fns(*, bits: int, block: int, use_pallas: bool = False):

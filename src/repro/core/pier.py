@@ -5,17 +5,23 @@ which jitted step function to run (warmup / inner) and which *outer events*
 fire after it — this mirrors the paper's Megatron integration where the outer
 sync is woven into the main training loop at interval boundaries (§V).
 
-Outer events (the delayed-sync event model, see DESIGN.md):
+The unified outer-event engine (DESIGN.md §9): **every** outer event —
+warmup momentum accumulation and post-warmup outer sync alike — is a
+dispatch/apply pair carrying its own ``apply_step``:
 
-- ``accumulate`` — momentum-warmup accumulation (Alg. 1), warmup phase only.
-- ``dispatch``   — launch the global Δθ all-reduce + Nesterov math for the
-  sync boundary at ``sync_step``. With ``sync_delay > 0`` the collective
-  overlaps the following inner steps.
-- ``apply``      — install the synchronized target computed by the dispatch
-  from ``sync_step`` (fires ``sync_delay`` steps later; same step when 0).
+- ``dispatch`` — launch the event's computation at the sync boundary
+  ``sync_step``. For ``op == "outer"`` this is the global Δθ all-reduce +
+  Nesterov math (Alg. 2); for ``op == "accumulate"`` the momentum-warmup
+  accumulation (Alg. 1) reading the dispatch-time params. With
+  ``sync_delay > 0`` the computation overlaps the following inner steps.
+- ``apply`` — install the dispatched result ``sync_delay`` steps later
+  (same step when 0): the synchronized target with the stale-delta
+  correction for ``op == "outer"``, the pending outer state for
+  ``op == "accumulate"`` (whose correction is identically zero — see
+  ``core/outer.py:warmup_apply``).
 
 ``sync_delay = 0`` degenerates to dispatch+apply on the same step, which the
-runners fuse into the classic eager outer step — bit-identical to the
+runners fuse into the classic eager events — bit-identical to the
 pre-delay code path.
 """
 
@@ -28,13 +34,23 @@ from repro.config import TrainConfig
 
 Phase = Literal["warmup", "inner"]
 
+OuterOp = Literal["accumulate", "outer"]
+
 
 @dataclass(frozen=True)
 class OuterEvent:
-    """One outer-optimizer event fired after the inner update of a step."""
+    """One outer-engine event fired after the inner update of a step.
 
-    kind: Literal["accumulate", "dispatch", "apply"]
-    sync_step: int  # the sync boundary (dispatch step) this event belongs to
+    ``sync_step`` is the boundary the event belongs to (where its dispatch
+    fires); ``apply_step`` is the step whose inner update its apply
+    follows — ``sync_step + delay`` for both halves of the pair, so either
+    half alone identifies the full window.
+    """
+
+    kind: Literal["dispatch", "apply"]
+    op: OuterOp
+    sync_step: int
+    apply_step: int
 
 
 @dataclass(frozen=True)
@@ -75,39 +91,58 @@ class PierSchedule:
         return True
 
     def sync_kind(self, step: int) -> str:
-        return "accumulate" if step < self.warmup_steps else "outer"
+        """Legacy spelling of :meth:`op_at` (kept for callers/tests)."""
+        return self.op_at(step)
 
     # ------------------------------------------------------- event model
+    def op_at(self, step: int) -> OuterOp:
+        """Which outer op the boundary at ``step`` performs."""
+        return "accumulate" if step < self.warmup_steps else "outer"
+
     def is_dispatch_step(self, step: int) -> bool:
         """True if a post-warmup outer dispatch fires after ``step``."""
         return self.is_sync_step(step) and self.sync_kind(step) == "outer"
 
+    def delay_for(self, sync_step: int) -> int:
+        """Per-event delay of the boundary at ``sync_step``.
+
+        Today uniform (``tc.sync_delay`` for accumulate and outer events
+        alike — the same ``< sync_interval`` bound closes every window
+        before the next boundary, including across the warmup→inner
+        transition); kept as a seam so a controller/schedule can
+        differentiate per-op delays without touching the event stream.
+        """
+        return self.tc.sync_delay
+
     def apply_step_for(self, dispatch_step: int) -> int:
         """The step whose inner update the ``dispatch_step`` apply follows."""
-        return dispatch_step + self.tc.sync_delay
+        return dispatch_step + self.delay_for(dispatch_step)
 
     def events(self, step: int) -> Tuple[OuterEvent, ...]:
         """Outer events fired after the inner update at ``step``, in order.
 
         At most two events fire per step, and only with ``sync_delay == 0``
-        can they coincide (dispatch immediately followed by its own apply —
-        the fused eager path). ``sync_delay < sync_interval`` guarantees an
-        apply always precedes the next dispatch, so the in-flight window
-        never holds more than one outstanding Δθ.
+        can they share a boundary (dispatch immediately followed by its own
+        apply — the fused eager path). ``sync_delay < sync_interval``
+        guarantees an apply always precedes the next dispatch — for
+        accumulate and outer events alike, including across the
+        warmup→inner transition (boundaries are ``sync_interval`` apart in
+        every phase) — so the in-flight window never holds more than one
+        outstanding dispatch.
         """
         evs = []
-        d = self.tc.sync_delay
         # apply lands first: it belongs to an older dispatch (d > 0), or to
         # the dispatch emitted this very step (d == 0, handled below).
-        if d > 0 and step - d >= 0 and self.is_dispatch_step(step - d):
-            evs.append(OuterEvent("apply", step - d))
+        for s0 in range(max(step - self.tc.sync_interval + 1, 0), step):
+            if (self.is_sync_step(s0)
+                    and self.apply_step_for(s0) == step):
+                evs.append(OuterEvent("apply", self.op_at(s0), s0, step))
         if self.is_sync_step(step):
-            if self.sync_kind(step) == "accumulate":
-                evs.append(OuterEvent("accumulate", step))
-            else:
-                evs.append(OuterEvent("dispatch", step))
-                if d == 0:
-                    evs.append(OuterEvent("apply", step))
+            op = self.op_at(step)
+            a = self.apply_step_for(step)
+            evs.append(OuterEvent("dispatch", op, step, a))
+            if a == step:
+                evs.append(OuterEvent("apply", op, step, step))
         return tuple(evs)
 
     # ------------------------------------------------------------ schedules

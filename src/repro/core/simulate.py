@@ -11,11 +11,22 @@ them.
 The distributed (shard_map) path in ``repro.parallel.steps`` is semantically
 identical; tests assert the two agree step-for-step on a tiny model.
 
-The outer-event stream (accumulate / dispatch / apply, see DESIGN.md §5)
-is executed exactly as the host loop would: with ``sync_delay > 0`` the
-dispatched target is held in flight and installed ``d`` steps later with
-the stale-delta correction, so delayed-schedule convergence can be
-measured without a mesh.
+The unified outer-event stream (DESIGN.md §9: every boundary — warmup
+accumulate and post-warmup outer sync alike — is a dispatch/apply pair
+with a per-event ``apply_step``) is executed exactly as the host loop
+would: with ``sync_delay > 0`` the dispatched result is held in the
+(single) in-flight window and installed at its ``apply_step`` — the
+synchronized target with the stale-delta correction for outer events,
+the pending outer state for warmup accumulates (whose correction is
+identically zero, see ``core/outer.py:warmup_apply``) — so
+delayed-schedule convergence can be measured without a mesh.
+
+An optional :class:`~repro.sync.SyncController` is consulted after every
+outer dispatch (``tick_window`` + ``current_decision``), mirroring the
+Trainer: a strategy decision flushes the window and re-plans/re-jits the
+dispatch (:meth:`SimulatedRun.switch_strategy`), a delay decision
+rebuilds the schedule — so controller-driven runs (scripted or adaptive)
+can be replayed bit-for-bit against the distributed path.
 
 The outer collective is consumed as a pluggable strategy object
 (``repro/sync/``, DESIGN.md §7), resolved from the config exactly as the
@@ -47,7 +58,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig, TrainConfig
 from repro.core.outer import (OuterState, outer_apply, outer_init,
-                              warmup_accumulate)
+                              warmup_apply, warmup_reduce)
 from repro.core.pier import PierSchedule
 from repro.sync import resolve_strategy, validate_pod_grouping
 from repro.data.synthetic import MarkovLM, make_train_batch
@@ -68,7 +79,8 @@ class SimState:
 
 class SimulatedRun:
     def __init__(self, mc: ModelConfig, tc: TrainConfig, *, num_groups: int,
-                 seed: int = 0, num_pods: int = 1):
+                 seed: int = 0, num_pods: int = 1, strategy=None,
+                 sync_controller=None):
         if tc.optimizer != "adamw":
             assert num_groups >= 1
         validate_pod_grouping(num_groups, num_pods)
@@ -78,16 +90,23 @@ class SimulatedRun:
         self.mc, self.tc = mc, tc
         self.G = num_groups
         self.P = max(num_pods, 1)
-        self.strategy = resolve_strategy(tc)
+        self.strategy = (strategy if strategy is not None
+                         else resolve_strategy(tc))
+        self.sync_controller = sync_controller
         self.sched = PierSchedule(tc)
         self.lm = MarkovLM(mc.vocab_size, seed=1234)
         key = jax.random.PRNGKey(seed)
         params = R.init_params(key, mc)
+        # the host-side dispatch plan: leaf spans for per-chunk apply;
+        # also decides whether the state carries an EF residual (an
+        # injected strategy may override the config's own resolution)
+        self.plan = self.strategy.plan(params, tc)
         self.state = SimState(
             params=params,
             group_params=None,
             opt=adamw_init(params, tc),
-            outer=outer_init(params, tc, num_groups=num_groups),
+            outer=outer_init(params, tc, num_groups=num_groups,
+                             needs_residual=self.plan.needs_residual),
         )
         self._val_batch = make_train_batch(
             self.lm, jax.random.PRNGKey(99991), 16, tc.seq_len)
@@ -108,14 +127,40 @@ class SimulatedRun:
             lambda p: R.loss_fn(p, mc, self._val_batch)[0])
 
         def do_accumulate(outer, params, mu):
-            return warmup_accumulate(outer, params, mu)
+            """The dispatch half of a warmup accumulate (Alg. 1): reads
+            the dispatch-time params; the result is pending until its
+            apply installs it (``warmup_apply`` — correction is zero)."""
+            return warmup_reduce(outer, params, mu)
 
         self._accumulate = jax.jit(do_accumulate)
+        self._build_dispatch()
 
-        P = self.P
-        strategy = self.strategy
-        # the host-side dispatch plan: leaf spans for per-chunk apply
-        self.plan = strategy.plan(params, tc)
+        def do_apply(target_f32, dispatch_group, current_group):
+            """Install the target on every group with the drift correction.
+
+            target is unstacked; the (G, ...) snapshot/current leaves
+            broadcast against it, so each group keeps its own in-flight
+            progress. Eager (d=0) calls this with dispatch == current:
+            the correction is exactly zero.
+            """
+            return outer_apply(target_f32, dispatch_group, current_group)
+
+        self._apply = jax.jit(do_apply)
+        # the (single) in-flight window, uniform over ops (DESIGN.md §9):
+        # (apply_at_step, "outer", target, snapshot) or
+        # (apply_at_step, "accumulate", pending_outer, None)
+        self._inflight = None
+
+    # ------------------------------------------------------------------
+    def _build_dispatch(self):
+        """(Re-)jit the outer dispatch off the current strategy's plan.
+
+        Called at construction and again on every
+        :meth:`switch_strategy` — the re-jit boundary is the strategy
+        object itself (its plan keys the span structure; its
+        ``sim_dispatch`` the reduce numerics).
+        """
+        strategy, tc, P = self.strategy, self.tc, self.P
 
         def do_dispatch(group_params, outer, mu, lr):
             """Global Δθ mean + Nesterov math -> (target_f32, new outer).
@@ -131,19 +176,47 @@ class SimulatedRun:
 
         self._dispatch = jax.jit(do_dispatch)
 
-        def do_apply(target_f32, dispatch_group, current_group):
-            """Install the target on every group with the drift correction.
+    def switch_strategy(self, strategy):
+        """Adopt a new outer-sync strategy mid-run (DESIGN.md §9).
 
-            target is unstacked; the (G, ...) snapshot/current leaves
-            broadcast against it, so each group keeps its own in-flight
-            progress. Eager (d=0) calls this with dispatch == current:
-            the correction is exactly zero.
-            """
-            return outer_apply(target_f32, dispatch_group, current_group)
+        Flushes the in-flight window (a dispatched result from the old
+        strategy must install through the old plan), re-plans and re-jits
+        the dispatch, and retargets the error-feedback residual: zeros
+        when the new strategy needs one the state lacks (first-sync
+        semantics of ``compress_delta(residual=None)``), dropped when it
+        does not. Momentum/anchor/num_syncs carry over untouched.
+        """
+        if strategy == self.strategy:
+            return
+        self.flush()
+        self.strategy = strategy
+        st = self.state
+        self.plan = strategy.plan(st.params, self.tc)
+        self._build_dispatch()
+        outer = st.outer
+        if self.plan.needs_residual and outer.residual is None:
+            st.outer = outer._replace(residual=jax.tree.map(
+                lambda p: jnp.zeros((self.G, *p.shape), jnp.float32),
+                st.params))
+        elif not self.plan.needs_residual and outer.residual is not None:
+            st.outer = outer._replace(residual=None)
 
-        self._apply = jax.jit(do_apply)
-        # the (single) in-flight dispatch: (apply_at_step, target, snapshot)
-        self._inflight = None
+    def _consult_controller(self):
+        """One controller round after an outer dispatch (mirrors the
+        Trainer): tick the window, then adopt the decision — strategy
+        first (flushes the window just dispatched), then the clamped
+        delay for the following windows."""
+        ctrl = self.sync_controller
+        if ctrl is None:
+            return
+        ctrl.tick_window()
+        dec = ctrl.current_decision()
+        if dec.strategy is not None and dec.strategy != self.strategy:
+            self.switch_strategy(dec.strategy)
+        d = dec.clamped_delay(self.tc.sync_interval)
+        if d != self.tc.sync_delay:
+            self.tc = self.tc.replace(sync_delay=d)
+            self.sched = PierSchedule(self.tc)
 
     # ------------------------------------------------------------------
     def _global_batch(self, step: int):
@@ -170,8 +243,11 @@ class SimulatedRun:
     def run(self, num_steps: int, *, eval_every: int = 0) -> Dict[str, List]:
         """Run ``num_steps`` and return the loss history."""
         hist = {"step": [], "train_loss": [], "val_loss": [], "val_step": []}
-        sched, tc, st = self.sched, self.tc, self.state
+        tc, st = self.tc, self.state
         for _ in range(num_steps):
+            # re-read per step: a controller decision may rebuild the
+            # schedule (delay) mid-run
+            sched = self.sched
             step = st.step
             phase = sched.phase(step)
             if phase == "warmup":
@@ -197,18 +273,34 @@ class SimulatedRun:
                     st.group_params, st.opt, batches, jnp.asarray(step))
                 loss = jnp.mean(losses)
             for ev in sched.events(step):
-                if ev.kind == "accumulate":
-                    st.outer = self._accumulate(
-                        st.outer, st.params, jnp.float32(sched.mu_at(step)))
-                elif ev.kind == "dispatch":
-                    mu = jnp.float32(sched.mu_at(step))
+                if ev.kind == "apply":
+                    # the stored apply_step is authoritative: a delay
+                    # decision adopted mid-window must not cut the
+                    # already-dispatched window short via the rebuilt
+                    # schedule's re-timed apply event
+                    if (self._inflight is not None
+                            and self._inflight[0] <= step):
+                        self._apply_inflight()
+                    continue
+                # dispatch (either op): the window is free by the schedule
+                # invariant; drain defensively anyway
+                self._apply_inflight()
+                mu = jnp.float32(sched.mu_at(step))
+                if ev.op == "accumulate":
+                    pending = self._accumulate(st.outer, st.params, mu)
+                    self._inflight = (ev.apply_step, "accumulate",
+                                      pending, None)
+                else:
                     olr = jnp.float32(sched.outer_lr_at(step))
                     target, st.outer = self._dispatch(
                         st.group_params, st.outer, mu, olr)
-                    self._inflight = (sched.apply_step_for(step), target,
+                    self._inflight = (ev.apply_step, "outer", target,
                                       st.group_params)
-                else:  # apply
-                    self._apply_inflight()
+                    self._consult_controller()
+            # a delay decision can shrink a window below its dispatched
+            # length — never let a due apply slip past its step
+            if self._inflight is not None and self._inflight[0] <= step:
+                self._apply_inflight()
             hist["step"].append(step)
             hist["train_loss"].append(float(loss))
             if eval_every and (step + 1) % eval_every == 0:
@@ -223,16 +315,24 @@ class SimulatedRun:
         # No-op when flush() already drained the window — the schedule's
         # apply event is step-based and does not know about early drains.
         #
-        # With a chunked plan each leaf span installs through its own
-        # per-chunk apply — in ``order`` (span indices; default span
-        # order), modeling the distributed per-chunk pipeline where early
-        # chunks land while late chunks are still in flight. Spans are
-        # disjoint and the correction is per-leaf, so every order is
-        # bit-identical (asserted by the ordering property tests).
+        # Accumulate events install their pending outer state (the
+        # warmup stale-delta correction is identically zero — see
+        # core/outer.py:warmup_apply). Outer events install the target
+        # into the params: with a chunked plan each leaf span installs
+        # through its own per-chunk apply — in ``order`` (span indices;
+        # default span order), modeling the distributed per-chunk
+        # pipeline where early chunks land while late chunks are still in
+        # flight. Spans are disjoint and the correction is per-leaf, so
+        # every order is bit-identical (asserted by the ordering property
+        # tests).
         if self._inflight is None:
             return
         st = self.state
-        _, target, snapshot = self._inflight
+        _, op, target, snapshot = self._inflight
+        if op == "accumulate":
+            st.outer = warmup_apply(target)
+            self._inflight = None
+            return
         spans = self.plan.spans
         if len(spans) == 1:
             st.group_params = self._apply(target, snapshot, st.group_params)

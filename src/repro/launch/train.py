@@ -5,9 +5,11 @@ for validation, a real TPU slice in production — the code path is identical).
 The host loop consults :class:`PierSchedule` each step: warmup (global
 AdamW) -> momentum accumulation every r steps -> switch to group-local inner
 steps -> outer Nesterov sync every r steps, with optional host offload of the
-outer state between syncs (§V). With ``sync_delay > 0`` the sync is split
-into an async dispatch (global Δθ all-reduce overlapping the next inner
-steps) and a delayed apply — see DESIGN.md §5.
+outer state between syncs (§V). With ``sync_delay > 0`` every boundary —
+warmup accumulate and outer sync alike — is split into an async dispatch
+(overlapping the next inner steps) and a delayed apply flowing through one
+in-flight window; a sync controller can re-resolve the delay and switch the
+sync strategy mid-run — see DESIGN.md §5/§9.
 """
 
 from __future__ import annotations
@@ -50,25 +52,45 @@ def resolve_auto_sync_delay(tc: TrainConfig, mc: ModelConfig,
 
 
 class Trainer:
-    """Host-side training loop weaving inner/outer steps per the schedule."""
+    """Host-side training loop weaving inner/outer steps per the schedule.
+
+    Every outer boundary — warmup accumulate and outer sync alike — flows
+    through the same single in-flight dispatch/apply window (DESIGN.md
+    §9). A :class:`~repro.sync.SyncController` (injected, or built from
+    the strategy hook when ``sync_delay="auto"``) is consulted after
+    every outer dispatch; its decisions re-resolve the overlap delay
+    and/or *switch the sync strategy* mid-run — a switch flushes the
+    window and swaps to a per-strategy cached :class:`StepBundle` (the
+    re-jit boundary), retargeting the error-feedback residual when the
+    residual requirement changes.
+    """
 
     def __init__(self, mc: ModelConfig, tc: TrainConfig, pc: ParallelConfig,
                  mesh, *, checkpoint_dir: Optional[str] = None,
-                 chip_hint: str = ""):
+                 chip_hint: str = "", sync_controller=None,
+                 adaptive_sync: bool = False, remeasure_every: int = 0):
         self.strategy = resolve_strategy(tc)
-        # sync_delay="auto": the strategy injects a DelayController —
+        # sync_delay="auto": the strategy injects a SyncController —
         # measured t_comm/t_inner once enough sync windows are observed,
-        # the analytic --chip model (or eager) until then.
-        self.delay_controller = None
+        # the analytic --chip model (or eager) until then; with
+        # adaptive_sync the controller may also walk the strategy ladder.
+        self.sync_controller = sync_controller
+        if self.sync_controller is None and tc.sync_delay == "auto":
+            self.sync_controller = self.strategy.make_sync_controller(
+                tc, mc, pc, chip=chip_hint, adaptive=adaptive_sync,
+                remeasure_every=remeasure_every)
         if tc.sync_delay == "auto":
-            self.delay_controller = self.strategy.make_delay_controller(
-                tc, mc, pc, chip=chip_hint)
-            tc = tc.replace(sync_delay=self.delay_controller.initial_delay())
+            dec = self.sync_controller.initial_decision()
+            if dec.strategy is not None and dec.strategy != self.strategy:
+                self.strategy = dec.strategy
+            tc = tc.replace(sync_delay=dec.clamped_delay(tc.sync_interval))
         self.mc, self.tc, self.pc = mc, tc, pc
         self.mesh = mesh
         self.sched = PierSchedule(tc)
-        self.bundle = build_train_steps(mc, tc, pc, mesh,
-                                        strategy=self.strategy)
+        # jitted step bundles are cached per strategy: a controller that
+        # switches back to an earlier rung re-uses the compiled steps
+        self._bundles = {}
+        self.bundle = self._bundle_for(self.strategy)
         self.state = self.bundle.init_state(jax.random.PRNGKey(tc.seed))
         self.outer = self.bundle.init_outer(self.state)
         self.step = 0
@@ -76,12 +98,29 @@ class Trainer:
                      if checkpoint_dir else None)
         self._outer_on_host = False
         self.history = []
-        # the (single) in-flight delayed dispatch: (apply_at, DispatchState).
+        # the (single) in-flight window, uniform over ops (DESIGN.md §9):
+        # (apply_at, "outer", DispatchState | [ChunkDispatch]) or
+        # (apply_at, "accumulate", pending OuterState).
         # sync_delay < sync_interval bounds the queue depth at one.
         self._inflight = None
         if tc.offload_outer_state:
             self.outer = offload.to_host(self.outer)
             self._outer_on_host = True
+
+    @property
+    def delay_controller(self):
+        """Back-compat view: the scalar-delay half of the sync controller
+        (None when no controller is installed)."""
+        c = self.sync_controller
+        return c.delay_controller if c is not None else None
+
+    def _bundle_for(self, strategy):
+        b = self._bundles.get(strategy)
+        if b is None:
+            b = build_train_steps(self.mc, self.tc, self.pc, self.mesh,
+                                  strategy=strategy)
+            self._bundles[strategy] = b
+        return b
 
     # ------------------------------------------------------------------
     def _outer_to_device(self):
@@ -98,12 +137,14 @@ class Trainer:
         """One scheduled step (inner or warmup + its outer events).
 
         With ``sync_delay == 0`` the dispatch+apply pair that fires at a
-        sync boundary is fused into the classic eager ``outer_step`` — the
-        pre-delay code path, bit for bit. With ``sync_delay > 0`` dispatch
-        enqueues the global all-reduce without blocking the host (jax
-        dispatch is async — no ``block_until_ready`` anywhere on this path),
-        so it overlaps the next ``sync_delay`` inner steps; apply then
-        installs the target with the stale-delta correction.
+        sync boundary is fused into the classic eager ``outer_step`` /
+        ``accumulate_step`` — the pre-delay code paths, bit for bit. With
+        ``sync_delay > 0`` dispatch enqueues the event's computation
+        without blocking the host (jax dispatch is async — no
+        ``block_until_ready`` anywhere on this path), so it overlaps the
+        next ``sync_delay`` inner steps; apply then installs the result —
+        the target with the stale-delta correction for outer events, the
+        pending outer state for warmup accumulates.
         """
         sched, tc = self.sched, self.tc
         step = self.step
@@ -116,24 +157,23 @@ class Trainer:
         else:
             self.state, metrics = self.bundle.inner_step(
                 self.state, batch, step_arr)
-        if (self.delay_controller is not None
-                and self.delay_controller.wants_measurement):
+        ctrl = self.sync_controller
+        if ctrl is not None and ctrl.wants_measurement:
             # materializing the metrics blocks on the inner step — the
             # wall time is the measured t_inner fed to the controller.
             # Outside the measurement windows the conversion stays at
             # return, off the dispatch-enqueue critical path.
             metrics = {k: float(v) for k, v in metrics.items()}
-            self.delay_controller.observe_step(time.perf_counter() - t0)
+            ctrl.observe_step(time.perf_counter() - t0)
         events = sched.events(step)
-        fused = (len(events) == 2 and events[0].kind == "dispatch"
-                 and events[1].kind == "apply")
         chunked = self.bundle.chunk_dispatch_steps is not None
-        # while the delay controller still wants t_comm samples the sync
-        # must go through dispatch/apply (bit-identical at d=0); once
-        # measurement is done a resolved d*=0 takes the fused eager step
-        measuring = (self.delay_controller is not None
-                     and self.delay_controller.wants_measurement)
-        if fused and not chunked and not measuring:
+        # while the controller still wants t_comm samples the sync must go
+        # through dispatch/apply (bit-identical at d=0); once measurement
+        # is done a resolved d*=0 takes the fused eager step
+        measuring = ctrl is not None and ctrl.wants_measurement
+        fused_outer = any(ev.kind == "dispatch" and ev.op == "outer"
+                          and ev.apply_step == step for ev in events)
+        if fused_outer and not chunked and not measuring:
             # a delay re-resolution to 0 can leave the last measured
             # window's dispatch in flight — install it before the eager step
             self._apply_inflight()
@@ -143,28 +183,60 @@ class Trainer:
                 jnp.float32(sched.mu_at(step)),
                 jnp.float32(sched.outer_lr_at(step)))
             self._outer_to_host()
+            self._consult_controller()
         else:
             for ev in events:
-                if ev.kind == "accumulate":
-                    self._outer_to_device()
-                    self.outer = self.bundle.accumulate_step(
-                        self.state, self.outer,
-                        jnp.float32(sched.mu_at(step)))
-                    self._outer_to_host()
-                elif ev.kind == "dispatch":
-                    # a delay re-resolution may have shrunk the window to
-                    # nothing — never strand (or double-book) an in-flight
-                    # dispatch
-                    self._apply_inflight()
-                    dispatch = self._dispatch(step)
-                    apply_at = self.sched.apply_step_for(step)
-                    self._inflight = (apply_at, dispatch)
-                    if apply_at <= step:
+                if ev.kind == "apply":
+                    # the stored apply_step is authoritative: a delay
+                    # decision adopted mid-window rebuilds the schedule,
+                    # whose re-timed apply event must not cut the
+                    # already-dispatched window short
+                    if (self._inflight is not None
+                            and self._inflight[0] <= step):
                         self._apply_inflight()
-                else:  # apply
-                    self._apply_inflight()
+                    continue
+                # a delay re-resolution may have shrunk the window to
+                # nothing — never strand (or double-book) an in-flight
+                # dispatch
+                self._apply_inflight()
+                if ev.op == "accumulate":
+                    self._dispatch_accumulate(ev)
+                else:
+                    dispatch = self._dispatch(step)
+                    self._inflight = (ev.apply_step, "outer", dispatch)
+                    self._consult_controller()
+            # a delay decision can shrink a window below its dispatched
+            # length — never let a due apply slip past its step
+            if self._inflight is not None and self._inflight[0] <= step:
+                self._apply_inflight()
         self.step += 1
         return {k: float(v) for k, v in metrics.items()}
+
+    def _dispatch_accumulate(self, ev):
+        """Warmup accumulate as a dispatch/apply pair (DESIGN.md §9).
+
+        Eager (``apply_step == sync_step``): the donating
+        ``accumulate_step`` — the pre-delay path, bit for bit. Delayed:
+        the non-donating dispatch computes the pending outer state from
+        the dispatch-time params; the pre-dispatch state stays live until
+        the apply installs the result (whose stale-delta correction is
+        identically zero — ``core.outer.warmup_apply``).
+        """
+        mu = jnp.float32(self.sched.mu_at(ev.sync_step))
+        self._outer_to_device()
+        if ev.apply_step <= ev.sync_step:
+            self.outer = self.bundle.accumulate_step(
+                self.state, self.outer, mu)
+            self._outer_to_host()
+        else:
+            pending = self.bundle.accumulate_dispatch_step(
+                self.state, self.outer, mu)
+            self._inflight = (ev.apply_step, "accumulate", pending)
+            # the old outer state stays current for the window but is
+            # never read again before the apply replaces it wholesale —
+            # offload (when configured) can evict it right away instead
+            # of holding 2x the outer state on device for d steps
+            self._outer_to_host()
 
     def _dispatch(self, step: int):
         """Launch the outer collective for the sync boundary at ``step``.
@@ -176,14 +248,15 @@ class Trainer:
         per-chunk applies later install early chunks while late chunks'
         collectives are still in flight.
 
-        While the delay controller is measuring, the host blocks on the
+        While the controller is measuring, the host blocks on the
         dispatched targets to wall-clock t_comm (overlap is sacrificed for
-        those windows only) and d* is re-resolved from the EMAs.
+        those windows only); the decision round itself runs afterwards in
+        ``_consult_controller``.
         """
         sched = self.sched
         mu = jnp.float32(sched.mu_at(step))
         olr = jnp.float32(sched.outer_lr_at(step))
-        ctrl = self.delay_controller
+        ctrl = self.sync_controller
         measure = ctrl is not None and ctrl.wants_measurement
         t0 = time.perf_counter() if measure else 0.0
         self._outer_to_device()
@@ -204,17 +277,53 @@ class Trainer:
                 [c.targets for c in dispatch] if isinstance(dispatch, list)
                 else dispatch.target)
             ctrl.observe_window(t_comm=time.perf_counter() - t0)
-            self._re_resolve_delay()
         return dispatch
 
-    def _re_resolve_delay(self):
-        """Adopt the controller's current d* for the following windows."""
-        d = self.delay_controller.current_delay()
+    def _consult_controller(self):
+        """One decision round after an outer sync window.
+
+        Ticks the window (feeding ``remeasure_every`` counters), then
+        adopts the decision: a strategy switch first (it flushes the
+        window just dispatched through the *old* bundle before swapping),
+        then the clamped delay for the following windows.
+        """
+        ctrl = self.sync_controller
+        if ctrl is None:
+            return
+        ctrl.tick_window()
+        dec = ctrl.current_decision()
+        if dec.strategy is not None and dec.strategy != self.strategy:
+            self._switch_strategy(dec.strategy)
+        d = dec.clamped_delay(self.tc.sync_interval)
         if d != self.tc.sync_delay:
             print(f"sync_delay re-resolved: {self.tc.sync_delay} -> {d} "
-                  f"(measured t_comm/t_inner)", flush=True)
+                  f"({type(ctrl).__name__} decision)", flush=True)
             self.tc = self.tc.replace(sync_delay=d)
             self.sched = PierSchedule(self.tc)
+
+    def _switch_strategy(self, strategy):
+        """Adopt a new outer-sync strategy mid-run (DESIGN.md §9).
+
+        The in-flight window is flushed through the old bundle (its
+        payload was produced by the old strategy's jitted steps), the
+        per-strategy cached bundle is swapped in (the re-jit boundary),
+        and the error-feedback residual is retargeted: materialized at
+        zero when the new plan needs one the state lacks, dropped when it
+        does not. Momentum/anchor/num_syncs carry over untouched.
+        """
+        self.flush()
+        print(f"outer-sync strategy switch: {self.strategy.name} -> "
+              f"{strategy.name}", flush=True)
+        self.strategy = strategy
+        self.bundle = self._bundle_for(strategy)
+        self._outer_to_device()
+        need = self.bundle.plan.needs_residual
+        if need and self.outer.residual is None:
+            self.outer = self.outer._replace(
+                residual=self.bundle.init_residual(self.state))
+        elif not need and self.outer.residual is not None:
+            self.outer = self.outer._replace(residual=None)
+        self._outer_to_host()
 
     def _apply_inflight(self):
         # The schedule emits apply events purely by step count; if flush()
@@ -222,13 +331,19 @@ class Trainer:
         # run()), the event is a no-op rather than a double apply.
         if self._inflight is None:
             return
-        _, dispatch = self._inflight
-        if isinstance(dispatch, list):  # per-chunk apply, span order
-            for chunk, apply_step in zip(dispatch,
+        _, op, payload = self._inflight
+        if op == "accumulate":
+            # install the pending outer state (core.outer.warmup_apply —
+            # the warmup stale-delta correction is identically zero)
+            self.outer = payload
+            self._outer_on_host = False
+            self._outer_to_host()
+        elif isinstance(payload, list):  # per-chunk apply, span order
+            for chunk, apply_step in zip(payload,
                                          self.bundle.chunk_apply_steps):
                 self.state = apply_step(self.state, chunk)
         else:
-            self.state = self.bundle.apply_step(self.state, dispatch)
+            self.state = self.bundle.apply_step(self.state, payload)
         self._inflight = None
 
     def flush(self):
@@ -296,6 +411,14 @@ def main(argv=None):
     ap.add_argument("--chip", default="",
                     help="chip hint for --sync-delay auto "
                          "(e.g. tpu-v5e, a100-perlmutter, gh200-vista)")
+    ap.add_argument("--adaptive-sync", action="store_true",
+                    help="with --sync-delay auto: let the controller also "
+                         "switch the sync strategy down its ladder when "
+                         "the measured t_comm stays exposed at the max "
+                         "legal delay (DESIGN.md §9)")
+    ap.add_argument("--remeasure-every", type=int, default=0,
+                    help="re-sample t_comm/t_inner every N sync windows "
+                         "after the initial measurement (0 = measure once)")
     ap.add_argument("--outer-compression", default="none",
                     choices=["none", "quantize", "int8-wire"],
                     help="compress the cross-pod Δθ payload (int8-wire: "
@@ -320,6 +443,10 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if ((args.adaptive_sync or args.remeasure_every)
+            and args.sync_delay != "auto"):
+        ap.error("--adaptive-sync/--remeasure-every need --sync-delay auto "
+                 "(the measured controller they configure only runs there)")
 
     mc = (get_reduced_config(args.arch) if args.reduced
           else get_config(args.arch))
@@ -356,7 +483,9 @@ def main(argv=None):
           f"outer_sync={resolve_strategy(tc).name}")
     trainer = Trainer(mc, tc, pc, mesh,
                       checkpoint_dir=args.checkpoint_dir or None,
-                      chip_hint=args.chip)
+                      chip_hint=args.chip,
+                      adaptive_sync=args.adaptive_sync,
+                      remeasure_every=args.remeasure_every)
     if tc.sync_delay == "auto":
         print(f"sync_delay=auto resolved to d*={trainer.tc.sync_delay} "
               f"(chip={args.chip or 'none'}; re-resolves from measured "

@@ -15,7 +15,14 @@ Step functions:
 - ``inner_step``   — Alg. 2 lines 5-8: group-local AdamW. Provably free of
   (pod, data_outer) collectives (asserted by tests on the lowered HLO).
 - ``warmup_step``  — lazy-start/AdamW baseline: + global grad pmean.
-- ``accumulate_step`` — Alg. 1 lines 4-7: outer-momentum accumulation.
+- ``accumulate_step`` — Alg. 1 lines 4-7: outer-momentum accumulation (the
+  eager fused path; donates the old outer state).
+- ``accumulate_dispatch_step`` — the same accumulation as the dispatch half
+  of a delayed warmup event (DESIGN.md §9): non-donating, so the
+  pre-dispatch outer state stays live while the pending result is in
+  flight; the apply half is a host-side install
+  (``core.outer.warmup_apply`` — the warmup stale-delta correction is
+  identically zero).
 - ``outer_step``   — Alg. 2 lines 10-21: global Δθ pmean + Nesterov (eager,
   sync_delay=0 path).
 - ``dispatch_step`` / ``apply_step`` — the same update split for delayed
@@ -36,7 +43,12 @@ The outer collective itself is a pluggable :class:`OuterSyncStrategy`
 (flat fp32 pmean — the seed path, bit for bit — or hierarchical two-stage
 and/or blockwise-quantized with an error-feedback residual carried
 group-locally in ``OuterState.residual``) and the chunking plan; this
-module only builds the jitted shard_map scaffolding around it.
+module only builds the jitted shard_map scaffolding around it. Every
+jitted step in a :class:`StepBundle` is keyed off ONE strategy's plan —
+a mid-run strategy switch (DESIGN.md §9) builds a fresh bundle (the
+re-jit boundary; the Trainer caches bundles per strategy so switching
+back is compile-free) and retargets ``OuterState.residual`` through
+``init_residual`` when the residual requirement changes.
 """
 
 from __future__ import annotations
@@ -52,7 +64,7 @@ from repro import compat
 from repro.config import ModelConfig, ParallelConfig, TrainConfig
 from repro.core.outer import (OuterState, outer_apply, outer_init,
                               outer_reduce, outer_reduce_leaves,
-                              outer_update, warmup_accumulate)
+                              outer_update, warmup_reduce)
 from repro.launch import mesh as M
 from repro.models import registry as R
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
@@ -99,6 +111,7 @@ class StepBundle:
     inner_step: Callable
     warmup_step: Callable
     accumulate_step: Callable
+    accumulate_dispatch_step: Callable
     outer_step: Callable
     dispatch_step: Callable
     apply_step: Callable
@@ -113,6 +126,10 @@ class StepBundle:
     # host-side: fold the per-chunk outer leaves back into one OuterState
     # (num_syncs advances exactly once per sync, regardless of chunks).
     stitch_outer: Optional[Callable] = None
+    # residual retarget for mid-run strategy switches: materialize the
+    # zero error-feedback residual (with this bundle's shardings) when the
+    # incoming OuterState has none. None when the plan needs no residual.
+    init_residual: Optional[Callable] = None
 
 
 def _param_shapes(mc: ModelConfig, scan_layers: bool = False):
@@ -372,7 +389,7 @@ def build_train_steps(
                 # globally synced AdamW), but the VMA checker cannot prove
                 # it — pmean is the identity here and makes it explicit.
                 params = _global_pmean(params)
-            return warmup_accumulate(outer, params, mu)
+            return warmup_reduce(outer, params, mu)
 
     def accumulate_fn(state, outer, mu):
         f = compat.shard_map(
@@ -383,6 +400,11 @@ def build_train_steps(
         return f(state, outer, mu)
 
     accumulate_step = jax.jit(accumulate_fn, donate_argnums=(1,))
+    # the dispatch half of a delayed warmup event: identical math, but the
+    # old outer state is NOT donated — it stays the live state while the
+    # pending result is in flight (the apply half installs it host-side;
+    # core.outer.warmup_apply documents why the correction is zero).
+    accumulate_dispatch_step = jax.jit(accumulate_fn)
 
     def outer_body(state, outer, mu, olr, coords):
         with use_rules(rules):
@@ -562,6 +584,26 @@ def build_train_steps(
                 num_syncs=outer.num_syncs + 1,
                 residual=unf(ptreedef, r_leaves) if compress else None)
 
+    # ---- residual retarget (mid-run strategy switches, DESIGN.md §9) ------
+    init_residual = None
+    if compress:
+        _res_shardings = S.shardings(outer_spec.residual, mesh)
+
+        def init_residual(state):
+            """Zero error-feedback residual, (G,)-stacked like outer_init's.
+
+            Used when a strategy switch moves from a residual-free plan to
+            a compressed one: momentum/anchor carry over, the residual
+            starts at zero — exactly the first-sync semantics of
+            ``compress_delta(residual=None)``, now materialized so the
+            stacked shardings match this bundle's specs.
+            """
+            def f(state):
+                params = jax.tree.map(lambda x: x[0], state.params)
+                return jax.tree.map(
+                    lambda p: jnp.zeros((G, *p.shape), jnp.float32), params)
+            return jax.jit(f, out_shardings=_res_shardings)(state)
+
     def apply_body(state, dispatch):
         with use_rules(rules):
             params = jax.tree.map(lambda x: x[0], state.params)
@@ -614,12 +656,15 @@ def build_train_steps(
         batch_sharding=batch_sharding,
         init_state=init_state, init_outer=init_outer,
         inner_step=inner_step, warmup_step=warmup_step,
-        accumulate_step=accumulate_step, outer_step=outer_step,
+        accumulate_step=accumulate_step,
+        accumulate_dispatch_step=accumulate_dispatch_step,
+        outer_step=outer_step,
         dispatch_step=dispatch_step, apply_step=apply_step,
         eval_step=eval_step,
         chunk_dispatch_steps=chunk_dispatch_steps,
         chunk_apply_steps=chunk_apply_steps,
-        stitch_outer=stitch_outer)
+        stitch_outer=stitch_outer,
+        init_residual=init_residual)
 
 
 # ===========================================================================

@@ -1,14 +1,21 @@
-"""Pluggable outer-sync strategies (DESIGN.md §7).
+"""Pluggable outer-sync strategies (DESIGN.md §7) + controllers (§9).
 
 The outer collective — the only global communication in a Pier run — is a
 first-class, composable object here: ``resolve_strategy(tc)`` maps a
 config (grouped ``OuterCommConfig`` or the legacy flat flags, via the
 deprecation shim) onto an ``OuterSyncStrategy`` consumed by the
-distributed steps, the simulator, and the Trainer.
+distributed steps, the simulator, and the Trainer. ``SyncController``
+generalizes the delay controllers into decision objects: measured
+t_comm/t_inner resolves the overlap delay *and* can switch strategy
+mid-run (``AdaptiveSyncController``).
 """
 
 from repro.sync.base import (ChunkDispatch, OuterSyncStrategy, ReduceCtx,
                              SyncPlan, balanced_spans)
+from repro.sync.controller import (AdaptiveSyncController,
+                                   DelayDecisionAdapter,
+                                   ScriptedSyncController, SyncController,
+                                   SyncDecision, default_ladder)
 from repro.sync.delay import (DelayController, FixedDelayController,
                               MeasuredDelayController, ModelDelayController)
 from repro.sync.strategies import (Chunked, FlatFP32, Hierarchical,
@@ -18,6 +25,9 @@ from repro.sync.strategies import (Chunked, FlatFP32, Hierarchical,
 __all__ = [
     "ChunkDispatch", "OuterSyncStrategy", "ReduceCtx", "SyncPlan",
     "balanced_spans",
+    "AdaptiveSyncController", "DelayDecisionAdapter",
+    "ScriptedSyncController", "SyncController", "SyncDecision",
+    "default_ladder",
     "DelayController", "FixedDelayController", "MeasuredDelayController",
     "ModelDelayController",
     "Chunked", "FlatFP32", "Hierarchical", "Int8Wire", "Quantized",

@@ -235,8 +235,11 @@ class OuterSyncStrategy:
     # ------------------------------------------------------ delay injection
     def make_delay_controller(self, tc, mc, pc, *, chip: str = "",
                               measured: bool = True):
-        """The ``sync_delay="auto"`` hook: measured d* with the analytic
-        step-time model as fallback (or model-only with measured=False)."""
+        """Deprecated seam (kept as a shim): the scalar-delay half of
+        ``sync_delay="auto"`` — measured d* with the analytic step-time
+        model as fallback (or model-only with measured=False). New code
+        (and the Trainer) goes through :meth:`make_sync_controller`,
+        which wraps this controller into the decision protocol."""
         from repro.sync.delay import (MeasuredDelayController,
                                       ModelDelayController)
 
@@ -244,3 +247,35 @@ class OuterSyncStrategy:
         if not measured:
             return model
         return MeasuredDelayController(tc, fallback=model)
+
+    # --------------------------------------------------- decision injection
+    def make_sync_controller(self, tc, mc, pc, *, chip: str = "",
+                             measured: bool = True, adaptive: bool = False,
+                             remeasure_every: int = 0):
+        """The ``sync_delay="auto"`` hook: a :class:`SyncController`
+        emitting ``SyncDecision(delay, strategy)``. The default wraps the
+        (deprecated) :meth:`make_delay_controller` result — fixed
+        strategy, byte-for-byte the legacy resolution; ``adaptive=True``
+        returns an :class:`~repro.sync.controller.AdaptiveSyncController`
+        over :func:`~repro.sync.controller.default_ladder` so a t_comm
+        that stays exposed at the max legal delay switches the wire
+        format instead of freezing (DESIGN.md §9)."""
+        from repro.sync.controller import (AdaptiveSyncController,
+                                           DelayDecisionAdapter,
+                                           default_ladder)
+
+        delay_ctrl = self.make_delay_controller(tc, mc, pc, chip=chip,
+                                                measured=measured)
+        if not adaptive:
+            if remeasure_every and hasattr(delay_ctrl, "remeasure_every"):
+                delay_ctrl.remeasure_every = int(remeasure_every)
+            return DelayDecisionAdapter(delay_ctrl)
+        from repro.sync.delay import MeasuredDelayController
+
+        fallback = (delay_ctrl.fallback
+                    if isinstance(delay_ctrl, MeasuredDelayController)
+                    else delay_ctrl)
+        return AdaptiveSyncController(
+            tc, ladder=default_ladder(
+                self, num_pods=getattr(pc, "num_pods", 1)),
+            fallback=fallback, remeasure_every=remeasure_every)

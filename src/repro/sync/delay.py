@@ -45,13 +45,45 @@ class DelayController:
                        t_inner: Optional[float] = None) -> None:
         """Record one measured sync window (dispatch-to-ready seconds)."""
 
+    def tick_window(self) -> None:
+        """Note that one sync window elapsed, measured or not.
+
+        The host loop calls this on *every* outer dispatch (unlike
+        :meth:`observe_window`, which only fires while
+        :attr:`wants_measurement` holds) — the hook long-running
+        controllers use to schedule periodic re-measurement
+        (``remeasure_every``)."""
+
     def current_delay(self) -> int:
         return self.initial_delay()
 
 
 class FixedDelayController(DelayController):
-    def __init__(self, delay: int):
-        self._delay = int(delay)
+    """A constant d*.
+
+    ``sync_interval`` (when known) bounds the delay to the legal window
+    ``[0, sync_interval − 1]``: an out-of-range fixed delay would silently
+    violate the single-outstanding-dispatch invariant that
+    ``PierSchedule.events`` documents (the apply must precede the next
+    dispatch), so it is clamped with a warning rather than handed to the
+    schedule. A negative delay without an interval to clamp against
+    raises outright.
+    """
+
+    def __init__(self, delay: int, sync_interval: Optional[int] = None):
+        d = int(delay)
+        if sync_interval is not None:
+            hi = int(sync_interval) - 1
+            if d < 0 or d > hi:
+                warnings.warn(
+                    f"fixed sync_delay {d} outside the legal window "
+                    f"[0, {hi}] (sync_interval {int(sync_interval)}); "
+                    f"clamping — the in-flight dispatch must be applied "
+                    f"before the next boundary", stacklevel=2)
+                d = max(0, min(d, hi))
+        elif d < 0:
+            raise ValueError(f"sync_delay must be >= 0, got {d}")
+        self._delay = d
 
     def initial_delay(self) -> int:
         return self._delay
@@ -111,11 +143,21 @@ class MeasuredDelayController(DelayController):
     d* = ceil(ema_t_comm / ema_t_inner) clamped to
     ``[0, sync_interval - 1]``; before that the fallback (analytic model)
     answers.
+
+    ``remeasure_every = k > 0`` keeps long runs honest: after the initial
+    measurement completes, every ``k`` *unmeasured* sync windows
+    (:meth:`tick_window`, which the host calls on every dispatch) re-opens
+    a burst of ``min_windows`` measured windows, folding fresh samples
+    into the EMAs — fabric contention drifts over a multi-day run, and
+    without re-sampling the controller would freeze on the first
+    minutes' timings forever. 0 (the default) keeps the original
+    measure-once behavior.
     """
 
     def __init__(self, tc, *, fallback: Optional[DelayController] = None,
                  min_windows: int = 2, max_windows: int = 6,
-                 skip_windows: int = 1, ema: float = 0.5):
+                 skip_windows: int = 1, ema: float = 0.5,
+                 remeasure_every: int = 0):
         self.tc = tc
         self.fallback = fallback or FixedDelayController(0)
         self.min_windows = int(min_windows)
@@ -124,16 +166,32 @@ class MeasuredDelayController(DelayController):
         # collective — observed but not folded into the EMA
         self.skip_windows = int(skip_windows)
         self.ema = float(ema)
+        self.remeasure_every = int(remeasure_every)
         self.windows = 0
         self.t_inner: Optional[float] = None
         self.t_comm: Optional[float] = None
+        self._since_measure = 0  # unmeasured windows since the last burst
+        self._burst = 0  # re-measurement windows still owed
+        self._measured_this_window = False  # observe seen since last tick
 
     def initial_delay(self) -> int:
         return self.fallback.initial_delay()
 
     @property
     def wants_measurement(self) -> bool:
-        return self.windows < self.max_windows
+        return self.windows < self.max_windows or self._burst > 0
+
+    def tick_window(self) -> None:
+        measured, self._measured_this_window = (self._measured_this_window,
+                                                False)
+        if measured or self.wants_measurement:
+            self._since_measure = 0
+            return
+        if self.remeasure_every > 0:
+            self._since_measure += 1
+            if self._since_measure >= self.remeasure_every:
+                self._burst = self.min_windows
+                self._since_measure = 0
 
     def _ema(self, old: Optional[float], new: float) -> float:
         if old is None:
@@ -145,6 +203,9 @@ class MeasuredDelayController(DelayController):
 
     def observe_window(self, *, t_comm: float,
                        t_inner: Optional[float] = None) -> None:
+        if self._burst > 0:
+            self._burst -= 1
+        self._measured_this_window = True
         self.windows += 1
         if self.windows <= self.skip_windows:
             return

@@ -160,6 +160,46 @@ for a, b in zip(jax.tree.leaves(jax.tree.map(lambda g: g[0],
 print("max param divergence (sim vs dist, int8 wire hier pod ring):", worst)
 assert worst < 5e-4, worst
 
+# ---- controller-driven mid-run strategy switch (DESIGN.md §9): scripted
+# controllers drive BOTH engines through the same decision at the same
+# window (Quantized int8 -> int4 after window 2, flushing the in-flight
+# dispatch); sim and distributed stay within inner-step noise across the
+# switch, and the error-feedback residual survives the re-jit boundary.
+# The delayed section above already exercises warmup overlap on both
+# sides: with sync_delay=2 the accumulates at steps 3 and 7 dispatch into
+# the same in-flight window and apply at 5 and 9. ----
+from repro.sync import Quantized, ScriptedSyncController
+
+tc_s = tc.replace(sync_delay=2, outer_comm=OuterCommConfig(
+    compression="quantize", bits=8, block=64))
+q4 = Quantized(4, 64)
+sim_s = SimulatedRun(mc, tc_s, num_groups=2, seed=0,
+                     sync_controller=ScriptedSyncController(2, {2: q4}))
+trainer_s = Trainer(mc, tc_s, pc, mesh,
+                    sync_controller=ScriptedSyncController(2, {2: q4}))
+for step in range(16):
+    batch = sim_s._global_batch(step)
+    dist_batch = jax.device_put(
+        batch, trainer_s.bundle.batch_sharding(batch))
+    trainer_s.train_step(dist_batch)
+    sim_s.run(1)
+assert sim_s.strategy == trainer_s.strategy == q4
+worst = 0.0
+for a, b in zip(jax.tree.leaves(jax.tree.map(lambda g: g[0],
+                                             sim_s.state.group_params)),
+                jax.tree.leaves(jax.tree.map(lambda x: x[0],
+                                             trainer_s.state.params))):
+    worst = max(worst, float(jnp.abs(jnp.asarray(a, jnp.float32)
+                                     - jnp.asarray(b, jnp.float32)).max()))
+print("max param divergence (sim vs dist, int8->int4 switch):", worst)
+assert worst < 5e-4, worst
+for a, b in zip(jax.tree.leaves(sim_s.state.outer.momentum),
+                jax.tree.leaves(trainer_s.outer.momentum)):
+    d = float(jnp.abs(a - b).max())
+    assert d < 5e-4, d
+assert any(float(jnp.abs(r).max()) > 0
+           for r in jax.tree.leaves(trainer_s.outer.residual))
+
 # ---- chunked dispatch + per-chunk apply: bitwise == the unchunked
 # delayed Trainer on the same mesh (spans only repartition host dispatch;
 # each chunk installs through its own apply with a per-span correction) ----

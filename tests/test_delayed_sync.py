@@ -60,26 +60,38 @@ def test_events_eager_fused():
     sched = PierSchedule(_tc(sync_delay=0))
     evs = sched.events(14)  # first post-warmup boundary (warmup ends at 10)
     assert [e.kind for e in evs] == ["dispatch", "apply"]
-    assert all(e.sync_step == 14 for e in evs)
+    assert all(e.op == "outer" for e in evs)
+    assert all(e.sync_step == 14 and e.apply_step == 14 for e in evs)
+    # the warmup accumulate boundary is a fused pair too (DESIGN.md §9)
+    evs = sched.events(4)
+    assert [(e.kind, e.op) for e in evs] == [("dispatch", "accumulate"),
+                                             ("apply", "accumulate")]
 
 
 def test_events_warmup_inner_transition():
-    """Accumulates strictly inside warmup; dispatches strictly after."""
+    """Accumulate pairs strictly anchored inside warmup; outer pairs
+    strictly after — both flowing through the same dispatch/apply model
+    with the per-event apply_step = sync_step + delay."""
     sched = PierSchedule(_tc(sync_delay=2))  # warmup = steps 0..9
     kinds = {}
     for step in range(40):
         for ev in sched.events(step):
-            kinds.setdefault(ev.kind, []).append(step)
-    assert kinds["accumulate"] == [4, 9]  # boundaries inside warmup
-    assert kinds["dispatch"] == [14, 19, 24, 29, 34, 39]
-    assert kinds["apply"] == [16, 21, 26, 31, 36]  # each dispatch + 2
+            kinds.setdefault((ev.kind, ev.op), []).append(step)
+            assert ev.apply_step == ev.sync_step + 2
+    assert kinds[("dispatch", "accumulate")] == [4, 9]
+    # the second accumulate's apply (step 11) lands PAST the warmup→inner
+    # boundary — the window legally crosses phases (d < sync_interval)
+    assert kinds[("apply", "accumulate")] == [6, 11]
+    assert kinds[("dispatch", "outer")] == [14, 19, 24, 29, 34, 39]
+    assert kinds[("apply", "outer")] == [16, 21, 26, 31, 36]
     # the final dispatch (39) is in flight at the horizon — the host loop
     # drains it via flush(); the schedule itself never emits its apply here.
 
 
 @pytest.mark.parametrize("delay", [1, 2, 4])
 def test_events_dispatch_apply_interleaving(delay):
-    """At most one Δθ in flight; applies always precede the next dispatch."""
+    """At most one dispatch in flight; applies always precede the next
+    dispatch — uniformly over accumulate and outer events."""
     sched = PierSchedule(_tc(sync_delay=delay, total_steps=200))
     outstanding = 0
     for step in range(200):

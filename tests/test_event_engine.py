@@ -1,0 +1,524 @@
+"""Unified outer-event engine + adaptive sync controller (DESIGN.md §9).
+
+The contract under test:
+
+- **Event invariants** (property tests over arbitrary legal
+  (warmup_frac, sync_interval, sync_delay) triples): every boundary —
+  warmup accumulate and outer sync alike — is a dispatch/apply pair with
+  ``apply_step = sync_step + delay``; at most one dispatch is ever
+  outstanding; an apply always precedes the next dispatch, including
+  across the warmup→inner transition.
+- **Warmup overlap**: a warmup-overlapped run (``sync_delay > 0`` during
+  warmup) is *bit-identical* to eager warmup once the window closes —
+  the accumulate reads dispatch-time params and nothing reads the outer
+  state inside the window (core/outer.py:warmup_apply) — and full
+  delayed runs stay within the 5% convergence bound.
+- **Decision controllers**: ``FixedDelayController`` clamps out-of-range
+  delays against ``sync_interval``; ``MeasuredDelayController`` re-opens
+  measurement every ``remeasure_every`` windows; the
+  ``AdaptiveSyncController`` steps down its strategy ladder exactly when
+  the measured t_comm stays exposed at the max legal delay.
+- **Mid-run strategy switch**: controller-driven switches replay
+  bit-for-bit against manual ``switch_strategy`` calls on the simulator,
+  and the simulator and the Trainer stay bitwise equal at every sync
+  boundary across a switch (zero-inner-LR lockstep, where the outer
+  machinery is the entire computation), including the residual
+  materialize/drop transitions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis, or example-based shim
+
+from repro.config import OuterCommConfig, ParallelConfig, TrainConfig
+from repro.core.pier import PierSchedule
+from repro.core.simulate import SimulatedRun
+from repro.sync import (AdaptiveSyncController, DelayDecisionAdapter,
+                        FixedDelayController, FlatFP32, Hierarchical,
+                        MeasuredDelayController, Quantized,
+                        ScriptedSyncController, SyncDecision, default_ladder,
+                        resolve_strategy)
+from test_delayed_sync import MC, _tc
+
+BLOCK = 64
+
+
+# ---------------------------------------------------------------------------
+# PierSchedule.events invariants (property tests)
+# ---------------------------------------------------------------------------
+
+
+def _sched(total_steps, sync_interval, sync_delay, warmup_frac,
+           momentum_warmup=True, optimizer="pier"):
+    return PierSchedule(TrainConfig(
+        optimizer=optimizer, total_steps=total_steps,
+        sync_interval=sync_interval, sync_delay=sync_delay,
+        warmup_frac=warmup_frac, momentum_warmup=momentum_warmup,
+        lazy_start=optimizer != "diloco",
+        global_batch_size=8, seq_len=16))
+
+
+@given(r=st.integers(1, 7), d_raw=st.integers(0, 6),
+       w=st.floats(0.0, 0.6), mw=st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_events_single_outstanding_and_pairing(r, d_raw, w, mw):
+    """At most one outstanding dispatch; every apply matches the one
+    outstanding (op, sync_step); apply always precedes the next dispatch,
+    uniformly across the warmup→inner boundary."""
+    d = min(d_raw, r - 1)
+    sched = _sched(60, r, d, w, momentum_warmup=mw)
+    outstanding = None  # (op, sync_step, apply_step) | None
+    for step in range(60):
+        for ev in sched.events(step):
+            assert ev.apply_step == ev.sync_step + d
+            if ev.kind == "dispatch":
+                assert outstanding is None, (step, ev, outstanding)
+                assert ev.sync_step == step
+                # op matches the phase of the boundary
+                expect = "accumulate" if step < sched.warmup_steps else "outer"
+                assert ev.op == expect
+                outstanding = (ev.op, ev.sync_step, ev.apply_step)
+            else:
+                assert outstanding == (ev.op, ev.sync_step, ev.apply_step)
+                assert ev.apply_step == step
+                outstanding = None
+        # between steps: the window is empty or within its legal span
+        if outstanding is not None:
+            assert step < outstanding[2] <= step + d
+
+
+@given(r=st.integers(1, 7), d_raw=st.integers(0, 6), w=st.floats(0.0, 0.6))
+@settings(max_examples=25, deadline=None)
+def test_events_every_boundary_dispatches_exactly_once(r, d_raw, w):
+    """Dispatch count == boundary count; each in-horizon dispatch gets
+    exactly one apply, at sync_step + delay."""
+    d = min(d_raw, r - 1)
+    sched = _sched(60, r, d, w)
+    dispatches, applies = [], []
+    for step in range(60 + d):
+        for ev in sched.events(step):
+            if ev.sync_step >= 60:
+                continue  # boundaries past the horizon (drain margin only)
+            (dispatches if ev.kind == "dispatch" else applies).append(
+                (ev.op, ev.sync_step))
+    boundaries = [s for s in range(60) if sched.is_sync_step(s)]
+    assert [s for _, s in dispatches] == boundaries
+    assert applies == dispatches  # every dispatch applied, in order
+
+
+def test_events_warmup_window_crosses_phase_boundary():
+    """An accumulate dispatched on the last warmup boundary applies inside
+    the inner phase — legally (the first outer dispatch is a full
+    sync_interval later)."""
+    sched = _sched(40, 5, 4, 0.25)  # warmup 10, accumulates at 4, 9
+    evs = sched.events(13)  # 9 + 4 — an inner-phase step
+    assert [(e.kind, e.op, e.sync_step) for e in evs] == [
+        ("apply", "accumulate", 9)]
+    # and the first outer dispatch at 14 follows strictly after
+    assert [(e.kind, e.op) for e in sched.events(14)] == [
+        ("dispatch", "outer")]
+
+
+def test_momentum_warmup_off_suppresses_accumulate_pairs():
+    sched = _sched(40, 5, 2, 0.25, momentum_warmup=False)
+    for step in range(10):
+        assert sched.events(step) == ()
+
+
+# ---------------------------------------------------------------------------
+# warmup overlap: bit-identity against eager warmup + convergence
+# ---------------------------------------------------------------------------
+
+
+def test_warmup_overlap_bit_identical_to_eager_warmup():
+    """Delayed warmup accumulates == eager, bit for bit, once the window
+    closes: the accumulate reads dispatch-time params and nothing reads
+    the outer state inside the window (core/outer.py:warmup_apply)."""
+    tc = _tc(sync_delay=0)  # warmup steps 0..9, accumulates at 4, 9
+    eager = SimulatedRun(MC, tc, num_groups=2, seed=0)
+    eager.run(13)
+    delayed = SimulatedRun(MC, _tc(sync_delay=3), num_groups=2, seed=0)
+    delayed.run(13)  # accumulate at 9 applied at 12; first dispatch at 14
+    assert delayed._inflight is None
+    for a, b in zip(jax.tree.leaves(eager.state.params),
+                    jax.tree.leaves(delayed.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(eager.state.outer.momentum),
+                    jax.tree.leaves(delayed.state.outer.momentum)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(eager.state.outer.anchor),
+                    jax.tree.leaves(delayed.state.outer.anchor)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert (int(eager.state.outer.num_syncs)
+            == int(delayed.state.outer.num_syncs) == 2)
+
+
+def test_warmup_overlap_mid_window_holds_pre_dispatch_state():
+    """Inside an accumulate window the live outer state is the
+    pre-dispatch one (the pending result installs at apply_step)."""
+    r = SimulatedRun(MC, _tc(sync_delay=3), num_groups=2, seed=0)
+    r.run(5)  # accumulate dispatched at 4, pending until 7
+    assert r._inflight is not None and r._inflight[1] == "accumulate"
+    assert int(r.state.outer.num_syncs) == 0  # pre-dispatch state is live
+    r.run(3)  # apply lands at 7
+    assert r._inflight is None
+    assert int(r.state.outer.num_syncs) == 1
+
+
+@pytest.mark.slow
+def test_warmup_overlap_convergence_within_5pct():
+    """Full warmup-overlapped delayed run within 5% of eager — the
+    acceptance bound of tests/test_delayed_sync.py, here with a LONG
+    warmup (40% of the run) so most of the overlapped windows are warmup
+    accumulates. (Warmup overlap itself is bit-neutral — proven exactly
+    by test_warmup_overlap_bit_identical_to_eager_warmup — so any loss
+    gap comes from the post-warmup overlap depth, same as PR 1.)"""
+    tc = _tc(total_steps=60, warmup_frac=0.4, sync_interval=5)
+    eager = SimulatedRun(MC, tc, num_groups=2, seed=0)
+    he = eager.run(60, eval_every=60)
+    delayed = SimulatedRun(MC, tc.replace(sync_delay=2), num_groups=2,
+                           seed=0)
+    hd = delayed.run(60, eval_every=60)
+    ve, vd = he["val_loss"][-1], hd["val_loss"][-1]
+    assert vd <= ve * 1.05, (ve, vd)
+
+
+# ---------------------------------------------------------------------------
+# FixedDelayController clamping (satellite: config-time/controller bounds)
+# ---------------------------------------------------------------------------
+
+
+def test_fixed_delay_clamps_against_sync_interval():
+    with pytest.warns(UserWarning, match="clamping"):
+        ctrl = FixedDelayController(7, sync_interval=5)
+    assert ctrl.initial_delay() == 4
+    with pytest.warns(UserWarning, match="clamping"):
+        ctrl = FixedDelayController(-1, sync_interval=5)
+    assert ctrl.initial_delay() == 0
+    assert FixedDelayController(3, sync_interval=5).initial_delay() == 3
+    with pytest.raises(ValueError):
+        FixedDelayController(-1)
+
+
+def test_config_time_validation_still_raises():
+    with pytest.raises(ValueError):
+        _tc(sync_delay=5, sync_interval=5)
+
+
+# ---------------------------------------------------------------------------
+# MeasuredDelayController.remeasure_every (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_remeasure_every_reopens_measurement():
+    tc = _tc(sync_delay=0, sync_interval=10)
+    ctrl = MeasuredDelayController(tc, min_windows=2, max_windows=2,
+                                   skip_windows=0, remeasure_every=3)
+    for _ in range(2):
+        ctrl.observe_step(t_inner=0.01)
+        ctrl.observe_window(t_comm=0.02)
+        ctrl.tick_window()
+    assert not ctrl.wants_measurement
+    assert ctrl.current_delay() == 2
+    # three unmeasured windows elapse -> a fresh burst of min_windows
+    for i in range(3):
+        assert not ctrl.wants_measurement
+        ctrl.tick_window()
+    assert ctrl.wants_measurement
+    # the burst folds fresh (slower-fabric) samples into the EMA
+    for _ in range(2):
+        ctrl.observe_window(t_comm=0.08)
+        ctrl.tick_window()
+    assert not ctrl.wants_measurement
+    assert ctrl.current_delay() > 2
+
+
+def test_remeasure_zero_keeps_measure_once_behavior():
+    ctrl = MeasuredDelayController(_tc(), min_windows=2, max_windows=3,
+                                   skip_windows=0)
+    for _ in range(3):
+        ctrl.observe_window(t_comm=0.1, t_inner=0.1)
+        ctrl.tick_window()
+    for _ in range(50):
+        ctrl.tick_window()
+    assert not ctrl.wants_measurement
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveSyncController: ladder + exposure-triggered switching
+# ---------------------------------------------------------------------------
+
+
+def test_default_ladder_shapes():
+    assert [s.name for s in default_ladder(FlatFP32())] == [
+        "flat-fp32", "quantized(int8,block=256)",
+        "quantized(int4,block=256)"]
+    assert default_ladder(Quantized(8, BLOCK)) == (
+        Quantized(8, BLOCK), Quantized(4, BLOCK))
+    assert default_ladder(Quantized(4, BLOCK)) == (Quantized(4, BLOCK),)
+    # pods + non-hierarchical chain: the last rung toggles the two-stage
+    # reduce on the cheapest wire format
+    lad = default_ladder(FlatFP32(), num_pods=4)
+    assert lad[-1] == Hierarchical(inner=Quantized(4, 256))
+    # already-hierarchical chains never double-wrap
+    lad = default_ladder(Hierarchical(inner=Quantized(8, BLOCK)), num_pods=4)
+    assert lad == (Hierarchical(inner=Quantized(8, BLOCK)),
+                   Hierarchical(inner=Quantized(4, BLOCK)))
+
+
+def _feed(ctrl, *, t_inner, t_comm, windows):
+    for _ in range(windows):
+        ctrl.observe_step(t_inner)
+        ctrl.observe_window(t_comm=t_comm)
+        ctrl.tick_window()
+
+
+def test_adaptive_switches_when_exposed_at_max_delay():
+    tc = _tc(sync_delay=0, sync_interval=5)
+    ctrl = AdaptiveSyncController(
+        tc, ladder=default_ladder(Quantized(8, BLOCK)), min_windows=2,
+        max_windows=2)
+    assert ctrl.initial_decision() == SyncDecision(0, None)
+    # t_comm = 10 x t_inner > max legal delay (4): exposed even fully
+    # overlapped -> step down the ladder at max overlap (3 windows: the
+    # first wall-clocks compilation and is skipped, then min_windows=2)
+    _feed(ctrl, t_inner=0.01, t_comm=0.1, windows=3)
+    dec = ctrl.current_decision()
+    assert dec.strategy == Quantized(4, BLOCK)
+    assert dec.delay == 4
+    # measurement restarts against the new wire format (t_inner carried)
+    assert ctrl.wants_measurement
+    assert ctrl.delay_controller.t_inner is not None
+    # the cheaper format fits: settle on its measured d*, no more rungs
+    _feed(ctrl, t_inner=0.01, t_comm=0.02, windows=3)
+    dec = ctrl.current_decision()
+    assert dec.strategy is None and dec.delay == 2
+
+
+def test_adaptive_keeps_strategy_when_delay_suffices():
+    tc = _tc(sync_delay=0, sync_interval=5)
+    ctrl = AdaptiveSyncController(
+        tc, ladder=default_ladder(Quantized(8, BLOCK)), min_windows=2,
+        max_windows=2)
+    _feed(ctrl, t_inner=0.01, t_comm=0.03, windows=3)
+    dec = ctrl.current_decision()
+    assert dec.strategy is None and dec.delay == 3
+
+
+def test_adaptive_ladder_exhaustion_stays_on_last_rung():
+    tc = _tc(sync_delay=0, sync_interval=5)
+    ctrl = AdaptiveSyncController(
+        tc, ladder=(Quantized(4, BLOCK),), min_windows=2, max_windows=2)
+    _feed(ctrl, t_inner=0.01, t_comm=1.0, windows=3)
+    dec = ctrl.current_decision()
+    assert dec.strategy is None and dec.delay == 4  # clamped, no switch
+
+
+def test_make_sync_controller_hook():
+    """The strategy hook returns the decision protocol: an adapter over
+    the (deprecated) delay controller by default, the adaptive ladder
+    controller on request."""
+    tc, pc = _tc(), ParallelConfig()
+    default = FlatFP32().make_sync_controller(tc, MC, pc, chip="")
+    assert isinstance(default, DelayDecisionAdapter)
+    assert isinstance(default.delay_controller, MeasuredDelayController)
+    assert default.initial_decision().strategy is None
+    adaptive = Quantized(8, BLOCK).make_sync_controller(
+        tc, MC, pc, chip="", adaptive=True, remeasure_every=7)
+    assert isinstance(adaptive, AdaptiveSyncController)
+    assert adaptive.ladder == (Quantized(8, BLOCK), Quantized(4, BLOCK))
+    assert adaptive.delay_controller.remeasure_every == 7
+
+
+def test_scripted_controller_emits_strategy_once():
+    q4 = Quantized(4, BLOCK)
+    ctrl = ScriptedSyncController(2, {2: q4})
+    assert ctrl.initial_decision() == SyncDecision(2, None)
+    ctrl.tick_window()
+    assert ctrl.current_decision() == SyncDecision(2, None)
+    ctrl.tick_window()
+    assert ctrl.current_decision() == SyncDecision(2, q4)
+    ctrl.tick_window()
+    assert ctrl.current_decision() == SyncDecision(2, None)
+
+
+# ---------------------------------------------------------------------------
+# mid-run strategy switch: simulator semantics
+# ---------------------------------------------------------------------------
+
+
+def _sim_tc(**kw):
+    base = dict(total_steps=24, global_batch_size=8, seq_len=16,
+                sync_interval=4, inner_lr=1e-3, inner_min_lr=1e-4,
+                warmup_frac=0.25, sync_delay=2)
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+def test_controller_switch_bitwise_equals_manual_switch():
+    """A scripted controller switching Quantized(8)->Quantized(4) after
+    window 2 replays bit-for-bit against manual switch_strategy calls at
+    the same boundary — the decision plumbing adds nothing numerically."""
+    tc = _sim_tc(outer_comm=OuterCommConfig(compression="quantize",
+                                            block=BLOCK))
+    q4 = Quantized(4, BLOCK)
+    driven = SimulatedRun(MC, tc, num_groups=2, seed=0,
+                          sync_controller=ScriptedSyncController(2, {2: q4}))
+    driven.run(24)
+    driven.flush()
+
+    manual = SimulatedRun(MC, tc, num_groups=2, seed=0)
+    # windows (outer dispatches) fire at steps 7, 11, 15, 19, 23; the
+    # controller decision lands right after the 2nd dispatch (step 11),
+    # flushing its window early — replay that exactly
+    manual.run(12)
+    manual.switch_strategy(q4)
+    manual.run(12)
+    manual.flush()
+
+    assert driven.strategy == manual.strategy == q4
+    for a, b in zip(jax.tree.leaves(driven.state.group_params),
+                    jax.tree.leaves(manual.state.group_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(driven.state.outer.momentum),
+                    jax.tree.leaves(manual.state.outer.momentum)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(driven.state.outer.residual),
+                    jax.tree.leaves(manual.state.outer.residual)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_switch_materializes_and_drops_residual():
+    """flat -> quantized materializes a zero residual (first-sync
+    semantics); quantized -> flat drops it."""
+    r = SimulatedRun(MC, _sim_tc(), num_groups=2, seed=0)
+    assert r.state.outer.residual is None
+    r.run(13)  # past the first outer dispatch/apply (7 -> 9)
+    r.switch_strategy(Quantized(8, BLOCK))
+    assert r.plan.needs_residual
+    leaves = jax.tree.leaves(r.state.outer.residual)
+    assert leaves and all(l.shape[0] == 2 for l in leaves)
+    assert all(float(jnp.abs(l).max()) == 0.0 for l in leaves)
+    r.run(4)  # a quantized sync runs; error feedback populates
+    assert any(float(jnp.abs(l).max()) > 0
+               for l in jax.tree.leaves(r.state.outer.residual))
+    r.switch_strategy(FlatFP32())
+    assert r.state.outer.residual is None
+    r.run(7)
+    r.flush()
+    assert int(r.state.outer.num_syncs) >= 4
+
+
+def test_switch_delay_decision_rebuilds_schedule():
+    """A delay-only decision mid-run re-times subsequent windows without
+    stranding the in-flight one."""
+    ctrl = ScriptedSyncController(2, {2: SyncDecision(0, None)})
+    r = SimulatedRun(MC, _sim_tc(), num_groups=2, seed=0,
+                     sync_controller=ctrl)
+    r.run(24)
+    assert r.tc.sync_delay == 0
+    assert r._inflight is None  # d=0 windows apply on their own step
+
+
+# ---------------------------------------------------------------------------
+# simulator <-> Trainer lockstep across a switch (bitwise, zero inner LR)
+# ---------------------------------------------------------------------------
+
+
+def _lockstep_pair(tc, controller_a, controller_b, steps=24):
+    """Drive a SimulatedRun and a Trainer on identical batches; return
+    (sim, trainer, boundary_steps_compared)."""
+    from repro.launch import mesh as M
+    from repro.launch.train import Trainer
+
+    sim = SimulatedRun(MC, tc, num_groups=1, seed=0,
+                       sync_controller=controller_a)
+    pc = ParallelConfig(data_axis_size=1, model_axis_size=1, data_outer=1)
+    mesh = M.small_mesh((1, 1, 1), ("data_outer", "data_inner", "model"))
+    tr = Trainer(MC, tc, pc, mesh, sync_controller=controller_b)
+    compared = []
+    for step in range(steps):
+        batch = sim._global_batch(step)
+        dist = jax.device_put(batch, tr.bundle.batch_sharding(batch))
+        tr.train_step(dist)
+        sim.run(1)
+        if (step + 1) % tc.sync_interval == 0:
+            # a sync boundary: live params and outer state must agree
+            # bit for bit (zero inner LR -> the outer machinery is the
+            # entire computation on both sides)
+            sim_params = (sim.state.group_params if sim.state.group_params
+                          is not None else jax.tree.map(
+                              lambda x: x[None], sim.state.params))
+            for a, b in zip(jax.tree.leaves(sim_params),
+                            jax.tree.leaves(tr.state.params)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(sim.state.outer.momentum),
+                            jax.tree.leaves(tr.outer.momentum)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            compared.append(step)
+    return sim, tr, compared
+
+
+@pytest.mark.slow
+def test_sim_trainer_lockstep_bitwise_across_switch():
+    """Controller-driven mid-run strategy switch, end to end in both
+    engines: simulator and Trainer states bitwise equal at every sync
+    boundary (zero inner LR isolates the outer event machinery — the
+    dispatch windows, the switch flush, and the residual retarget are
+    the entire computation)."""
+    q4 = Quantized(4, BLOCK)
+    tc = _sim_tc(inner_lr=0.0, inner_min_lr=0.0,
+                 outer_comm=OuterCommConfig(compression="quantize",
+                                            block=BLOCK))
+    sim, tr, compared = _lockstep_pair(
+        tc, ScriptedSyncController(2, {2: q4}),
+        ScriptedSyncController(2, {2: q4}))
+    assert len(compared) == 6
+    assert sim.strategy == tr.strategy == q4
+    assert int(sim.state.outer.num_syncs) == int(tr.outer.num_syncs)
+
+
+@pytest.mark.slow
+def test_sim_trainer_lockstep_bitwise_flat_to_quantized():
+    """The residual-materializing transition (flat -> quantized) through
+    both engines' retarget paths, bitwise at every boundary."""
+    q8 = Quantized(8, BLOCK)
+    tc = _sim_tc(inner_lr=0.0, inner_min_lr=0.0)
+    sim, tr, compared = _lockstep_pair(
+        tc, ScriptedSyncController(2, {3: q8}),
+        ScriptedSyncController(2, {3: q8}))
+    assert len(compared) == 6
+    assert sim.strategy == tr.strategy == q8
+    assert sim.state.outer.residual is not None
+    assert tr.outer.residual is not None
+
+
+@pytest.mark.slow
+def test_trainer_switch_real_lr_smoke():
+    """Real-LR Trainer run across a controller switch: the switch lands,
+    the run drains cleanly, and training stays sane (the sim<->trainer
+    numeric equivalence on a real mesh rides in md_equivalence.py)."""
+    from repro.data.pipeline import synthetic_pipeline
+    from repro.launch import mesh as M
+    from repro.launch.train import Trainer
+
+    q4 = Quantized(4, BLOCK)
+    tc = _sim_tc(outer_comm=OuterCommConfig(compression="quantize",
+                                            block=BLOCK))
+    pc = ParallelConfig(data_axis_size=1, model_axis_size=1, data_outer=1)
+    mesh = M.small_mesh((1, 1, 1), ("data_outer", "data_inner", "model"))
+    tr = Trainer(MC, tc, pc, mesh,
+                 sync_controller=ScriptedSyncController(2, {2: q4}))
+    assert tr.strategy == resolve_strategy(tc)
+    pipe = synthetic_pipeline(mesh, M.data_axes(mesh), MC, tr.tc)
+    try:
+        tr.run(24, pipe, log_every=0)
+    finally:
+        pipe.close()
+    assert tr.strategy == q4
+    assert tr.bundle.plan.name == q4.name
+    assert tr._inflight is None
+    assert len(tr._bundles) == 2  # re-jit boundary: one bundle per strategy
+    assert np.isfinite(tr.history[-1]["loss"])

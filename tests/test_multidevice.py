@@ -33,7 +33,7 @@ def _run(script):
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     r = subprocess.run(
         [sys.executable, os.path.join(HERE, "multidevice", script)],
-        capture_output=True, text=True, timeout=540, env=env)
+        capture_output=True, text=True, timeout=900, env=env)
     if r.returncode != 0:
         raise AssertionError(
             f"{script} failed\n--- stdout ---\n{r.stdout[-3000:]}"

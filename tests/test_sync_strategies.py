@@ -160,8 +160,11 @@ def test_balanced_spans_cover_and_order():
 # equivalence matrix: legacy flat flags == grouped OuterCommConfig
 # ---------------------------------------------------------------------------
 
+# delay 4 = the max legal window at sync_interval 5 — under the unified
+# event engine (DESIGN.md §9) delays > 0 also overlap the warmup
+# accumulates, so the matrix covers warmup-phase windows as well
 MATRIX = list(itertools.product(
-    ("none", "quantize"), (False, True), (1, 3), (0, 2)))
+    ("none", "quantize"), (False, True), (1, 3), (0, 2, 4)))
 
 
 @pytest.mark.parametrize("compression,hier,chunks,delay", MATRIX)
@@ -181,7 +184,8 @@ def test_legacy_flags_resolve_identically_to_grouped_config(
 
 
 @pytest.mark.parametrize("compression,hier,chunks,delay",
-                         [("none", True, 1, 2), ("quantize", False, 2, 2)])
+                         [("none", True, 1, 2), ("quantize", False, 2, 2),
+                          ("quantize", False, 1, 4)])
 def test_legacy_flags_bit_identical_to_grouped_config_sim(
         compression, hier, chunks, delay):
     """Run-level half of the equivalence matrix: legacy-flag and grouped
