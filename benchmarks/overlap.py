@@ -113,24 +113,28 @@ def cross_domain_bytes(n_params: float, *, n_groups: int, pods: int = 1,
 
 def outer_comm_time(n_params: float, n_devices: int, chip: Chip,
                     group_size: int, *, bits: int = 32, block: int = 256,
-                    hierarchical: bool = False, pods: int = 1) -> float:
+                    hierarchical: bool = False, pods: int = 1,
+                    sharded: bool = False) -> float:
     """Ring all-reduce of the Δθ payload across the slow domain.
 
     Hierarchical: full-precision psum over the fast intra-pod domain first
     (costed at intra_group_bw), then the compressed exchange over the pod
-    endpoints (inter_group_bw).
+    endpoints (inter_group_bw). Sharded (DESIGN.md §10): each of the
+    ``group_size`` device lanes exchanges only its 1/group_size shard of
+    the payload — the lanes run in parallel, so the exchange time divides
+    by the shard count while the total wire traffic stays the same.
     """
     n_groups = max(n_devices // group_size, 1)
     per_param = payload_bytes_per_param(bits, block)
+    shards = max(group_size, 1) if sharded else 1
+    lane = n_params * per_param / shards
     if hierarchical and pods > 1:
         groups_per_pod = max(n_groups // pods, 1)
-        t_intra = _allreduce_t(n_params * 4.0, groups_per_pod,
+        t_intra = _allreduce_t(n_params * 4.0 / shards, groups_per_pod,
                                chip.intra_group_bw)
-        t_cross = _allreduce_t(n_params * per_param, pods,
-                               chip.inter_group_bw)
+        t_cross = _allreduce_t(lane, pods, chip.inter_group_bw)
         return t_intra + t_cross
-    return _allreduce_t(n_params * per_param, n_groups,
-                        chip.inter_group_bw)
+    return _allreduce_t(lane, n_groups, chip.inter_group_bw)
 
 
 def outer_update_time(n_params: float, chip: Chip) -> float:
@@ -142,11 +146,13 @@ def period_times(n_params: float, n_devices: int, chip: Chip, *,
                  sync_interval: int, sync_delay: int,
                  group_size: int = 4, bits: int = 32, block: int = 256,
                  hierarchical: bool = False, pods: int = 1,
-                 comm_chunks: int = 1) -> Dict[str, float]:
+                 comm_chunks: int = 1,
+                 sharded: bool = False) -> Dict[str, float]:
     t_inner = inner_step_time(n_params, n_devices, chip, group_size)
     t_comm = outer_comm_time(n_params, n_devices, chip, group_size,
                              bits=bits, block=block,
-                             hierarchical=hierarchical, pods=pods)
+                             hierarchical=hierarchical, pods=pods,
+                             sharded=sharded)
     t_upd = outer_update_time(n_params, chip)
     if comm_chunks > 1:
         # chunked dispatch pipelines quantize/update against the exchange
@@ -182,6 +188,7 @@ def period_times(n_params: float, n_devices: int, chip: Chip, *,
     inner_comm_per_step = exposed / sync_interval
     inner_step = t_inner + inner_comm_per_step
     grad_cross_bytes = 2.0 * n_params * 4.0 * (n_groups - 1)
+    shards = max(group_size, 1) if sharded else 1
     return {
         "t_inner": t_inner, "t_comm": t_comm, "t_update": t_upd,
         "eager": eager, "overlap": overlap,
@@ -189,6 +196,10 @@ def period_times(n_params: float, n_devices: int, chip: Chip, *,
         "exposed_frac": exposed / max(t_comm, 1e-30),
         "d_star": min(dstar, sync_interval - 1),
         "bytes_cross_per_sync": bytes_cross,
+        # sharded exchange: each device lane carries 1/shards of the
+        # payload (the total above is the sum over lanes)
+        "shards": shards,
+        "per_device_bytes_cross_per_sync": bytes_cross / shards,
         "bytes_flat_fp32": bytes_flat,
         "bytes_reduction": bytes_flat / max(bytes_cross, 1e-30),
         # per-phase comm fractions + bytes (consumed by the bench-models
@@ -204,10 +215,13 @@ def period_times(n_params: float, n_devices: int, chip: Chip, *,
 
 
 def measured_wire_fields(n_params: float, *, endpoints: int, bits: int,
-                         block: int) -> Dict[str, float]:
+                         block: int, shards: int = 1) -> Dict[str, float]:
     """Measured (not modeled) wire bytes: run the real quantizer + packer
     (``repro.kernels.ring_allreduce``) and read the actual buffer sizes,
     scaled onto the same ring-traffic convention as the analytic model.
+    ``shards > 1`` (the sharded exchange) measures at the per-device shard
+    size — each lane quantizes and exchanges only n/shards elements — and
+    reports the per-device cross bytes next to the all-lanes total.
     Empty when the runtime package is not importable (benchmarks-only
     deployment) — the modeled fields are then all there is.
     """
@@ -216,12 +230,16 @@ def measured_wire_fields(n_params: float, *, endpoints: int, bits: int,
             measure_wire_bytes, measured_cross_domain_bytes)
     except ImportError:
         return {}
-    m = measure_wire_bytes(int(n_params), bits=bits, block=block)
+    shards = max(int(shards), 1)
+    n_shard = -(-int(n_params) // shards)  # ceil
+    m = measure_wire_bytes(n_shard, bits=bits, block=block)
+    per_device_cross = measured_cross_domain_bytes(
+        n_shard, endpoints=endpoints, bits=bits, block=block)
     return {
         "measured_payload_bytes_per_param":
             m["measured_payload_bytes_per_param"],
-        "measured_bytes_cross_per_sync": measured_cross_domain_bytes(
-            int(n_params), endpoints=endpoints, bits=bits, block=block),
+        "measured_bytes_cross_per_sync": per_device_cross * shards,
+        "measured_per_device_bytes_cross_per_sync": per_device_cross,
         "measured_sample_elems": m["measured_sample_elems"],
     }
 
@@ -254,7 +272,7 @@ def resolve_sync_delay(*, n_params: float, n_devices: int, group_size: int,
 def sweep(chip_name: str, *, n_devices: int, sync_interval: int,
           delays: List[int], group_size: int, bits: int = 32,
           block: int = 256, hierarchical: bool = False, pods: int = 1,
-          comm_chunks: int = 1) -> List[Dict]:
+          comm_chunks: int = 1, sharded: bool = False) -> List[Dict]:
     chip = CHIPS[chip_name]
     n_groups = max(n_devices // group_size, 1)
     rows = []
@@ -264,13 +282,14 @@ def sweep(chip_name: str, *, n_devices: int, sync_interval: int,
         # device work (it runs at training startup)
         measured = measured_wire_fields(
             n, endpoints=(pods if hierarchical else n_groups),
-            bits=bits, block=block)
+            bits=bits, block=block,
+            shards=(group_size if sharded else 1))
         for d in delays:
             r = period_times(n, n_devices, chip, sync_interval=sync_interval,
                             sync_delay=d, group_size=group_size,
                             bits=bits, block=block,
                             hierarchical=hierarchical, pods=pods,
-                            comm_chunks=comm_chunks)
+                            comm_chunks=comm_chunks, sharded=sharded)
             rows.append({"chip": chip_name, "model": model, "delay": d,
                          **measured, **r})
     return rows
@@ -330,6 +349,9 @@ def main(argv=None):
                          "cross-pod")
     ap.add_argument("--pods", type=int, default=2)
     ap.add_argument("--comm-chunks", type=int, default=1)
+    ap.add_argument("--sharded", action="store_true",
+                    help="sharded outer exchange: each device lane carries "
+                         "1/group_size of the payload (DESIGN.md §10)")
     ap.add_argument("--json", default="",
                     help="write the sweep rows to this JSON file")
     ap.add_argument("--measure", action="store_true",
@@ -346,7 +368,8 @@ def main(argv=None):
                          delays=args.delays, group_size=args.group_size,
                          bits=args.bits, block=args.block,
                          hierarchical=args.hierarchical, pods=args.pods,
-                         comm_chunks=args.comm_chunks):
+                         comm_chunks=args.comm_chunks,
+                         sharded=args.sharded):
             all_rows.append(row)
             print(f"{row['chip']},{row['model']},{row['delay']},"
                   f"{row['t_inner']*1e3:.3f},{row['t_comm']*1e3:.3f},"
@@ -364,7 +387,8 @@ def main(argv=None):
             from repro.sync import strategy_name
             strategy = strategy_name(
                 bits=args.bits, block=args.block,
-                hierarchical=args.hierarchical, chunks=args.comm_chunks)
+                hierarchical=args.hierarchical, chunks=args.comm_chunks,
+                sharded=args.sharded)
         except ImportError:  # benchmarks-only deployment without src/
             strategy = None
         except ValueError:  # bits the runtime has no strategy for (the
@@ -377,7 +401,7 @@ def main(argv=None):
                     "sync_interval": args.sync_interval, "bits": args.bits,
                     "block": args.block, "hierarchical": args.hierarchical,
                     "pods": args.pods, "comm_chunks": args.comm_chunks,
-                    "strategy": strategy,
+                    "sharded": args.sharded, "strategy": strategy,
                 },
                 "rows": all_rows,
             }, f, indent=2)

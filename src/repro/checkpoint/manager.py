@@ -29,12 +29,25 @@ import numpy as np
 _SEP = "/"
 
 
+def _path_key(path) -> str:
+    """npz dict key for one pytree path (dict keys / attr names / indices)."""
+    return _SEP.join(
+        str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", ""))))
+        for p in path)
+
+
 def _flatten(tree) -> Dict[str, Any]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = _SEP.join(
-            str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", ""))))
-            for p in path)
+        key = _path_key(path)
+        if key in flat:
+            # e.g. a custom node whose key entries carry none of
+            # key/name/idx: every leaf stringifies to "" and the npz dict
+            # would silently keep only the last one
+            raise ValueError(
+                f"duplicate checkpoint key {key!r} (pytree path {path!r}): "
+                f"the node's path entries carry no key/name/idx, so leaves "
+                f"would silently overwrite each other in the npz archive")
         flat[key] = leaf
     return flat
 
@@ -99,23 +112,26 @@ class CheckpointManager:
             manifest = json.load(f)
         out = {}
         for name, template in templates.items():
-            data = np.load(os.path.join(path, f"{name}.npz"))
             flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
             shard_tree = shardings.get(name) if shardings else None
             shard_leaves = (jax.tree_util.tree_leaves(shard_tree)
                             if shard_tree is not None else [None] * len(flat_t))
             leaves = []
-            for (p, leaf), sh in zip(flat_t, shard_leaves):
-                key = _SEP.join(
-                    str(getattr(q, "key", getattr(q, "name",
-                                                  getattr(q, "idx", ""))))
-                    for q in p)
-                arr = data[key]
-                if tuple(arr.shape) != tuple(leaf.shape):
-                    raise ValueError(
-                        f"checkpoint/{name}/{key}: shape {arr.shape} != "
-                        f"expected {leaf.shape} (group layout mismatch?)")
-                leaves.append(jax.device_put(arr, sh) if sh is not None
-                              else jax.device_put(arr))
+            with np.load(os.path.join(path, f"{name}.npz")) as data:
+                for (p, leaf), sh in zip(flat_t, shard_leaves):
+                    key = _path_key(p)
+                    arr = data[key]
+                    if tuple(arr.shape) != tuple(leaf.shape):
+                        raise ValueError(
+                            f"checkpoint/{name}/{key}: shape {arr.shape} != "
+                            f"expected {leaf.shape} (group layout mismatch?)")
+                    # the template dtype is authoritative: an array saved
+                    # under one opt_state_dtype must not silently change
+                    # the resumed run's numerics
+                    tdtype = np.dtype(leaf.dtype)
+                    if arr.dtype != tdtype:
+                        arr = arr.astype(tdtype)
+                    leaves.append(jax.device_put(arr, sh) if sh is not None
+                                  else jax.device_put(arr))
             out[name] = jax.tree_util.tree_unflatten(treedef, leaves)
         return out, manifest["metadata"]

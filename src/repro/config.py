@@ -230,6 +230,13 @@ class OuterCommConfig:
     # own per-chunk dispatch state so early chunks reduce (and apply) while
     # later ones are still being quantized. 1 = single fused dispatch.
     chunks: int = 1
+    # Sharded outer exchange (DESIGN.md §10): each device compresses and
+    # exchanges only its Δθ shard along the auto (TP/FSDP) mesh axes, with
+    # the outer momentum/anchor/residual sharded alongside via the
+    # param_specs tables — outer-state memory per device stops scaling
+    # with full model size. fp32 stays bit-identical to the replicated
+    # path; quantized keeps the same numeric model and tolerance.
+    sharded: bool = False
 
     def __post_init__(self):
         if self.compression not in ("none", "quantize", "int8-wire"):
@@ -245,6 +252,10 @@ class OuterCommConfig:
         if self.chunks < 1:
             raise ValueError(
                 f"comm chunks must be >= 1, got {self.chunks}")
+        if self.sharded and self.compression == "int8-wire":
+            raise ValueError(
+                "sharded outer exchange composes 'none' or 'quantize' "
+                "compression; the int8 ring exchange owns its own layout")
 
     def replace(self, **kw) -> "OuterCommConfig":
         return dataclasses.replace(self, **kw)

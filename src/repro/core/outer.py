@@ -33,7 +33,7 @@ global all-reduce can run concurrently with subsequent inner steps:
 
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -57,7 +57,7 @@ class OuterState(NamedTuple):
 
 
 def outer_init(params, tc: TrainConfig, *, num_groups: int = 1,
-               needs_residual: bool = None) -> OuterState:
+               needs_residual: Optional[bool] = None) -> OuterState:
     """``needs_residual`` defaults from the config's own strategy; pass it
     explicitly when an injected strategy overrides the config (the runner
     keys its specs off the strategy plan, and the state must match)."""

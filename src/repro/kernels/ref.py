@@ -58,6 +58,21 @@ def pier_update_ref(anchor, momentum, delta, *, mu, lr, formulation="nesterov_to
     return af + lr * step, m_new
 
 
+def aligned_block_count(n: int, block: int, align: int = 1) -> int:
+    """Blocks covering ``n`` elems, rounded up to a multiple of ``align``.
+
+    The sharded outer exchange (DESIGN.md §10) pads flat payloads to
+    ``aligned_block_count(n, block, shards) * block`` so each auto-axis
+    shard holds whole quantization blocks: blockwise absmax then computes
+    shard-locally under a sharding constraint, with no cross-shard block
+    straddling. ``align=1`` is the quantizer's own ceil(n / block).
+    """
+    if block < 1 or align < 1:
+        raise ValueError(f"block={block}, align={align} must be >= 1")
+    nb = (n + block - 1) // block
+    return ((nb + align - 1) // align) * align
+
+
 def quantize_blockwise_ref(x, *, bits: int = 8, block: int = 256):
     """Blockwise symmetric absmax quantization oracle (DESIGN.md §6).
 

@@ -257,7 +257,7 @@ def cost_depths(mc: ModelConfig) -> Tuple[int, int, int]:
 
 
 def run_combo(arch: str, shape_name: str, mesh_kind: str, data_outer: int,
-              *, do_cost: bool = True) -> Dict:
+              *, do_cost: bool = True, outer_sharded: bool = False) -> Dict:
     shape = INPUT_SHAPES[shape_name]
     mc = resolve_model(arch, shape)
     record: Dict = {
@@ -280,6 +280,13 @@ def run_combo(arch: str, shape_name: str, mesh_kind: str, data_outer: int,
     pc = pc.replace(num_microbatches=auto_microbatches(shape, pc))
     tc = TrainConfig(global_batch_size=shape.global_batch,
                      seq_len=shape.seq_len)
+    if outer_sharded:
+        # sharded quantized outer exchange (DESIGN.md §10): each device
+        # compresses/exchanges only its Δθ shard over data_inner×model
+        from repro.config import OuterCommConfig
+        tc = tc.replace(outer_comm=OuterCommConfig(
+            compression="quantize", sharded=True))
+        record["outer_sharded"] = True
     record["config"] = {
         "num_groups": pc.num_groups, "num_microbatches": pc.num_microbatches,
         "params": R.count_params(mc), "active_params": R.count_params(mc, True),
@@ -390,6 +397,9 @@ def main(argv=None):
     ap.add_argument("--all", action="store_true",
                     help="run every combo in subprocesses")
     ap.add_argument("--no-cost", action="store_true")
+    ap.add_argument("--outer-sharded", action="store_true",
+                    help="lower the train steps with the sharded quantized "
+                         "outer exchange (DESIGN.md §10)")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args(argv)
     os.makedirs(args.out, exist_ok=True)
@@ -427,7 +437,8 @@ def main(argv=None):
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
     for mesh_kind in meshes:
         record = run_combo(args.arch, args.shape, mesh_kind, args.data_outer,
-                           do_cost=not args.no_cost)
+                           do_cost=not args.no_cost,
+                           outer_sharded=args.outer_sharded)
         tag = f"{args.arch}__{args.shape}__{mesh_kind}"
         path = os.path.join(args.out, tag + ".json")
         with open(path, "w") as f:

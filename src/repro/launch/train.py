@@ -431,6 +431,10 @@ def main(argv=None):
     ap.add_argument("--comm-chunks", type=int, default=1,
                     help="dispatch the Δθ tree as this many separate "
                          "XLA computations")
+    ap.add_argument("--sharded-outer", action="store_true",
+                    help="exchange only each device's Δθ shard along the "
+                         "auto (TP/FSDP) axes, with the outer state "
+                         "sharded alongside (DESIGN.md §10)")
     ap.add_argument("--groups", type=int, default=2,
                     help="Pier groups (data_outer)")
     ap.add_argument("--mesh", default="",
@@ -476,7 +480,8 @@ def main(argv=None):
             compression=args.outer_compression,
             bits=args.outer_comm_bits,
             hierarchical=args.hierarchical_reduce,
-            chunks=args.comm_chunks),
+            chunks=args.comm_chunks,
+            sharded=args.sharded_outer),
     )
     print(f"arch={mc.name} optimizer={tc.optimizer} mesh={shape} "
           f"groups={pc.num_groups} devices={jax.device_count()} "

@@ -12,7 +12,7 @@ This is the same pattern MaxText/T5X use, reduced to what the Pier mesh needs:
     fsdp    -> data_inner                     # in-group ZeRO-3 sharding
     tp      -> model                          # Megatron tensor parallel
     experts -> model                          # expert parallel (MoE)
-    seq     -> data (decode long-context)     # context-parallel KV cache
+    seq     -> data_inner (decode long-context)  # context-parallel KV cache
 """
 
 from __future__ import annotations

@@ -198,7 +198,6 @@ def decode_state_specs(state_shape, mesh: Mesh, pc: ParallelConfig,
         if not hasattr(leaf, "shape") or leaf.ndim == 0:
             return P()
         keys = _path_keys(path)
-        name = keys[-1]
         shape = leaf.shape
         if "scan" in keys and len(shape) >= 1:
             # stacked layer-cycle dim first: spec for shape[1:], then shift

@@ -315,15 +315,26 @@ def build_train_steps(
 
     fast_axes = tuple(a for a in manual if a != "pod")
     slow_axes = tuple(a for a in manual if a == "pod")
+    auto_axes = tuple(a for a in mesh.axis_names if a not in manual)
     # The mesh-axis context threaded to the strategy's per-leaf reduce:
     # the exchange starts at the full manual set; the hierarchical
     # combinator narrows it to the slow axes after its fast-domain mean.
     # axis_sizes gives wire strategies (plan.wire_format != "fp32") their
-    # static ring-endpoint counts — their hop loops unroll at trace time.
+    # static ring-endpoint counts — their hop loops unroll at trace time —
+    # and sharded strategies their auto-axis shard count (block alignment).
+    # The mesh rides along because constraints inside partial-manual
+    # shard_map must be NamedShardings on jax 0.4.x (sync/base.py).
     reduce_ctx = ReduceCtx(manual=manual, fast_axes=fast_axes,
                            slow_axes=slow_axes, exchange_axes=manual,
                            use_pallas=pc.use_pallas,
-                           axis_sizes={a: int(sizes[a]) for a in manual})
+                           axis_sizes={a: int(sizes[a])
+                                       for a in mesh.axis_names},
+                           auto_axes=auto_axes, mesh=mesh)
+    # Per-leaf PartitionSpecs over the auto axes, in Δθ leaf order —
+    # threaded to sharded strategies through ``ReduceCtx.leaf_spec``.
+    pspec_flat = jax.tree_util.tree_leaves(
+        pspec, is_leaf=lambda s: isinstance(s, P))
+    sharded_state = bool(getattr(strategy, "sharded_state", False))
 
     # Wire strategies also need each shard's coordinate along the manual
     # axes (the canonical ring-slot index). jax 0.4.x cannot lower
@@ -350,16 +361,18 @@ def build_train_steps(
             return tree
         return jax.lax.pmean(tree, manual)
 
-    def _reduce_delta_leaf(d, r, ctx=reduce_ctx):
+    def _reduce_delta_leaf(d, r, ctx=reduce_ctx, spec=None):
         """One Δθ leaf -> (globally averaged payload, new residual | None).
 
         Delegates to the strategy: flat fp32 pmean is the seed collective
         bit for bit; hierarchical / quantized strategies stage and
         compress the payload (DESIGN.md §6/§7); the int8-wire strategy
         ring-exchanges the packed payload itself (DESIGN.md §8), using
-        the shard coordinates carried on ``ctx``.
+        the shard coordinates carried on ``ctx``; sharded strategies pin
+        the leaf to ``spec`` (its auto-axis PartitionSpec) so only the
+        per-device shard is compressed and exchanged (DESIGN.md §10).
         """
-        return strategy.reduce_leaf(d, r, tc, ctx)
+        return strategy.reduce_leaf(d, r, tc, ctx.with_leaf_spec(spec))
 
     def _reduced_delta(params, outer, ctx=reduce_ctx):
         """(delta_avg tree, new residual tree | None) for one group."""
@@ -371,7 +384,8 @@ def build_train_steps(
         flat_d, treedef = jax.tree_util.tree_flatten(delta)
         flat_r = (treedef.flatten_up_to(res) if compress
                   else [None] * len(flat_d))
-        out = [_reduce_delta_leaf(d, r, ctx) for d, r in zip(flat_d, flat_r)]
+        out = [_reduce_delta_leaf(d, r, ctx, spec)
+               for d, r, spec in zip(flat_d, flat_r, pspec_flat)]
         unf = jax.tree_util.tree_unflatten
         delta_avg = unf(treedef, [p for p, _ in out])
         new_res = (unf(treedef, [jnp.expand_dims(r, 0) for _, r in out])
@@ -399,12 +413,25 @@ def build_train_steps(
             axis_names=set(manual))
         return f(state, outer, mu)
 
-    accumulate_step = jax.jit(accumulate_fn, donate_argnums=(1,))
+    # Sharded strategies pin every outer-event output to the param_specs
+    # layouts via jit out_shardings (in-body constraints guide GSPMD, the
+    # out_shardings make the ~1/(TP×FSDP) outer-state scaling a guarantee
+    # rather than a propagation outcome). Replicated strategies keep the
+    # seed behavior: layouts left to GSPMD.
+    _out_sh = (lambda sh: {"out_shardings": sh}) if sharded_state \
+        else (lambda sh: {})
+    dispatch_shardings = DispatchState(
+        target=S.shardings(pspec, mesh),
+        snapshot=S.shardings(stacked_pspec, mesh))
+
+    accumulate_step = jax.jit(accumulate_fn, donate_argnums=(1,),
+                              **_out_sh(outer_shardings))
     # the dispatch half of a delayed warmup event: identical math, but the
     # old outer state is NOT donated — it stays the live state while the
     # pending result is in flight (the apply half installs it host-side;
     # core.outer.warmup_apply documents why the correction is zero).
-    accumulate_dispatch_step = jax.jit(accumulate_fn)
+    accumulate_dispatch_step = jax.jit(accumulate_fn,
+                                       **_out_sh(outer_shardings))
 
     def outer_body(state, outer, mu, olr, coords):
         with use_rules(rules):
@@ -429,7 +456,8 @@ def build_train_steps(
             axis_names=set(manual))
         return f(state, outer, mu, olr, _coord_inputs())
 
-    outer_step = jax.jit(outer_fn, donate_argnums=(0, 1))
+    outer_step = jax.jit(outer_fn, donate_argnums=(0, 1),
+                         **_out_sh((state_shardings, outer_shardings)))
 
     # ---- delayed outer sync (dispatch / apply) -----------------------------
     # dispatch launches THE global collective and the Nesterov math; the host
@@ -461,7 +489,9 @@ def build_train_steps(
 
     # NOTE: the train state is NOT donated — the snapshot output forces a
     # fresh copy of the params while inner steps keep donating the live ones.
-    dispatch_step = jax.jit(dispatch_fn, donate_argnums=(1,))
+    dispatch_step = jax.jit(dispatch_fn, donate_argnums=(1,),
+                            **_out_sh((dispatch_shardings,
+                                       outer_shardings)))
 
     # ---- chunked dispatch + per-chunk apply (plan.num_chunks > 1) ----------
     # The Δθ leaves are split into contiguous spans; each span's reduce AND
@@ -479,6 +509,18 @@ def build_train_steps(
     if plan.num_chunks > 1:
         pflat_shapes, ptreedef = jax.tree_util.tree_flatten(pshapes)
         spans = plan.spans
+        stacked_pspec_flat = jax.tree_util.tree_leaves(
+            stacked_pspec, is_leaf=lambda s: isinstance(s, P))
+
+        def _span_shardings(lo, hi):
+            """Per-span out_shardings (sharded strategies): targets /
+            momentum / anchor at the unstacked per-leaf specs, snapshots /
+            residual at the (G,)-stacked ones."""
+            ns = lambda spec: NamedSharding(mesh, spec)
+            unstacked = tuple(ns(pspec_flat[j]) for j in range(lo, hi))
+            stacked = tuple(ns(stacked_pspec_flat[j]) for j in range(lo, hi))
+            return (ChunkDispatch(targets=unstacked, snapshots=stacked),
+                    (unstacked, unstacked, stacked if compress else ()))
 
         def make_chunk_dispatch(lo, hi):
             def chunk_body(state, outer, mu, olr, coords):
@@ -495,7 +537,8 @@ def build_train_steps(
                     for j in range(lo, hi):
                         d = (p_flat[j].astype(jnp.float32)
                              - a_flat[j].astype(jnp.float32))
-                        da, nr = _reduce_delta_leaf(d, r_flat[j], ctx)
+                        da, nr = _reduce_delta_leaf(d, r_flat[j], ctx,
+                                                    pspec_flat[j])
                         payload.append(da)
                         if compress:
                             new_res.append(jnp.expand_dims(nr, 0))
@@ -527,7 +570,7 @@ def build_train_steps(
             # NOTE: neither state (snapshots force fresh buffers) nor outer
             # (read by every chunk computation) is donated here; the outer
             # copy is retired host-side by stitch_outer after the last chunk.
-            return jax.jit(chunk_fn)
+            return jax.jit(chunk_fn, **_out_sh(_span_shardings(lo, hi)))
 
         chunk_dispatch_steps = tuple(
             make_chunk_dispatch(lo, hi) for lo, hi in spans)
@@ -560,7 +603,8 @@ def build_train_steps(
                     axis_names=set(manual))
                 return f(state, chunk)
 
-            return jax.jit(apply_chunk_fn, donate_argnums=(0, 1))
+            return jax.jit(apply_chunk_fn, donate_argnums=(0, 1),
+                           **_out_sh(state_shardings))
 
         chunk_apply_steps = tuple(
             make_chunk_apply(lo, hi) for lo, hi in spans)
@@ -624,7 +668,8 @@ def build_train_steps(
             axis_names=set(manual))
         return f(state, dispatch)
 
-    apply_step = jax.jit(apply_fn, donate_argnums=(0, 1))
+    apply_step = jax.jit(apply_fn, donate_argnums=(0, 1),
+                         **_out_sh(state_shardings))
 
     # ---- eval --------------------------------------------------------------
     def eval_body(state, batch):

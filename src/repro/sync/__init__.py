@@ -19,8 +19,9 @@ from repro.sync.controller import (AdaptiveSyncController,
 from repro.sync.delay import (DelayController, FixedDelayController,
                               MeasuredDelayController, ModelDelayController)
 from repro.sync.strategies import (Chunked, FlatFP32, Hierarchical,
-                                   Int8Wire, Quantized, resolve_strategy,
-                                   strategy_name, validate_pod_grouping)
+                                   Int8Wire, Quantized, Sharded,
+                                   resolve_strategy, strategy_name,
+                                   validate_pod_grouping)
 
 __all__ = [
     "ChunkDispatch", "OuterSyncStrategy", "ReduceCtx", "SyncPlan",
@@ -31,5 +32,6 @@ __all__ = [
     "DelayController", "FixedDelayController", "MeasuredDelayController",
     "ModelDelayController",
     "Chunked", "FlatFP32", "Hierarchical", "Int8Wire", "Quantized",
-    "resolve_strategy", "strategy_name", "validate_pod_grouping",
+    "Sharded", "resolve_strategy", "strategy_name",
+    "validate_pod_grouping",
 ]

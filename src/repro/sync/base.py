@@ -98,6 +98,15 @@ class ReduceCtx:
     use_pallas: bool = False
     axis_sizes: Optional[Mapping[str, int]] = None
     axis_coords: Optional[Mapping[str, Any]] = None
+    # Sharded-exchange context (DESIGN.md §10): the auto (GSPMD) axes of
+    # the mesh, the mesh itself (constraints inside partial-manual
+    # shard_map must be NamedShardings — bare PartitionSpecs raise on
+    # jax 0.4.x), and the current leaf's PartitionSpec over those axes,
+    # threaded per leaf by the step builder (:meth:`with_leaf_spec`, the
+    # same data-threading pattern as ``axis_coords``).
+    auto_axes: Tuple[str, ...] = ()
+    mesh: Optional[Any] = None
+    leaf_spec: Optional[Any] = None
 
     def narrowed(self, exchange_axes: Tuple[str, ...]) -> "ReduceCtx":
         return dataclasses.replace(self, exchange_axes=exchange_axes)
@@ -105,6 +114,18 @@ class ReduceCtx:
     def with_coords(self, axis_coords) -> "ReduceCtx":
         """Per-trace copy carrying the shard's manual-axis coordinates."""
         return dataclasses.replace(self, axis_coords=axis_coords)
+
+    def with_leaf_spec(self, leaf_spec) -> "ReduceCtx":
+        """Per-leaf copy carrying the leaf's PartitionSpec (auto axes)."""
+        return dataclasses.replace(self, leaf_spec=leaf_spec)
+
+    def auto_size(self) -> int:
+        """Static shard count over the auto axes (Π auto-axis sizes)."""
+        sizes = self.axis_sizes or {}
+        a = 1
+        for ax in self.auto_axes:
+            a *= int(sizes.get(ax, 1))
+        return a
 
     def exchange_size(self) -> int:
         """Static endpoint count of the payload exchange (Π axis sizes)."""
@@ -118,6 +139,28 @@ class ReduceCtx:
                     f"wire ring needs static ring sizes")
             e *= int(sizes[ax])
         return e
+
+
+def constrain_to_spec(x, spec, ctx: ReduceCtx):
+    """``with_sharding_constraint`` over the auto axes, as a NamedSharding.
+
+    Inside a partial-manual ``shard_map`` on jax 0.4.x a bare
+    PartitionSpec constraint raises (no mesh context is installed there),
+    so the sharded strategies build ``NamedSharding(ctx.mesh, spec)``
+    explicitly. Constraints never change values — only the layout GSPMD
+    picks — so wrapping a reduce in them is numerically the identity.
+    No-op when the ctx carries no mesh/spec (unit tests, simulator).
+    """
+    if spec is None or ctx.mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(ctx.mesh, spec))
+    except (ValueError, TypeError, RuntimeError):
+        # mesh axis absent / non-divisible dim -> leave the layout to GSPMD
+        return x
 
 
 def balanced_spans(sizes, num_chunks: int) -> Tuple[Tuple[int, int], ...]:
@@ -171,6 +214,11 @@ class OuterSyncStrategy:
     two_stage: bool = False
     # What actually crosses the slow exchange axes (see SyncPlan).
     wire_format: str = "fp32"
+    # Whether the outer state (momentum/anchor/residual) and dispatch
+    # buffers should be pinned to the per-leaf auto-axis shardings via jit
+    # out_shardings, so outer-state memory per device stops scaling with
+    # full model size (DESIGN.md §10).
+    sharded_state: bool = False
 
     # ------------------------------------------------------------- identity
     @property

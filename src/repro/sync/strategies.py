@@ -12,6 +12,13 @@
   elsewhere) and are reduced with per-source-scale sum semantics —
   numerically the same payload mean as :class:`Quantized`, with the bytes
   win real instead of accounted.
+- :class:`Sharded` — auto-axis combinator (DESIGN.md §10): each device
+  compresses and exchanges only its Δθ *shard* along the auto (GSPMD)
+  axes — the per-leaf ``PartitionSpec`` threaded through
+  ``ReduceCtx.leaf_spec`` — so the outer exchange (and, with
+  ``sharded_state``, the outer momentum/anchor/residual) stops scaling
+  with full model size. fp32 inner stays bit-identical to the replicated
+  path; quantized inner is block-content-identical to :class:`Quantized`.
 - :class:`Hierarchical` — two-stage combinator: full-precision mean over
   the fast intra-pod axes first, then the *inner* strategy's exchange over
   the slow pod axes (1/pods of the traffic crosses the slow domain).
@@ -35,7 +42,7 @@ import jax.numpy as jnp
 from repro import compat
 from repro.core.outer import compress_delta, outer_reduce
 from repro.sync.base import (OuterSyncStrategy, ReduceCtx, SyncPlan,
-                             balanced_spans, _leaf_sizes)
+                             balanced_spans, constrain_to_spec, _leaf_sizes)
 
 
 @dataclass(frozen=True)
@@ -206,6 +213,132 @@ class Int8Wire(OuterSyncStrategy):
 
 
 @dataclass(frozen=True)
+class Sharded(OuterSyncStrategy):
+    """Auto-axis combinator: exchange only the per-device Δθ shard.
+
+    The replicated strategies materialize every full Δθ leaf on every
+    device before the manual-axis pmean — fine at 124M, fatal at 7B with
+    tensor/FSDP parallelism, where no device holds a full leaf to begin
+    with. This combinator keeps each leaf pinned to its ``param_specs``
+    sharding over the auto (GSPMD) axes — the per-leaf ``PartitionSpec``
+    threaded through ``ReduceCtx.leaf_spec`` — so GSPMD lowers the
+    manual-axis pmean as shard-local collectives (reduce-scatter +
+    all-gather shape, ZeRO++-style) and nothing full-size is ever built.
+
+    - ``Sharded(FlatFP32())``: constraints never change values, and the
+      pmean is the same reduction — **bit-identical** to the replicated
+      flat-fp32 path.
+    - ``Sharded(Quantized(...))``: leaves whose size divides
+      ``block * A`` (A = auto-axis shard count) quantize shard-locally —
+      every shard holds whole quantization blocks, so blockwise absmax
+      never crosses a shard boundary and the blocks are bitwise what the
+      unsharded :class:`Quantized` produces. Ragged leaves fall back to
+      the inner replicated round trip (in-graph pad/slice inside the
+      partial-manual region trips a jaxlib 0.4.x partitioner CHECK; only
+      small odd leaves are affected). Same numeric model, same simulator
+      tolerance.
+
+    With ``sharded_state`` the step builder additionally pins the outer
+    momentum/anchor/residual and dispatch buffers to the same specs via
+    jit ``out_shardings``, so outer-state memory per device scales as
+    ~1/(TP×FSDP) (DESIGN.md §10).
+    """
+
+    inner: OuterSyncStrategy = FlatFP32()
+
+    sharded_state = True
+
+    def __post_init__(self):
+        if not isinstance(self.inner, (FlatFP32, Quantized)):
+            raise ValueError(
+                f"Sharded composes FlatFP32 or Quantized, got "
+                f"{type(self.inner).__name__}: the int8 ring exchange "
+                f"(Int8Wire) owns its own layout and cannot run on "
+                f"auto-axis shards")
+
+    @property
+    def name(self) -> str:
+        return f"sharded[{self.inner.name}]"
+
+    @property
+    def needs_residual(self) -> bool:  # type: ignore[override]
+        return self.inner.needs_residual
+
+    @property
+    def wire_format(self) -> str:  # type: ignore[override]
+        return self.inner.wire_format
+
+    def plan(self, pshapes, tc, mesh=None) -> SyncPlan:
+        return self.inner.plan(pshapes, tc, mesh)._replace(name=self.name)
+
+    def reduce_leaf(self, d, r, tc, ctx: ReduceCtx):
+        d = constrain_to_spec(d, ctx.leaf_spec, ctx)
+        if isinstance(self.inner, Quantized):
+            block = self.inner.block
+            if d.size % (block * max(ctx.auto_size(), 1)) == 0:
+                d, r = self._compress_sharded(d, r, ctx)
+            else:
+                # Ragged leaf: padding (or slicing) the flat payload
+                # inside the partial-manual region trips an XLA
+                # partitioner CHECK on jaxlib 0.4.x
+                # (hlo_sharding_util IsManualSubgroup — the same class
+                # of CHECK that gates md_dryrun_mini), so leaves that
+                # don't divide into whole per-shard blocks keep the
+                # inner strategy's replicated round trip. Only small
+                # odd leaves land here; the big block-divisible
+                # matrices — the bytes that matter — still shard.
+                d, r = compress_delta(d, r, bits=self.inner.bits,
+                                      block=block,
+                                      use_pallas=ctx.use_pallas)
+        if ctx.exchange_axes:
+            d = jax.lax.pmean(d, ctx.exchange_axes)
+        d = constrain_to_spec(d, ctx.leaf_spec, ctx)
+        return d, r
+
+    def _compress_sharded(self, d, r, ctx: ReduceCtx):
+        """Shard-local blockwise quantize/dequantize with error feedback.
+
+        Works on the flat payload constrained to one combined auto-axis
+        dim; the caller guarantees the leaf divides into whole per-shard
+        blocks (``n % (block·shards) == 0``), so the quantize/dequantize
+        round trip never crosses a shard boundary and no in-graph
+        pad/slice is needed.
+        """
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.outer import quant_fns
+
+        bits, block = self.inner.bits, self.inner.block
+        quant, dequant = quant_fns(bits=bits, block=block,
+                                   use_pallas=ctx.use_pallas)
+        c = d.astype(jnp.float32)
+        if r is not None:
+            c = c + r.astype(jnp.float32)
+        flat = c.reshape(-1)
+        row = P(tuple(ctx.auto_axes)) if ctx.auto_axes else None
+        flat = constrain_to_spec(flat, row, ctx)
+        q, s = quant(flat)
+        q = constrain_to_spec(q, row, ctx)
+        s = constrain_to_spec(s, row, ctx)
+        payload = dequant(q, s).reshape(c.shape)
+        payload = constrain_to_spec(payload, ctx.leaf_spec, ctx)
+        new_r = constrain_to_spec(c - payload, ctx.leaf_spec, ctx)
+        return payload, new_r
+
+    def sim_dispatch(self, group_params, outer, tc, *, mu, lr, num_pods=1):
+        # the sharded exchange is a layout change, not a numeric one: the
+        # simulator models it with the inner strategy's reduction
+        return self.inner.sim_dispatch(group_params, outer, tc, mu=mu,
+                                       lr=lr, num_pods=num_pods)
+
+    def sim_reduce(self, delta, residual, tc, *, num_pods=1,
+                   pod_grouped=False):
+        return self.inner.sim_reduce(delta, residual, tc,
+                                     num_pods=num_pods,
+                                     pod_grouped=pod_grouped)
+
+
+@dataclass(frozen=True)
 class Hierarchical(OuterSyncStrategy):
     """Two-stage reduce: fp32 intra-pod mean, then ``inner``'s exchange
     over the slow pod axes. Degenerates to ``inner`` over the full manual
@@ -227,6 +360,10 @@ class Hierarchical(OuterSyncStrategy):
     @property
     def wire_format(self) -> str:  # type: ignore[override]
         return self.inner.wire_format
+
+    @property
+    def sharded_state(self) -> bool:  # type: ignore[override]
+        return self.inner.sharded_state
 
     def reduce_leaf(self, d, r, tc, ctx: ReduceCtx):
         inner_ctx = ctx
@@ -291,6 +428,10 @@ class Chunked(OuterSyncStrategy):
     def wire_format(self) -> str:  # type: ignore[override]
         return self.inner.wire_format
 
+    @property
+    def sharded_state(self) -> bool:  # type: ignore[override]
+        return self.inner.sharded_state
+
     def plan(self, pshapes, tc, mesh=None) -> SyncPlan:
         sizes = _leaf_sizes(pshapes)
         # clamp to the leaf count: more chunks than leaves would plan
@@ -350,6 +491,8 @@ def resolve_strategy(cfg) -> OuterSyncStrategy:
         core = FlatFP32()
     else:
         raise ValueError(f"unknown outer compression {comm.compression!r}")
+    if getattr(comm, "sharded", False):
+        core = Sharded(inner=core)
     if comm.hierarchical:
         core = Hierarchical(inner=core)
     if comm.chunks > 1:
@@ -358,12 +501,13 @@ def resolve_strategy(cfg) -> OuterSyncStrategy:
 
 
 def strategy_name(*, bits: int = 32, block: int = 256,
-                  hierarchical: bool = False, chunks: int = 1) -> str:
+                  hierarchical: bool = False, chunks: int = 1,
+                  sharded: bool = False) -> str:
     """Resolved-strategy name for benchmark knobs (bits >= 32 = fp32)."""
     from repro.config import OuterCommConfig
 
     comm = OuterCommConfig(
         compression="none" if bits >= 32 else "quantize",
         bits=bits if bits < 32 else 8, block=block,
-        hierarchical=hierarchical, chunks=chunks)
+        hierarchical=hierarchical, chunks=chunks, sharded=sharded)
     return resolve_strategy(comm).name

@@ -61,6 +61,51 @@ def test_checkpoint_shape_mismatch_rejected(tmp_path):
         mgr.restore(1, {"state": {"w": jnp.ones((8,))}})
 
 
+def test_checkpoint_dtype_cast_to_template(tmp_path):
+    """An array saved under one opt_state_dtype restores into a template of
+    another by validate-and-cast — the template dtype is authoritative, so
+    resume numerics never silently change."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"state": {"m": jnp.arange(6.0, dtype=jnp.float32)}})
+    out, _ = mgr.restore(
+        1, {"state": {"m": jnp.zeros((6,), jnp.bfloat16)}})
+    restored = out["state"]["m"]
+    assert restored.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(restored, np.float32),
+        np.arange(6.0, dtype=np.float32).astype(jnp.bfloat16).astype(
+            np.float32))
+
+
+class _AnonKey:
+    """A path entry carrying none of key/name/idx — stringifies to ""."""
+
+
+class _AnonPair:
+    """A pytree node whose children flatten with anonymous path entries:
+    both leaves' checkpoint keys stringify to the same empty string."""
+
+    def __init__(self, a, b):
+        self.a, self.b = a, b
+
+
+jax.tree_util.register_pytree_with_keys(
+    _AnonPair,
+    lambda n: (((_AnonKey(), n.a), (_AnonKey(), n.b)), None),
+    lambda _, ch: _AnonPair(*ch))
+
+
+def test_checkpoint_duplicate_key_rejected_at_save(tmp_path):
+    """Regression: two leaves whose paths stringify identically used to
+    silently overwrite each other in the npz dict; save must raise."""
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _AnonPair(jnp.ones((2,)), jnp.zeros((3,)))
+    with pytest.raises(ValueError, match="duplicate checkpoint key"):
+        mgr.save(1, {"state": tree})
+    # distinct keys keep working
+    mgr.save(2, {"state": {"a": jnp.ones((2,)), "b": jnp.zeros((3,))}})
+
+
 def test_trainer_resume_determinism(tmp_path):
     """train 10 == train 5 + save + restore + train 5 (single device)."""
     from repro.config import ModelConfig, ParallelConfig, TrainConfig

@@ -1,0 +1,229 @@
+"""Sharded outer exchange (DESIGN.md §10) + span/spec property tests.
+
+Single-device semantics of the :class:`repro.sync.Sharded` combinator
+(the mesh-level equivalences live in tests/multidevice/md_equivalence.py),
+plus property tests for ``balanced_spans`` and the ``param_spec``
+divisibility fallback.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis, or example-based shim
+
+from repro.config import OuterCommConfig, ParallelConfig, TrainConfig
+from repro.kernels.ref import aligned_block_count
+from repro.parallel.sharding import param_spec
+from repro.sync import (FlatFP32, Hierarchical, Int8Wire, Quantized,
+                        ReduceCtx, Sharded, balanced_spans,
+                        resolve_strategy, strategy_name)
+
+
+# ---------------------------------------------------------------------------
+# balanced_spans properties (satellite: sync/base.py)
+# ---------------------------------------------------------------------------
+
+
+def _sizes_from(seed, n):
+    rng = np.random.default_rng(seed)
+    return [int(s) for s in rng.integers(1, 10_000, size=n)]
+
+
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 40),
+       num_chunks=st.integers(1, 12))
+@settings(max_examples=40, deadline=None)
+def test_balanced_spans_partition_properties(seed, n, num_chunks):
+    sizes = _sizes_from(seed, n)
+    spans = balanced_spans(sizes, num_chunks)
+    # non-empty, contiguous, exactly covering [0, n)
+    assert spans[0][0] == 0 and spans[-1][1] == n
+    for (lo, hi), (lo2, _) in zip(spans, spans[1:]):
+        assert hi == lo2
+    for lo, hi in spans:
+        assert lo < hi
+    # at most num_chunks spans (fewer when there are fewer leaves)
+    assert len(spans) <= max(1, min(num_chunks, n))
+
+
+@given(seed=st.integers(0, 2**16), n=st.integers(2, 40),
+       num_chunks=st.integers(2, 8))
+@settings(max_examples=25, deadline=None)
+def test_balanced_spans_are_balanced(seed, n, num_chunks):
+    """No span exceeds a fair share by more than one leaf's worth."""
+    sizes = _sizes_from(seed, n)
+    spans = balanced_spans(sizes, num_chunks)
+    total = sum(sizes)
+    fair = total / len(spans)
+    biggest = max(sizes)
+    for lo, hi in spans[:-1]:  # the tail span absorbs the remainder
+        assert sum(sizes[lo:hi]) <= fair + biggest
+
+
+def test_balanced_spans_degenerate():
+    assert balanced_spans([5], 4) == ((0, 1),)
+    assert balanced_spans([1, 1, 1], 1) == ((0, 3),)
+
+
+# ---------------------------------------------------------------------------
+# param_spec divisibility fallback (satellite: parallel/sharding.py)
+# ---------------------------------------------------------------------------
+
+
+@given(kv_heads=st.sampled_from([1, 2, 3, 5, 6]),
+       model_size=st.sampled_from([4, 8, 16]))
+@settings(max_examples=15, deadline=None)
+def test_param_spec_gqa_fallback_replicates(kv_heads, model_size):
+    """GQA kv-head dims that don't divide the model axis fall back to
+    replicated on that dim instead of erroring."""
+    pc = ParallelConfig(data_axis_size=2, model_axis_size=model_size,
+                        data_outer=1)
+    sizes = {"data_outer": 1, "data_inner": 2, "model": model_size}
+    spec = param_spec(("blocks", "attn", "wk"), (64, kv_heads, 16), sizes, pc)
+    assert isinstance(spec, jax.sharding.PartitionSpec)
+    head_axis = tuple(spec)[1]
+    if kv_heads % model_size == 0:
+        assert head_axis == "model"
+    else:
+        assert head_axis is None
+
+
+def test_param_spec_never_raises_on_awkward_shapes():
+    pc = ParallelConfig(data_axis_size=2, model_axis_size=8, data_outer=1)
+    sizes = {"data_inner": 2, "model": 8}
+    for shape in [(7, 3), (1,), (13, 13, 13), (8, 8)]:
+        spec = param_spec(("blocks", "mlp", "w_up"), shape, sizes, pc)
+        assert len(tuple(spec)) <= len(shape)
+
+
+# ---------------------------------------------------------------------------
+# aligned_block_count
+# ---------------------------------------------------------------------------
+
+
+@given(n=st.integers(1, 100_000), block=st.sampled_from([1, 32, 256]),
+       align=st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=30, deadline=None)
+def test_aligned_block_count_properties(n, block, align):
+    nb = aligned_block_count(n, block, align)
+    assert nb % align == 0
+    assert nb * block >= n
+    # minimal: one fewer aligned step would not cover n
+    assert (nb - align) * block < n or nb == align
+
+
+def test_aligned_block_count_validates():
+    with pytest.raises(ValueError):
+        aligned_block_count(10, 0)
+    with pytest.raises(ValueError):
+        aligned_block_count(10, 8, 0)
+
+
+# ---------------------------------------------------------------------------
+# Sharded combinator: resolution, validation, single-device semantics
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_resolution_and_names():
+    s = resolve_strategy(OuterCommConfig(sharded=True))
+    assert isinstance(s, Sharded) and isinstance(s.inner, FlatFP32)
+    assert s.name == "sharded[flat-fp32]"
+    assert not s.needs_residual and s.sharded_state
+
+    q = resolve_strategy(OuterCommConfig(
+        compression="quantize", bits=8, block=64, sharded=True))
+    assert isinstance(q.inner, Quantized)
+    assert q.name == "sharded[quantized(int8,block=64)]"
+    assert q.needs_residual and q.wire_format == "fp32"
+    assert strategy_name(bits=8, block=64, sharded=True) == q.name
+
+    # combinators propagate sharded_state; replicated strategies do not
+    h = resolve_strategy(OuterCommConfig(
+        compression="quantize", sharded=True, hierarchical=True))
+    assert isinstance(h, Hierarchical) and h.sharded_state
+    c = resolve_strategy(OuterCommConfig(
+        compression="quantize", sharded=True, chunks=3))
+    assert c.sharded_state and c.name.startswith("chunked(3)[sharded[")
+    assert not resolve_strategy(OuterCommConfig()).sharded_state
+    assert not Quantized().sharded_state
+
+
+def test_sharded_rejects_wire_strategies():
+    with pytest.raises(ValueError, match="int8"):
+        OuterCommConfig(compression="int8-wire", sharded=True)
+    with pytest.raises(ValueError, match="Sharded composes"):
+        Sharded(Int8Wire())
+    with pytest.raises(ValueError, match="Sharded composes"):
+        Sharded(Sharded(FlatFP32()))
+
+
+def test_sharded_plan_delegates_with_own_name():
+    pshapes = {"a": jax.ShapeDtypeStruct((8, 4), jnp.float32),
+               "b": jax.ShapeDtypeStruct((16,), jnp.float32)}
+    tc = TrainConfig()
+    s = Sharded(Quantized(8, 32))
+    plan = s.plan(pshapes, tc)
+    inner_plan = Quantized(8, 32).plan(pshapes, tc)
+    assert plan.name == s.name
+    assert plan.spans == inner_plan.spans
+    assert plan.needs_residual == inner_plan.needs_residual
+
+
+def _unit_ctx():
+    """A mesh-less ReduceCtx: constraints no-op, auto shard count is 1."""
+    return ReduceCtx(manual=(), fast_axes=(), slow_axes=(),
+                     exchange_axes=(), axis_sizes={})
+
+
+@pytest.mark.parametrize("shape", [(13, 7), (16, 8)])
+@pytest.mark.parametrize("inner", [FlatFP32(), Quantized(8, 32),
+                                   Quantized(4, 16)])
+def test_sharded_reduce_leaf_matches_inner_without_mesh(inner, shape):
+    """With no auto axes the sharded payload pipeline is bit-identical to
+    the inner strategy's — on both sides of the ragged-leaf split:
+    (16, 8) divides into whole blocks (shard-local quantize path) while
+    (13, 7) is ragged (replicated compress_delta fallback)."""
+    tc = TrainConfig()
+    d = jnp.asarray(np.random.default_rng(0).normal(size=shape),
+                    jnp.float32)
+    r = (jnp.asarray(np.random.default_rng(1).normal(size=shape),
+                     jnp.float32)
+         if inner.needs_residual else None)
+    ctx = _unit_ctx()
+    base_p, base_r = inner.reduce_leaf(d, r, tc, ctx)
+    shard_p, shard_r = Sharded(inner).reduce_leaf(d, r, tc, ctx)
+    np.testing.assert_array_equal(np.asarray(base_p), np.asarray(shard_p))
+    if inner.needs_residual:
+        np.testing.assert_array_equal(np.asarray(base_r),
+                                      np.asarray(shard_r))
+
+
+def test_sharded_sim_reduce_delegates():
+    tc = TrainConfig()
+    rng = np.random.default_rng(2)
+    delta = {"w": jnp.asarray(rng.normal(size=(2, 6, 5)), jnp.float32)}
+    res = {"w": jnp.zeros((2, 6, 5), jnp.float32)}
+    inner = Quantized(8, 16)
+    a_p, a_r = inner.sim_reduce(delta, res, tc)
+    b_p, b_r = Sharded(inner).sim_reduce(delta, res, tc)
+    np.testing.assert_array_equal(np.asarray(a_p["w"]), np.asarray(b_p["w"]))
+    np.testing.assert_array_equal(np.asarray(a_r["w"]), np.asarray(b_r["w"]))
+
+
+def test_sharded_aligned_padding_keeps_block_contents():
+    """Aligned padding adds only all-zero blocks: quantizing the padded
+    flat payload reproduces the unpadded blocks bitwise and scales 0 for
+    the pad blocks (which the [:n] slice then drops)."""
+    from repro.kernels.ref import quantize_blockwise_ref
+
+    rng = np.random.default_rng(3)
+    n, block, align = 100, 16, 8
+    x = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    nb = aligned_block_count(n, block)  # quantizer's own padding
+    nba = aligned_block_count(n, block, align)
+    xp = jnp.pad(x, (0, nba * block - n))
+    q0, s0 = quantize_blockwise_ref(x, bits=8, block=block)
+    q1, s1 = quantize_blockwise_ref(xp, bits=8, block=block)
+    np.testing.assert_array_equal(np.asarray(q0), np.asarray(q1[:nb * block]))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1[:nb]))
+    assert float(jnp.abs(s1[nb:]).max(initial=0.0)) == 0.0
