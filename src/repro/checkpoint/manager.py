@@ -21,6 +21,8 @@ import os
 import re
 import shutil
 import time
+import warnings
+import zipfile
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -53,9 +55,21 @@ def _flatten(tree) -> Dict[str, Any]:
 
 
 class CheckpointManager:
+    """Crash-safe: every array archive is written to a ``.tmp`` name and
+    atomically renamed into place, the manifest is written *last* (its
+    presence marks the checkpoint complete), and the step directory swap
+    itself goes through a temp dir. A crash at any point leaves either
+    the old complete checkpoint or a partial one that
+    :meth:`all_steps`/:meth:`latest_step`/:meth:`restore` skip (with a
+    warning) rather than raise mid-run — so GC and auto-resume always
+    operate on the newest checkpoint that actually survives a load.
+    """
+
     def __init__(self, directory: str, *, keep: int = 3):
         self.directory = directory
         self.keep = keep
+        self._warned = set()  # steps already warned about, once each
+        self._verified = set()  # steps that passed the completeness check
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------------ save
@@ -64,16 +78,26 @@ class CheckpointManager:
         """trees: name -> pytree (e.g. {"state": ..., "outer": ...})."""
         path = os.path.join(self.directory, f"step_{step:08d}")
         tmp = path + ".tmp"
-        os.makedirs(tmp, exist_ok=True)
+        if os.path.exists(tmp):  # stale debris from a crashed save
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
         manifest = {"step": step, "time": time.time(),
                     "metadata": metadata or {}, "trees": {}}
         for name, tree in trees.items():
             flat = _flatten(tree)
             arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
-            np.savez(os.path.join(tmp, f"{name}.npz"), **arrays)
+            dest = os.path.join(tmp, f"{name}.npz")
+            # temp file + atomic rename: a crash mid-write never leaves a
+            # truncated archive under the final name (the temp name must
+            # keep the .npz suffix — np.savez appends one otherwise)
+            np.savez(dest + ".tmp.npz", **arrays)
+            os.replace(dest + ".tmp.npz", dest)
             manifest["trees"][name] = sorted(arrays.keys())
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        # manifest last: it is the completeness marker
+        mdest = os.path.join(tmp, "manifest.json")
+        with open(mdest + ".tmp", "w") as f:
             json.dump(manifest, f, indent=2)
+        os.replace(mdest + ".tmp", mdest)
         if os.path.exists(path):
             shutil.rmtree(path)
         os.rename(tmp, path)
@@ -81,17 +105,62 @@ class CheckpointManager:
         return path
 
     def _gc(self):
-        steps = self.all_steps()
+        steps = self.all_steps()  # complete checkpoints only
         for s in steps[: -self.keep] if self.keep > 0 else []:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
                           ignore_errors=True)
 
     # --------------------------------------------------------------- restore
+    def _step_error(self, step: int) -> Optional[str]:
+        """Why ``step``'s checkpoint is unusable (None = complete).
+
+        Checks the manifest parses and every archive it names passes a
+        full CRC sweep with all expected arrays present — the same
+        failures a crashed/partial save (or disk corruption) produces.
+        """
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (OSError, ValueError) as e:
+            return f"manifest unreadable ({e})"
+        for name, keys in manifest.get("trees", {}).items():
+            p = os.path.join(path, f"{name}.npz")
+            try:
+                with zipfile.ZipFile(p) as z:
+                    if z.testzip() is not None:
+                        return f"{name}.npz fails CRC (truncated write?)"
+                    have = {n[:-4] if n.endswith(".npy") else n
+                            for n in z.namelist()}
+            except (OSError, zipfile.BadZipFile) as e:
+                return f"{name}.npz unreadable ({e})"
+            missing = [k for k in keys if k not in have]
+            if missing:
+                return f"{name}.npz missing arrays {missing[:3]}"
+        return None
+
+    def _usable(self, step: int) -> bool:
+        # complete checkpoints are immutable — verify each step once
+        if step in self._verified:
+            return True
+        err = self._step_error(step)
+        if err is None:
+            self._verified.add(step)
+            return True
+        if step not in self._warned:
+            self._warned.add(step)
+            warnings.warn(
+                f"skipping corrupt checkpoint step_{step:08d}: {err}",
+                stacklevel=3)
+        return False
+
     def all_steps(self):
+        """Sorted steps with *complete* checkpoints; corrupt/truncated
+        ones are skipped with a warning (once per step)."""
         out = []
         for d in os.listdir(self.directory):
             m = re.fullmatch(r"step_(\d+)", d)
-            if m:
+            if m and self._usable(int(m.group(1))):
                 out.append(int(m.group(1)))
         return sorted(out)
 
@@ -107,6 +176,14 @@ class CheckpointManager:
         Returns (trees, metadata). Arrays are placed with ``shardings[name]``
         when given (a sharding pytree matching the template).
         """
+        if step not in self._verified:
+            err = self._step_error(step)
+            if err is not None:
+                raise ValueError(
+                    f"checkpoint step_{step:08d} is incomplete/corrupt "
+                    f"({err}); pick a step from all_steps() — "
+                    f"latest_step() already skips unusable checkpoints")
+            self._verified.add(step)
         path = os.path.join(self.directory, f"step_{step:08d}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)

@@ -261,6 +261,49 @@ class OuterCommConfig:
         return dataclasses.replace(self, **kw)
 
 
+@dataclass(frozen=True)
+class MembershipConfig:
+    """Elastic outer-membership knobs (DESIGN.md §11).
+
+    Present on ``TrainConfig.membership`` only when elastic membership is
+    requested: ``None`` (the default) keeps the fixed-membership step
+    graphs byte-for-byte — the weighted reduction variants are never even
+    built. Membership is a post-warmup concept: the momentum-warmup phase
+    trains globally synced and always runs at full membership.
+    """
+
+    # A group whose delta has missed more than this many consecutive
+    # post-warmup outer events is evicted: its (stale) contribution is
+    # discarded and it must bootstrap on rejoin. 0 = evict on the first
+    # missed event.
+    max_staleness: int = 1
+    # Reject an outer event whose live mask has fewer than this many
+    # groups (an all-zero mask is always an error).
+    min_live: int = 1
+    # Where a rejoining group bootstraps its params/opt/outer slice from:
+    # "checkpoint" restores the latest complete checkpoint when a
+    # CheckpointManager is attached (falling back to anchor when none is
+    # available); "anchor" resets to the current outer anchor + fresh
+    # inner-optimizer state (always available, deterministic — what the
+    # sim <-> Trainer lockstep tests pin).
+    rejoin_bootstrap: str = "anchor"  # anchor | checkpoint
+
+    def __post_init__(self):
+        if self.max_staleness < 0:
+            raise ValueError(
+                f"max_staleness must be >= 0, got {self.max_staleness}")
+        if self.min_live < 1:
+            raise ValueError(
+                f"min_live must be >= 1, got {self.min_live}")
+        if self.rejoin_bootstrap not in ("anchor", "checkpoint"):
+            raise ValueError(
+                f"rejoin_bootstrap must be 'anchor' or 'checkpoint', "
+                f"got {self.rejoin_bootstrap!r}")
+
+    def replace(self, **kw) -> "MembershipConfig":
+        return dataclasses.replace(self, **kw)
+
+
 # Legacy flat TrainConfig fields -> their OuterCommConfig counterparts.
 # Accepted as init-only kwargs (and by TrainConfig.replace) for
 # backward compatibility; reads keep working through properties.
@@ -318,6 +361,11 @@ class TrainConfig:
     # OuterSyncStrategy object the runtimes consume. ``None`` means "all
     # defaults" (flat fp32 pmean — the seed collective).
     outer_comm: Optional[OuterCommConfig] = None
+    # Elastic outer membership (DESIGN.md §11): ``None`` keeps fixed
+    # membership (today's graphs, byte for byte); a MembershipConfig
+    # enables the weighted variable-membership reduction, staleness
+    # eviction, and churn scripting in the simulator/Trainer.
+    membership: Optional[MembershipConfig] = None
     # Deprecated flat spellings of the OuterCommConfig knobs. Accepted as
     # init-only kwargs and folded into ``outer_comm`` (explicit flat values
     # override the grouped config); reads keep working via properties.

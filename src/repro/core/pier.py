@@ -158,6 +158,23 @@ class PierSchedule:
             return self.tc.fixed_outer_lr
         return self.tc.outer_lr_at(step)
 
+    def outer_index(self, dispatch_step: int) -> int:
+        """0-based ordinal of the post-warmup outer dispatch at ``step``.
+
+        The elastic-membership churn schedule (DESIGN.md §11) keys its
+        drop/rejoin/straggle entries on this ordinal — "outer event k"
+        means the k-th post-warmup ``outer`` dispatch boundary, counting
+        from 0 — so scripts stay meaningful across delay/interval
+        changes. Raises on a step that is not an outer dispatch boundary.
+        """
+        if not (self.is_sync_step(dispatch_step)
+                and self.op_at(dispatch_step) == "outer"):
+            raise ValueError(
+                f"step {dispatch_step} is not a post-warmup outer "
+                f"dispatch boundary")
+        w = self.warmup_steps
+        return (dispatch_step - w) // self.tc.sync_interval
+
     # -------------------------------------------------------------- helpers
     def num_outer_steps(self) -> int:
         post = self.tc.total_steps - self.warmup_steps

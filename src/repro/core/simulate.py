@@ -80,7 +80,8 @@ class SimState:
 class SimulatedRun:
     def __init__(self, mc: ModelConfig, tc: TrainConfig, *, num_groups: int,
                  seed: int = 0, num_pods: int = 1, strategy=None,
-                 sync_controller=None):
+                 sync_controller=None, membership=None,
+                 checkpoint_manager=None):
         if tc.optimizer != "adamw":
             assert num_groups >= 1
         validate_pod_grouping(num_groups, num_pods)
@@ -93,6 +94,16 @@ class SimulatedRun:
         self.strategy = (strategy if strategy is not None
                          else resolve_strategy(tc))
         self.sync_controller = sync_controller
+        # elastic membership (DESIGN.md §11): a MembershipController whose
+        # per-event records drive the weighted dispatch, the masked apply
+        # and the rejoin bootstrap; checkpoint_manager is the optional
+        # donor source for rejoin_bootstrap="checkpoint"
+        self.membership = membership
+        self.ckpt = checkpoint_manager
+        if membership is not None and membership.num_groups != num_groups:
+            raise ValueError(
+                f"membership controller tracks {membership.num_groups} "
+                f"groups but the run has {num_groups}")
         self.sched = PierSchedule(tc)
         self.lm = MarkovLM(mc.vocab_size, seed=1234)
         key = jax.random.PRNGKey(seed)
@@ -101,6 +112,11 @@ class SimulatedRun:
         # also decides whether the state carries an EF residual (an
         # injected strategy may override the config's own resolution)
         self.plan = self.strategy.plan(params, tc)
+        if membership is not None and self.plan.num_chunks > 1:
+            raise NotImplementedError(
+                "elastic membership does not compose with chunked "
+                "dispatch yet (per-chunk weighted applies are a recorded "
+                "follow-up) — drop chunking or membership")
         self.state = SimState(
             params=params,
             group_params=None,
@@ -146,10 +162,28 @@ class SimulatedRun:
             return outer_apply(target_f32, dispatch_group, current_group)
 
         self._apply = jax.jit(do_apply)
+
+        def do_apply_masked(target_f32, dispatch_group, current_group, live):
+            """Elastic apply (DESIGN.md §11): install the target only on
+            the live groups; an absent/evicted group keeps its stale
+            params until its rejoin bootstrap."""
+            new = outer_apply(target_f32, dispatch_group, current_group)
+
+            def mask(n, o):
+                lg = live.reshape((live.shape[0],) + (1,) * (n.ndim - 1))
+                return jnp.where(lg, n, o)
+
+            return jax.tree.map(mask, new, current_group)
+
+        self._apply_masked = jax.jit(do_apply_masked)
         # the (single) in-flight window, uniform over ops (DESIGN.md §9):
         # (apply_at_step, "outer", target, snapshot) or
         # (apply_at_step, "accumulate", pending_outer, None)
         self._inflight = None
+        # the EventMembership record bound to an in-flight *outer*
+        # dispatch (None when full membership / accumulate): consumed by
+        # its apply for the live mask and the post-apply bootstraps
+        self._inflight_member = None
 
     # ------------------------------------------------------------------
     def _build_dispatch(self):
@@ -162,17 +196,21 @@ class SimulatedRun:
         """
         strategy, tc, P = self.strategy, self.tc, self.P
 
-        def do_dispatch(group_params, outer, mu, lr):
+        def do_dispatch(group_params, outer, mu, lr, weights):
             """Global Δθ mean + Nesterov math -> (target_f32, new outer).
 
             Delegates to the resolved strategy: FlatFP32 is the seed path,
             bit for bit; Quantized/Hierarchical mirror the distributed
             two-stage reduce (per-group Δθ -> optional full-precision
             intra-pod mean -> optional quantize+dequantize with error
-            feedback -> global mean of the payloads).
+            feedback -> global mean of the payloads). ``weights`` is the
+            (G,) elastic participation vector (None = classic 1/G mean,
+            bit for bit); with weights the reduce normalizes by 1/Σw —
+            identical at all-ones by construction.
             """
             return strategy.sim_dispatch(group_params, outer, tc,
-                                         mu=mu, lr=lr, num_pods=P)
+                                         mu=mu, lr=lr, num_pods=P,
+                                         weights=weights)
 
         self._dispatch = jax.jit(do_dispatch)
 
@@ -292,10 +330,15 @@ class SimulatedRun:
                                       pending, None)
                 else:
                     olr = jnp.float32(sched.outer_lr_at(step))
+                    rec, w = None, None
+                    if self.membership is not None:
+                        rec = self.membership.at(sched.outer_index(step))
+                        w = jnp.asarray(rec.weights, jnp.float32)
                     target, st.outer = self._dispatch(
-                        st.group_params, st.outer, mu, olr)
+                        st.group_params, st.outer, mu, olr, w)
                     self._inflight = (ev.apply_step, "outer", target,
                                       st.group_params)
+                    self._inflight_member = rec
                     self._consult_controller()
             # a delay decision can shrink a window below its dispatched
             # length — never let a due apply slip past its step
@@ -329,11 +372,25 @@ class SimulatedRun:
             return
         st = self.state
         _, op, target, snapshot = self._inflight
+        rec, self._inflight_member = self._inflight_member, None
         if op == "accumulate":
             st.outer = warmup_apply(target)
             self._inflight = None
             return
         spans = self.plan.spans
+        if rec is not None:
+            # elastic apply: only live groups install the target; then
+            # the groups rejoining at the next event bootstrap off the
+            # freshly installed anchor (or the latest checkpoint)
+            live = jnp.asarray(rec.apply_live)
+            st.group_params = self._apply_masked(
+                target, snapshot, st.group_params, live)
+            i0 = rec.apply_live.index(True)
+            st.params = jax.tree.map(lambda g: g[i0], st.group_params)
+            self._inflight = None
+            for g in rec.bootstrap_after_apply:
+                self._bootstrap_group(g)
+            return
         if len(spans) == 1:
             st.group_params = self._apply(target, snapshot, st.group_params)
         else:
@@ -349,6 +406,41 @@ class SimulatedRun:
             st.group_params = jax.tree_util.tree_unflatten(treedef, c_flat)
         st.params = jax.tree.map(lambda g: g[0], st.group_params)
         self._inflight = None
+
+    def _bootstrap_group(self, g: int):
+        """Rejoin bootstrap (DESIGN.md §11).
+
+        Runs right after an event's apply: group ``g``'s replica is reset
+        to the donor params — the freshly installed anchor (exact: the
+        applied target *is* the new anchor, ``outer_reduce`` sets
+        ``anchor_new = target``), or the latest complete checkpoint when
+        ``rejoin_bootstrap="checkpoint"`` and a manager is attached — with
+        fresh inner-opt state and a zeroed error-feedback residual, so it
+        trains the next window coherently and re-enters the mask at the
+        next dispatch boundary.
+        """
+        st = self.state
+        donor = None
+        if (self.membership is not None
+                and self.membership.cfg.rejoin_bootstrap == "checkpoint"
+                and self.ckpt is not None):
+            latest = self.ckpt.latest_step()
+            if latest is not None:
+                trees, _ = self.ckpt.restore(latest, {"params": st.params})
+                donor = trees["params"]
+        if donor is None:
+            donor = st.outer.anchor
+        st.group_params = jax.tree.map(
+            lambda gp, d: gp.at[g].set(d.astype(gp.dtype)),
+            st.group_params, donor)
+        fresh = adamw_init(
+            jax.tree.map(lambda gp: gp[g], st.group_params), self.tc)
+        st.opt = jax.tree.map(
+            lambda og, f: og.at[g].set(f.astype(og.dtype)), st.opt, fresh)
+        if st.outer.residual is not None:
+            st.outer = st.outer._replace(residual=jax.tree.map(
+                lambda r: r.at[g].set(jnp.zeros_like(r[g])),
+                st.outer.residual))
 
     def flush(self):
         """Apply an in-flight dispatch early (end-of-run drain)."""

@@ -131,7 +131,7 @@ def unpack_wire(w, bits: int, nq: int):
     return (q << 4) >> 4
 
 
-def dequant_sum_sources(wg, sg, *, bits: int, block: int):
+def dequant_sum_sources(wg, sg, *, bits: int, block: int, weights=None):
     """(E, nw) wire bytes + (E, nb) scales -> fp32 (nq,) payload mean.
 
     THE per-source-scale sum (DESIGN.md §8): dequantize each source's
@@ -142,6 +142,16 @@ def dequant_sum_sources(wg, sg, *, bits: int, block: int):
     their source stacks were produced (remote-DMA gather, ppermute ring,
     ``jnp.stack``).
 
+    ``weights``: optional (E,) f32 participation weights for elastic
+    membership (DESIGN.md §11) — an absent source carries weight 0 and
+    the normalization becomes ``1/Σw`` instead of ``1/E`` (all-zero
+    weights yield 0, not NaN: the caller decides whether an empty round
+    is legal). The weighted path is bit-identical to the unweighted one
+    at all-ones weights: scaling each payload by ``w_j == 1.0`` *before*
+    the loop is IEEE-exact, and the traced ``1.0/Σw`` division at
+    ``Σw == E`` strength-reduces to the same reciprocal multiply as the
+    ``1/E`` constant below.
+
     The accumulation deliberately materializes the dequantized partials
     and adds them inside a ``fori_loop``: an unrolled ``acc + q*s`` chain
     gets FMA-contracted by XLA differently depending on the surrounding
@@ -149,7 +159,9 @@ def dequant_sum_sources(wg, sg, *, bits: int, block: int):
     bit-identity between transports at 1 ulp. A loop body only ever sees
     a dynamic slice of the materialized stack — there is no multiply for
     the add to contract with, so every path rounds identically (cf. the
-    reciprocal-multiply note on :func:`quantize_blockwise_ref`).
+    reciprocal-multiply note on :func:`quantize_blockwise_ref`). The
+    per-source weights multiply the materialized stack *outside* the
+    loop for the same reason.
     """
     E, nb = sg.shape
     nq = nb * block
@@ -157,6 +169,9 @@ def dequant_sum_sources(wg, sg, *, bits: int, block: int):
         dequantize_blockwise_ref(unpack_wire(wg[j], bits, nq), sg[j],
                                  block=block)
         for j in range(E)])
+    if weights is not None:
+        w = jnp.asarray(weights, jnp.float32).reshape(E)
+        payloads = payloads * w[:, None]
 
     def body(j, acc):
         return acc + jax.lax.dynamic_index_in_dim(
@@ -166,21 +181,28 @@ def dequant_sum_sources(wg, sg, *, bits: int, block: int):
     # a trip count > 1 — XLA unrolls single-trip loops, which would hand
     # the add back to the fuser
     acc = jax.lax.fori_loop(0, E, body, jnp.zeros_like(payloads[0]))
-    return acc * jnp.float32(1.0 / E)
+    if weights is None:
+        return acc * jnp.float32(1.0 / E)
+    sw = jnp.sum(w)
+    inv = jnp.where(sw > 0, jnp.float32(1.0) / sw, jnp.float32(0.0))
+    return acc * inv
 
 
-def ring_allreduce_qs_ref(q, scales, *, block: int = 256, bits: int = 8):
+def ring_allreduce_qs_ref(q, scales, *, block: int = 256, bits: int = 8,
+                          weights=None):
     """Per-source-scale sum oracle of the int8 wire ring (DESIGN.md §8).
 
     ``q``: (E, nblocks*block) int8 values, ``scales``: (E, nblocks) f32 —
     one row per ring endpoint. Round-trips each row through the actual
     wire packing (a bit-exact identity on the values) and reduces with
     :func:`dequant_sum_sources` — exactly what the distributed ring
-    exchange computes on every endpoint, bit for bit.
+    exchange computes on every endpoint, bit for bit. ``weights``
+    forwards the elastic-membership mask (see there).
     """
     E = q.shape[0]
     wg = jnp.stack([pack_wire(q[j], bits) for j in range(E)])
-    return dequant_sum_sources(wg, scales, bits=bits, block=block)
+    return dequant_sum_sources(wg, scales, bits=bits, block=block,
+                               weights=weights)
 
 
 def rmsnorm_ref(x, scale, *, eps: float = 1e-5):

@@ -286,7 +286,8 @@ def ring_allreduce_quantized(q: jax.Array, s: jax.Array, *,
                              bits: int, block: int,
                              use_pallas: bool = False,
                              axis_coords=None,
-                             transport: str = "auto") -> jax.Array:
+                             transport: str = "auto",
+                             weights=None) -> jax.Array:
     """All-reduce the actual (q, scales) pairs over the exchange axes.
 
     ``q``: (nb·block,) int8 values, ``s``: (nb,) fp32 scales — one
@@ -295,6 +296,12 @@ def ring_allreduce_quantized(q: jax.Array, s: jax.Array, *,
     (bit-identical on every endpoint, whichever transport produced the
     source stack). Must run inside ``shard_map`` (or
     ``vmap(axis_name=...)``) spanning ``axis_names``.
+
+    ``weights``: optional (E,) fp32 participation weights in the same
+    canonical source order as the gathered stack (row-major over
+    ``axis_names``); forwarded to :func:`dequant_sum_sources` for the
+    elastic-membership weighted mean (DESIGN.md §11). Every endpoint must
+    pass the identical vector — it is replicated, not per-shard.
 
     ``transport``: ``"dma"`` (Pallas remote-DMA ring, real TPU only),
     ``"ring"`` (ppermute hops), ``"psum"`` (one-hot scatter + psum), or
@@ -322,7 +329,8 @@ def ring_allreduce_quantized(q: jax.Array, s: jax.Array, *,
         wg, sg = onehot_gather_wire(w, s, names, axis_sizes, axis_coords)
     else:
         raise ValueError(f"unknown wire transport {transport!r}")
-    return dequant_sum_sources(wg, sg, bits=bits, block=block)
+    return dequant_sum_sources(wg, sg, bits=bits, block=block,
+                               weights=weights)
 
 
 # ---------------------------------------------------------------------------

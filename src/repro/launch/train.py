@@ -23,15 +23,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
-from repro.config import (ModelConfig, OuterCommConfig, ParallelConfig,
-                          TrainConfig)
+from repro.config import (MembershipConfig, ModelConfig, OuterCommConfig,
+                          ParallelConfig, TrainConfig)
 from repro.configs import get_config, get_reduced_config
 from repro.core import offload
 from repro.core.pier import PierSchedule
 from repro.data.pipeline import synthetic_pipeline
 from repro.launch import mesh as M
 from repro.parallel.steps import build_train_steps
-from repro.sync import ModelDelayController, resolve_strategy
+from repro.sync import (ChurnSchedule, MembershipController,
+                        ModelDelayController, resolve_strategy)
 
 
 def resolve_auto_sync_delay(tc: TrainConfig, mc: ModelConfig,
@@ -68,8 +69,25 @@ class Trainer:
     def __init__(self, mc: ModelConfig, tc: TrainConfig, pc: ParallelConfig,
                  mesh, *, checkpoint_dir: Optional[str] = None,
                  chip_hint: str = "", sync_controller=None,
-                 adaptive_sync: bool = False, remeasure_every: int = 0):
+                 adaptive_sync: bool = False, remeasure_every: int = 0,
+                 membership=None):
         self.strategy = resolve_strategy(tc)
+        # elastic membership (DESIGN.md §11): an injected
+        # MembershipController (scripted churn), or one built from
+        # tc.membership (full membership through the elastic graphs —
+        # bit-identical to the fixed path at all-ones weights). Either
+        # way tc.membership gates the elastic step variants in the bundle.
+        if membership is not None:
+            if membership.num_groups != pc.num_groups:
+                raise ValueError(
+                    f"membership controller tracks {membership.num_groups} "
+                    f"groups but the mesh has {pc.num_groups}")
+            if tc.membership is None:
+                tc = tc.replace(membership=membership.cfg)
+        elif tc.membership is not None:
+            membership = MembershipController(
+                pc.num_groups, cfg=tc.membership)
+        self.membership = membership
         # sync_delay="auto": the strategy injects a SyncController —
         # measured t_comm/t_inner once enough sync windows are observed,
         # the analytic --chip model (or eager) until then; with
@@ -103,6 +121,10 @@ class Trainer:
         # (apply_at, "accumulate", pending OuterState).
         # sync_delay < sync_interval bounds the queue depth at one.
         self._inflight = None
+        # the EventMembership record bound to an in-flight *outer*
+        # dispatch (None when no membership / accumulate): consumed by
+        # its apply for the live mask and the post-apply bootstraps
+        self._inflight_member = None
         if tc.offload_outer_state:
             self.outer = offload.to_host(self.outer)
             self._outer_on_host = True
@@ -178,10 +200,20 @@ class Trainer:
             # window's dispatch in flight — install it before the eager step
             self._apply_inflight()
             self._outer_to_device()
-            self.state, self.outer = self.bundle.outer_step(
-                self.state, self.outer,
-                jnp.float32(sched.mu_at(step)),
-                jnp.float32(sched.outer_lr_at(step)))
+            if self.membership is not None:
+                rec = self.membership.at(sched.outer_index(step))
+                self.state, self.outer = self.bundle.elastic_outer_step(
+                    self.state, self.outer,
+                    jnp.float32(sched.mu_at(step)),
+                    jnp.float32(sched.outer_lr_at(step)),
+                    jnp.asarray(rec.weights, jnp.float32),
+                    jnp.asarray(rec.apply_live))
+                self._bootstrap_groups(rec.bootstrap_after_apply)
+            else:
+                self.state, self.outer = self.bundle.outer_step(
+                    self.state, self.outer,
+                    jnp.float32(sched.mu_at(step)),
+                    jnp.float32(sched.outer_lr_at(step)))
             self._outer_to_host()
             self._consult_controller()
         else:
@@ -221,22 +253,49 @@ class Trainer:
         the dispatch-time params; the pre-dispatch state stays live until
         the apply installs the result (whose stale-delta correction is
         identically zero — ``core.outer.warmup_apply``).
+
+        While a measured controller still wants t_comm samples AND the
+        strategy's wire format is fp32, the warmup accumulate windows are
+        wall-clocked too: the accumulate's global reduce moves the same
+        full-precision tree as an fp32 outer sync, so its timing is
+        representative — sampling here lets d* resolve *before* the first
+        post-warmup sync instead of burning the first real windows on
+        measurement. Compressed strategies skip this (the accumulate
+        always reduces fp32, which says nothing about the quantized outer
+        wire width); their measurement starts at the first outer window
+        as before.
         """
         mu = jnp.float32(self.sched.mu_at(ev.sync_step))
+        ctrl = self.sync_controller
+        measure = (ctrl is not None and ctrl.wants_measurement
+                   and self.bundle.plan.wire_format == "fp32")
+        t0 = time.perf_counter() if measure else 0.0
         self._outer_to_device()
         if ev.apply_step <= ev.sync_step:
             self.outer = self.bundle.accumulate_step(
                 self.state, self.outer, mu)
+            if measure:
+                jax.block_until_ready(self.outer.momentum)
             self._outer_to_host()
         else:
             pending = self.bundle.accumulate_dispatch_step(
                 self.state, self.outer, mu)
+            if measure:
+                # overlap is sacrificed for the measured windows only —
+                # the same policy the outer dispatch measurement applies
+                jax.block_until_ready(pending.momentum)
             self._inflight = (ev.apply_step, "accumulate", pending)
             # the old outer state stays current for the window but is
             # never read again before the apply replaces it wholesale —
             # offload (when configured) can evict it right away instead
             # of holding 2x the outer state on device for d steps
             self._outer_to_host()
+        if measure:
+            ctrl.observe_window(t_comm=time.perf_counter() - t0)
+            # adopt a freshly resolved d* right away (delay only — no
+            # tick: strategy decisions stay keyed on *outer* windows, so
+            # scripted replays are unaffected by warmup sampling)
+            self._adopt_delay(ctrl.current_decision())
 
     def _dispatch(self, step: int):
         """Launch the outer collective for the sync boundary at ``step``.
@@ -268,6 +327,12 @@ class Trainer:
                 chunk_leaves.append(leaves)
             self.outer = self.bundle.stitch_outer(self.outer, chunk_leaves)
             dispatch = chunks  # a list marks the per-chunk in-flight shape
+        elif self.membership is not None:
+            rec = self.membership.at(sched.outer_index(step))
+            dispatch, self.outer = self.bundle.elastic_dispatch_step(
+                self.state, self.outer, mu, olr,
+                jnp.asarray(rec.weights, jnp.float32))
+            self._inflight_member = rec
         else:
             dispatch, self.outer = self.bundle.dispatch_step(
                 self.state, self.outer, mu, olr)
@@ -294,10 +359,15 @@ class Trainer:
         dec = ctrl.current_decision()
         if dec.strategy is not None and dec.strategy != self.strategy:
             self._switch_strategy(dec.strategy)
+        self._adopt_delay(dec)
+
+    def _adopt_delay(self, dec):
+        """Adopt a decision's clamped delay (rebuilding the schedule)."""
         d = dec.clamped_delay(self.tc.sync_interval)
         if d != self.tc.sync_delay:
             print(f"sync_delay re-resolved: {self.tc.sync_delay} -> {d} "
-                  f"({type(ctrl).__name__} decision)", flush=True)
+                  f"({type(self.sync_controller).__name__} decision)",
+                  flush=True)
             self.tc = self.tc.replace(sync_delay=d)
             self.sched = PierSchedule(self.tc)
 
@@ -332,6 +402,7 @@ class Trainer:
         if self._inflight is None:
             return
         _, op, payload = self._inflight
+        rec, self._inflight_member = self._inflight_member, None
         if op == "accumulate":
             # install the pending outer state (core.outer.warmup_apply —
             # the warmup stale-delta correction is identically zero)
@@ -342,9 +413,47 @@ class Trainer:
             for chunk, apply_step in zip(payload,
                                          self.bundle.chunk_apply_steps):
                 self.state = apply_step(self.state, chunk)
+        elif rec is not None:
+            # elastic apply (DESIGN.md §11): only live groups install the
+            # target; then the groups rejoining at the next event
+            # bootstrap off the freshly installed anchor (or checkpoint)
+            self._inflight = None
+            self.state = self.bundle.elastic_apply_step(
+                self.state, payload, jnp.asarray(rec.apply_live))
+            self._bootstrap_groups(rec.bootstrap_after_apply)
+            return
         else:
             self.state = self.bundle.apply_step(self.state, payload)
         self._inflight = None
+
+    def _bootstrap_groups(self, groups):
+        """Rejoin bootstrap (DESIGN.md §11), right after an event's apply.
+
+        Each named group's replica is reset to the donor params — the
+        freshly installed anchor (exact: the applied target *is* the new
+        anchor), or the latest complete checkpoint's anchor when
+        ``rejoin_bootstrap="checkpoint"`` — with fresh inner-opt state and
+        a zeroed error-feedback residual, so it trains the next window
+        coherently and re-enters the mask at the next dispatch boundary.
+        """
+        if not groups:
+            return
+        self._outer_to_device()
+        donor = self._bootstrap_donor()
+        for g in groups:
+            self.state, self.outer = self.bundle.bootstrap_group(
+                self.state, self.outer, jnp.asarray(g, jnp.int32), donor)
+        self._outer_to_host()
+
+    def _bootstrap_donor(self):
+        cfg = self.tc.membership
+        if (cfg is not None and cfg.rejoin_bootstrap == "checkpoint"
+                and self.ckpt is not None):
+            latest = self.ckpt.latest_step()
+            if latest is not None:
+                trees, _ = self.ckpt.restore(latest, {"outer": self.outer})
+                return trees["outer"].anchor
+        return self.outer.anchor
 
     def flush(self):
         """Drain an in-flight dispatch (end of run / before checkpoint)."""
@@ -435,6 +544,23 @@ def main(argv=None):
                     help="exchange only each device's Δθ shard along the "
                          "auto (TP/FSDP) axes, with the outer state "
                          "sharded alongside (DESIGN.md §10)")
+    ap.add_argument("--churn-script", default="",
+                    help="scripted elastic membership (DESIGN.md §11), "
+                         "e.g. 'drop:1@3,rejoin:1@6,straggle:0@4+2' — "
+                         "entries keyed on the post-warmup outer event "
+                         "ordinal; empty = full membership")
+    ap.add_argument("--max-staleness", type=int, default=1,
+                    help="straggler tolerance: a group more than this "
+                         "many missed outer events behind is evicted "
+                         "from the apply cohort until it bootstraps back")
+    ap.add_argument("--min-live", type=int, default=1,
+                    help="fail fast if the churn script ever leaves "
+                         "fewer contributing groups than this")
+    ap.add_argument("--rejoin-bootstrap", default="anchor",
+                    choices=["anchor", "checkpoint"],
+                    help="donor for a rejoining group's params: the "
+                         "freshly installed anchor, or the latest "
+                         "complete checkpoint (needs --checkpoint-dir)")
     ap.add_argument("--groups", type=int, default=2,
                     help="Pier groups (data_outer)")
     ap.add_argument("--mesh", default="",
@@ -483,14 +609,25 @@ def main(argv=None):
             chunks=args.comm_chunks,
             sharded=args.sharded_outer),
     )
+    membership = None
+    if args.churn_script:
+        mcfg = MembershipConfig(max_staleness=args.max_staleness,
+                                min_live=args.min_live,
+                                rejoin_bootstrap=args.rejoin_bootstrap)
+        tc = tc.replace(membership=mcfg)
+        membership = MembershipController(
+            pc.num_groups, cfg=mcfg,
+            schedule=ChurnSchedule.parse(args.churn_script))
     print(f"arch={mc.name} optimizer={tc.optimizer} mesh={shape} "
           f"groups={pc.num_groups} devices={jax.device_count()} "
-          f"outer_sync={resolve_strategy(tc).name}")
+          f"outer_sync={resolve_strategy(tc).name}"
+          + (f" churn={args.churn_script}" if args.churn_script else ""))
     trainer = Trainer(mc, tc, pc, mesh,
                       checkpoint_dir=args.checkpoint_dir or None,
                       chip_hint=args.chip,
                       adaptive_sync=args.adaptive_sync,
-                      remeasure_every=args.remeasure_every)
+                      remeasure_every=args.remeasure_every,
+                      membership=membership)
     if tc.sync_delay == "auto":
         print(f"sync_delay=auto resolved to d*={trainer.tc.sync_delay} "
               f"(chip={args.chip or 'none'}; re-resolves from measured "

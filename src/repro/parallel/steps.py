@@ -130,6 +130,20 @@ class StepBundle:
     # zero error-feedback residual (with this bundle's shardings) when the
     # incoming OuterState has none. None when the plan needs no residual.
     init_residual: Optional[Callable] = None
+    # Elastic-membership variants (DESIGN.md §11), built only when
+    # ``tc.membership`` is set — the fixed-membership graphs above stay
+    # byte-for-byte unchanged otherwise. Weights/live masks are TRACED
+    # (G,) arguments, so a mask change never re-jits.
+    #   elastic_outer_step(state, outer, mu, olr, weights, live)
+    #   elastic_dispatch_step(state, outer, mu, olr, weights)
+    #   elastic_apply_step(state, dispatch, live)
+    #   bootstrap_group(state, outer, g, donor_params) — reset group g's
+    #     params to ``donor_params`` (anchor or checkpoint slice), fresh
+    #     inner-opt state, zero residual; the rejoin bootstrap.
+    elastic_outer_step: Optional[Callable] = None
+    elastic_dispatch_step: Optional[Callable] = None
+    elastic_apply_step: Optional[Callable] = None
+    bootstrap_group: Optional[Callable] = None
 
 
 def _param_shapes(mc: ModelConfig, scan_layers: bool = False):
@@ -671,6 +685,176 @@ def build_train_steps(
     apply_step = jax.jit(apply_fn, donate_argnums=(0, 1),
                          **_out_sh(state_shardings))
 
+    # ---- elastic membership (DESIGN.md §11) --------------------------------
+    # Weighted variable-membership variants of the outer events, built ONLY
+    # when tc.membership is set: the per-event (G,) participation weights
+    # and apply-live mask enter as traced, replicated data (a mask change
+    # never re-jits), each shard slices its own group's weight by its
+    # linearized manual coordinate (the same data-threading pattern as
+    # axis_coords), and the strategy reduces with ×1/Σw normalization —
+    # bit-identical to the fixed path at all-ones weights.
+    elastic_outer_step = None
+    elastic_dispatch_step = None
+    elastic_apply_step = None
+    bootstrap_group = None
+    if tc.membership is not None:
+        if plan.num_chunks > 1:
+            raise NotImplementedError(
+                "elastic membership does not compose with chunked "
+                "dispatch yet (per-chunk weighted applies are a recorded "
+                "follow-up) — drop --comm-chunks or membership")
+
+        def _linear_idx(coords):
+            """Row-major linearized manual coordinate == the group index
+            (and the canonical wire-source slot)."""
+            idx = jnp.int32(0)
+            for a in manual:
+                idx = idx * jnp.int32(sizes[a]) + coords[a]
+            return idx
+
+        def _member_ctx(coords, weights):
+            local = {a: c[0] for a, c in coords.items()}
+            ctx = reduce_ctx.with_coords(local)
+            if not manual:
+                return ctx.with_membership(weights, weights[0])
+            w = jax.lax.dynamic_index_in_dim(
+                weights, _linear_idx(local), 0, keepdims=False)
+            return ctx.with_membership(weights, w)
+
+        def _live_here(live, coords):
+            local = {a: c[0] for a, c in coords.items()}
+            if not manual:
+                return live[0]
+            return jax.lax.dynamic_index_in_dim(
+                live, _linear_idx(local), 0, keepdims=False)
+
+        def elastic_outer_body(state, outer, mu, olr, coords, weights,
+                               live):
+            with use_rules(rules):
+                params = jax.tree.map(lambda x: x[0], state.params)
+                delta, new_res = _reduced_delta(
+                    params, outer, _member_ctx(coords, weights))
+                new_params_f32, new_outer = outer_update(
+                    outer, delta, tc, mu=mu, lr=olr,
+                    use_pallas=pc.use_pallas, **_residual_kw(new_res))
+                lg = _live_here(live, coords)
+                new_params = jax.tree.map(
+                    lambda f32, p: jnp.where(
+                        lg, f32.astype(p.dtype), p)[None],
+                    new_params_f32, params)
+                new_state = TrainState(params=new_params, opt=state.opt)
+                return new_state, new_outer
+
+        def elastic_outer_fn(state, outer, mu, olr, weights, live):
+            sspec, ospec = _sspec(), _ospec()
+            f = compat.shard_map(
+                elastic_outer_body, mesh=mesh,
+                in_specs=(sspec, ospec, P(), P(), _coord_spec(), P(), P()),
+                out_specs=(sspec, ospec),
+                axis_names=set(manual))
+            return f(state, outer, mu, olr, _coord_inputs(), weights, live)
+
+        elastic_outer_step = jax.jit(
+            elastic_outer_fn, donate_argnums=(0, 1),
+            **_out_sh((state_shardings, outer_shardings)))
+
+        def elastic_dispatch_body(state, outer, mu, olr, coords, weights):
+            with use_rules(rules):
+                params = jax.tree.map(lambda x: x[0], state.params)
+                delta, new_res = _reduced_delta(
+                    params, outer, _member_ctx(coords, weights))
+                target_f32, new_outer = outer_reduce(
+                    outer, delta, tc, mu=mu, lr=olr,
+                    use_pallas=pc.use_pallas, **_residual_kw(new_res))
+                dispatch = DispatchState(
+                    target=target_f32,
+                    snapshot=jax.tree.map(lambda x: x[None], params))
+                return dispatch, new_outer
+
+        def elastic_dispatch_fn(state, outer, mu, olr, weights):
+            sspec, ospec = _sspec(), _ospec()
+            dspec = _dspec(sspec)
+            f = compat.shard_map(
+                elastic_dispatch_body, mesh=mesh,
+                in_specs=(sspec, ospec, P(), P(), _coord_spec(), P()),
+                out_specs=(dspec, ospec),
+                axis_names=set(manual))
+            return f(state, outer, mu, olr, _coord_inputs(), weights)
+
+        elastic_dispatch_step = jax.jit(
+            elastic_dispatch_fn, donate_argnums=(1,),
+            **_out_sh((dispatch_shardings, outer_shardings)))
+
+        def elastic_apply_body(state, dispatch, coords, live):
+            with use_rules(rules):
+                params = jax.tree.map(lambda x: x[0], state.params)
+                snap = jax.tree.map(lambda x: x[0], dispatch.snapshot)
+                applied = outer_apply(dispatch.target, snap, params)
+                lg = _live_here(live, coords)
+                new_params = jax.tree.map(
+                    lambda n, o: jnp.where(lg, n, o), applied, params)
+                return TrainState(
+                    params=jax.tree.map(lambda x: x[None], new_params),
+                    opt=state.opt)
+
+        def elastic_apply_fn(state, dispatch, live):
+            sspec = _sspec()
+            dspec = _dspec(sspec)
+            f = compat.shard_map(
+                elastic_apply_body, mesh=mesh,
+                in_specs=(sspec, dspec, _coord_spec(), P()),
+                out_specs=sspec,
+                axis_names=set(manual))
+            return f(state, dispatch, _coord_inputs(), live)
+
+        elastic_apply_step = jax.jit(
+            elastic_apply_fn, donate_argnums=(0, 1),
+            **_out_sh(state_shardings))
+
+        def bootstrap_body(state, outer, g, donor, coords):
+            with use_rules(rules):
+                local = {a: c[0] for a, c in coords.items()}
+                is_g = (_linear_idx(local) == g) if manual \
+                    else jnp.bool_(True)
+                new_params = jax.tree.map(
+                    lambda p, dn: jnp.where(
+                        is_g, dn.astype(p.dtype)[None], p),
+                    state.params, donor)
+                new_opt = AdamWState(
+                    count=jnp.where(is_g, jnp.zeros_like(state.opt.count),
+                                    state.opt.count),
+                    mu=jax.tree.map(
+                        lambda m: jnp.where(is_g, jnp.zeros_like(m), m),
+                        state.opt.mu),
+                    nu=jax.tree.map(
+                        lambda n: jnp.where(is_g, jnp.zeros_like(n), n),
+                        state.opt.nu))
+                new_res = (jax.tree.map(
+                    lambda r: jnp.where(is_g, jnp.zeros_like(r), r),
+                    outer.residual) if compress else None)
+                new_outer = OuterState(
+                    momentum=outer.momentum, anchor=outer.anchor,
+                    num_syncs=outer.num_syncs, residual=new_res)
+                return TrainState(params=new_params, opt=new_opt), new_outer
+
+        def bootstrap_fn(state, outer, g, donor):
+            sspec, ospec = _sspec(), _ospec()
+            donor_spec = jax.tree.map(lambda _: P(), pspec,
+                                      is_leaf=lambda s: isinstance(s, P))
+            f = compat.shard_map(
+                bootstrap_body, mesh=mesh,
+                in_specs=(sspec, ospec, P(), donor_spec, _coord_spec()),
+                out_specs=(sspec, ospec),
+                axis_names=set(manual))
+            return f(state, outer, g, donor, _coord_inputs())
+
+        # outer is NOT donated: the anchor-donor call passes outer.anchor
+        # as ``donor`` too, and a donated buffer cannot also be a live
+        # argument (f(donate(a), a)); bootstraps are rare, the copy is fine
+        bootstrap_group = jax.jit(
+            bootstrap_fn, donate_argnums=(0,),
+            **_out_sh((state_shardings, outer_shardings)))
+
     # ---- eval --------------------------------------------------------------
     def eval_body(state, batch):
         with use_rules(rules):
@@ -709,7 +893,11 @@ def build_train_steps(
         chunk_dispatch_steps=chunk_dispatch_steps,
         chunk_apply_steps=chunk_apply_steps,
         stitch_outer=stitch_outer,
-        init_residual=init_residual)
+        init_residual=init_residual,
+        elastic_outer_step=elastic_outer_step,
+        elastic_dispatch_step=elastic_dispatch_step,
+        elastic_apply_step=elastic_apply_step,
+        bootstrap_group=bootstrap_group)
 
 
 # ===========================================================================

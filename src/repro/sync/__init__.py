@@ -11,13 +11,16 @@ mid-run (``AdaptiveSyncController``).
 """
 
 from repro.sync.base import (ChunkDispatch, OuterSyncStrategy, ReduceCtx,
-                             SyncPlan, balanced_spans)
+                             SyncPlan, balanced_spans, weighted_psum_mean,
+                             weighted_stack_mean)
 from repro.sync.controller import (AdaptiveSyncController,
                                    DelayDecisionAdapter,
                                    ScriptedSyncController, SyncController,
                                    SyncDecision, default_ladder)
 from repro.sync.delay import (DelayController, FixedDelayController,
                               MeasuredDelayController, ModelDelayController)
+from repro.sync.membership import (ChurnEvent, ChurnSchedule,
+                                   EventMembership, MembershipController)
 from repro.sync.strategies import (Chunked, FlatFP32, Hierarchical,
                                    Int8Wire, Quantized, Sharded,
                                    resolve_strategy, strategy_name,
@@ -25,12 +28,14 @@ from repro.sync.strategies import (Chunked, FlatFP32, Hierarchical,
 
 __all__ = [
     "ChunkDispatch", "OuterSyncStrategy", "ReduceCtx", "SyncPlan",
-    "balanced_spans",
+    "balanced_spans", "weighted_psum_mean", "weighted_stack_mean",
     "AdaptiveSyncController", "DelayDecisionAdapter",
     "ScriptedSyncController", "SyncController", "SyncDecision",
     "default_ladder",
     "DelayController", "FixedDelayController", "MeasuredDelayController",
     "ModelDelayController",
+    "ChurnEvent", "ChurnSchedule", "EventMembership",
+    "MembershipController",
     "Chunked", "FlatFP32", "Hierarchical", "Int8Wire", "Quantized",
     "Sharded", "resolve_strategy", "strategy_name",
     "validate_pod_grouping",

@@ -107,9 +107,24 @@ class ReduceCtx:
     auto_axes: Tuple[str, ...] = ()
     mesh: Optional[Any] = None
     leaf_spec: Optional[Any] = None
+    # Elastic-membership context (DESIGN.md §11): ``weights`` is the
+    # traced (G,) fp32 participation vector in canonical source order
+    # (row-major linearized over the manual axes — the same order the
+    # wire gathers stack sources in), replicated to every shard;
+    # ``weight`` is this shard's own scalar weight, sliced out of the
+    # vector by the step builder from the threaded ``axis_coords``.
+    # ``None`` (the default) means fixed membership — every strategy
+    # falls back to its original unweighted collective, so existing
+    # traces are byte-for-byte unchanged.
+    weights: Optional[Any] = None
+    weight: Optional[Any] = None
 
     def narrowed(self, exchange_axes: Tuple[str, ...]) -> "ReduceCtx":
         return dataclasses.replace(self, exchange_axes=exchange_axes)
+
+    def with_membership(self, weights, weight) -> "ReduceCtx":
+        """Per-trace copy carrying the elastic participation weights."""
+        return dataclasses.replace(self, weights=weights, weight=weight)
 
     def with_coords(self, axis_coords) -> "ReduceCtx":
         """Per-trace copy carrying the shard's manual-axis coordinates."""
@@ -139,6 +154,52 @@ class ReduceCtx:
                     f"wire ring needs static ring sizes")
             e *= int(sizes[ax])
         return e
+
+
+def weighted_psum_mean(d, weight, axes):
+    """``psum(d·w) · (1/psum(w))`` — the weighted collective mean.
+
+    The elastic-membership replacement for ``pmean(d, axes)`` inside the
+    manual region (DESIGN.md §11): each shard contributes its group's
+    participation weight, absent groups contribute 0, and normalization
+    is by the live weight sum. Within-group multiplicity (several shards
+    of one group inside ``axes``) cancels because ``w`` is constant over
+    the group. An all-zero round yields 0, not NaN (the membership
+    controller rejects empty rounds before dispatch).
+
+    At all-ones weights this is bit-identical to ``pmean``: ``d · 1.0``
+    is IEEE-exact, the psum reduces in the same order, and the traced
+    reciprocal of the weight sum (``1.0/E.0``, correctly rounded f32
+    division) equals the constant ``1/E`` that XLA's strength-reduced
+    constant division multiplies by (cf. the reciprocal-multiply note on
+    ``repro.kernels.ref.quantize_blockwise_ref``) — asserted by tests
+    for every strategy.
+    """
+    import jax.numpy as jnp
+
+    w = jnp.asarray(weight, jnp.float32)
+    num = jax.lax.psum(d * w, axes)
+    sw = jax.lax.psum(w, axes)
+    inv = jnp.where(sw > 0, jnp.float32(1.0) / sw, jnp.float32(0.0))
+    return num * inv
+
+
+def weighted_stack_mean(stacked, weights):
+    """(G, ...) stack × (G,) weights -> weighted mean over axis 0.
+
+    The simulator-side counterpart of :func:`weighted_psum_mean` (used
+    where strategies reduce a stacked axis with ``jnp.mean(axis=0)``):
+    ``sum(x·w) · (1/Σw)``, 0 on an all-zero mask. Bit-identical to
+    ``jnp.mean`` at all-ones weights by the same argument.
+    """
+    import jax.numpy as jnp
+
+    w = jnp.asarray(weights, jnp.float32)
+    wb = w.reshape((w.shape[0],) + (1,) * (stacked.ndim - 1))
+    num = jnp.sum(stacked * wb, axis=0)
+    sw = jnp.sum(w)
+    inv = jnp.where(sw > 0, jnp.float32(1.0) / sw, jnp.float32(0.0))
+    return num * inv
 
 
 def constrain_to_spec(x, spec, ctx: ReduceCtx):
@@ -246,11 +307,14 @@ class OuterSyncStrategy:
         raise NotImplementedError
 
     # --------------------------------------------------- simulator dispatch
-    def sim_dispatch(self, group_params, outer, tc, *, mu, lr, num_pods=1):
+    def sim_dispatch(self, group_params, outer, tc, *, mu, lr, num_pods=1,
+                     weights=None):
         """(G, ...)-stacked replicas -> (target_f32, new OuterState).
 
         Default: per-group Δθ, strategy-specific reduction, then the
         Nesterov math of :func:`repro.core.outer.outer_reduce`.
+        ``weights`` is the optional (G,) elastic-membership participation
+        vector (DESIGN.md §11); ``None`` keeps the fixed-membership mean.
         """
         import jax.numpy as jnp
 
@@ -258,12 +322,12 @@ class OuterSyncStrategy:
             lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32)[None],
             group_params, outer.anchor)
         delta_avg, new_res = self.sim_reduce(
-            delta, outer.residual, tc, num_pods=num_pods)
+            delta, outer.residual, tc, num_pods=num_pods, weights=weights)
         return outer_reduce(outer, delta_avg, tc, mu=mu, lr=lr,
                             residual=new_res)
 
     def sim_reduce(self, delta, residual, tc, *, num_pods=1,
-                   pod_grouped=False):
+                   pod_grouped=False, weights=None):
         """Stacked (G, ...) Δθ -> (averaged payload, new residual).
 
         ``pod_grouped=True`` (set by the hierarchical combinator after its
@@ -271,7 +335,10 @@ class OuterSyncStrategy:
         exchange endpoints are the ``num_pods`` pods, not the G groups.
         Collective-mean strategies may ignore it (the mean of duplicated
         entries is the pod mean); ring strategies with order-sensitive
-        per-source sums must honour it.
+        per-source sums must honour it. ``weights`` is the optional (G,)
+        membership vector; under ``pod_grouped`` it arrives as per-entry
+        pod weight sums (the hierarchical combinator broadcasts each
+        pod's weight over its entries).
         """
         raise NotImplementedError
 

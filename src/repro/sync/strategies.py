@@ -42,7 +42,8 @@ import jax.numpy as jnp
 from repro import compat
 from repro.core.outer import compress_delta, outer_reduce
 from repro.sync.base import (OuterSyncStrategy, ReduceCtx, SyncPlan,
-                             balanced_spans, constrain_to_spec, _leaf_sizes)
+                             balanced_spans, constrain_to_spec, _leaf_sizes,
+                             weighted_psum_mean, weighted_stack_mean)
 
 
 @dataclass(frozen=True)
@@ -55,23 +56,37 @@ class FlatFP32(OuterSyncStrategy):
 
     def reduce_leaf(self, d, r, tc, ctx: ReduceCtx):
         if ctx.exchange_axes:
-            d = jax.lax.pmean(d, ctx.exchange_axes)
+            if ctx.weight is not None:
+                d = weighted_psum_mean(d, ctx.weight, ctx.exchange_axes)
+            else:
+                d = jax.lax.pmean(d, ctx.exchange_axes)
         return d, r
 
-    def sim_dispatch(self, group_params, outer, tc, *, mu, lr, num_pods=1):
+    def sim_dispatch(self, group_params, outer, tc, *, mu, lr, num_pods=1,
+                     weights=None):
         # Mean the replicas BEFORE subtracting the anchor — the seed
         # simulator's operation order, preserved bit for bit (mean-then-
         # subtract and subtract-then-mean agree mathematically, not in
         # floating point).
-        mean_params = jax.tree.map(
-            lambda p: jnp.mean(p.astype(jnp.float32), axis=0), group_params)
+        if weights is None:
+            mean_params = jax.tree.map(
+                lambda p: jnp.mean(p.astype(jnp.float32), axis=0),
+                group_params)
+        else:
+            mean_params = jax.tree.map(
+                lambda p: weighted_stack_mean(p.astype(jnp.float32),
+                                              weights), group_params)
         delta = jax.tree.map(
             lambda m, a: m - a.astype(jnp.float32), mean_params, outer.anchor)
         return outer_reduce(outer, delta, tc, mu=mu, lr=lr)
 
     def sim_reduce(self, delta, residual, tc, *, num_pods=1,
-                   pod_grouped=False):
-        return jax.tree.map(lambda d: jnp.mean(d, axis=0), delta), residual
+                   pod_grouped=False, weights=None):
+        if weights is None:
+            return jax.tree.map(lambda d: jnp.mean(d, axis=0),
+                                delta), residual
+        return jax.tree.map(lambda d: weighted_stack_mean(d, weights),
+                            delta), residual
 
 
 @dataclass(frozen=True)
@@ -98,15 +113,22 @@ class Quantized(OuterSyncStrategy):
         d, r = compress_delta(d, r, bits=self.bits, block=self.block,
                               use_pallas=ctx.use_pallas)
         if ctx.exchange_axes:
-            d = jax.lax.pmean(d, ctx.exchange_axes)
+            if ctx.weight is not None:
+                d = weighted_psum_mean(d, ctx.weight, ctx.exchange_axes)
+            else:
+                d = jax.lax.pmean(d, ctx.exchange_axes)
         return d, r
 
     def sim_reduce(self, delta, residual, tc, *, num_pods=1,
-                   pod_grouped=False):
+                   pod_grouped=False, weights=None):
         payload, new_res = jax.vmap(
             lambda d, r: compress_delta(d, r, bits=self.bits,
                                         block=self.block))(delta, residual)
-        return jax.tree.map(lambda d: jnp.mean(d, axis=0), payload), new_res
+        if weights is None:
+            return jax.tree.map(lambda d: jnp.mean(d, axis=0),
+                                payload), new_res
+        return jax.tree.map(lambda d: weighted_stack_mean(d, weights),
+                            payload), new_res
 
 
 @dataclass(frozen=True)
@@ -156,14 +178,17 @@ class Int8Wire(OuterSyncStrategy):
         new_r = c - payload_local
         if not ctx.exchange_axes or ctx.exchange_size() <= 1:
             return payload_local, new_r
+        # ctx.weights rides in exchange order (row-major over the
+        # exchange axes — pod-level under Hierarchical, which narrows
+        # the ctx with pod weight sums); None keeps the 1/E sum.
         avg = ring_allreduce_quantized(
             q, s, axis_names=ctx.exchange_axes, axis_sizes=ctx.axis_sizes,
             bits=self.bits, block=self.block, use_pallas=ctx.use_pallas,
-            axis_coords=ctx.axis_coords)
+            axis_coords=ctx.axis_coords, weights=ctx.weights)
         return avg[:n].reshape(c.shape), new_r
 
     def sim_reduce(self, delta, residual, tc, *, num_pods=1,
-                   pod_grouped=False):
+                   pod_grouped=False, weights=None):
         """Exact model of the ring: per-source-scale sum in source order.
 
         Shares :func:`repro.kernels.ref.dequant_sum_sources` with the
@@ -181,6 +206,14 @@ class Int8Wire(OuterSyncStrategy):
                                        quantize_blockwise_ref)
 
         bits, block = self.bits, self.block
+        src_w = weights
+        if weights is not None and pod_grouped:
+            # pod-duplicated stack: the ring endpoints are the pods, so
+            # the per-source weights are the per-entry pod weights'
+            # representatives (Hierarchical already broadcast each pod's
+            # weight sum over its entries)
+            P = max(num_pods, 1)
+            src_w = jnp.asarray(weights, jnp.float32).reshape(P, -1)[:, 0]
 
         def leaf(d, r):
             G = d.shape[0]
@@ -200,7 +233,8 @@ class Int8Wire(OuterSyncStrategy):
                 s = s.reshape(P, G // P, *s.shape[1:])[:, 0]
             E = q.shape[0]
             wg = jnp.stack([pack_wire(q[j], bits) for j in range(E)])
-            avg = dequant_sum_sources(wg, s, bits=bits, block=block)
+            avg = dequant_sum_sources(wg, s, bits=bits, block=block,
+                                      weights=src_w)
             return avg[:n].reshape(c.shape[1:]), new_r
 
         flat_d, treedef = jax.tree_util.tree_flatten(delta)
@@ -291,7 +325,10 @@ class Sharded(OuterSyncStrategy):
                                       block=block,
                                       use_pallas=ctx.use_pallas)
         if ctx.exchange_axes:
-            d = jax.lax.pmean(d, ctx.exchange_axes)
+            if ctx.weight is not None:
+                d = weighted_psum_mean(d, ctx.weight, ctx.exchange_axes)
+            else:
+                d = jax.lax.pmean(d, ctx.exchange_axes)
         d = constrain_to_spec(d, ctx.leaf_spec, ctx)
         return d, r
 
@@ -325,17 +362,20 @@ class Sharded(OuterSyncStrategy):
         new_r = constrain_to_spec(c - payload, ctx.leaf_spec, ctx)
         return payload, new_r
 
-    def sim_dispatch(self, group_params, outer, tc, *, mu, lr, num_pods=1):
+    def sim_dispatch(self, group_params, outer, tc, *, mu, lr, num_pods=1,
+                     weights=None):
         # the sharded exchange is a layout change, not a numeric one: the
         # simulator models it with the inner strategy's reduction
         return self.inner.sim_dispatch(group_params, outer, tc, mu=mu,
-                                       lr=lr, num_pods=num_pods)
+                                       lr=lr, num_pods=num_pods,
+                                       weights=weights)
 
     def sim_reduce(self, delta, residual, tc, *, num_pods=1,
-                   pod_grouped=False):
+                   pod_grouped=False, weights=None):
         return self.inner.sim_reduce(delta, residual, tc,
                                      num_pods=num_pods,
-                                     pod_grouped=pod_grouped)
+                                     pod_grouped=pod_grouped,
+                                     weights=weights)
 
 
 @dataclass(frozen=True)
@@ -368,8 +408,25 @@ class Hierarchical(OuterSyncStrategy):
     def reduce_leaf(self, d, r, tc, ctx: ReduceCtx):
         inner_ctx = ctx
         if ctx.fast_axes:
-            d = jax.lax.pmean(d, ctx.fast_axes)  # stage 1: fast domain, fp32
-            inner_ctx = ctx.narrowed(ctx.slow_axes)
+            if ctx.weight is not None:
+                # stage 1: weighted fast-domain mean; the pod's weight for
+                # stage 2 is its live weight sum (a dead pod exchanges a
+                # zero payload at weight 0)
+                d = weighted_psum_mean(d, ctx.weight, ctx.fast_axes)
+                pod_w = jax.lax.psum(
+                    jnp.asarray(ctx.weight, jnp.float32), ctx.fast_axes)
+                sizes = ctx.axis_sizes or {}
+                P = int(sizes.get("pod", 1))
+                # per-pod weight sums in pod (slow-axis) order: manual
+                # linearization is pod-major, so the (G,) vector reshapes
+                # (P, G//P) directly
+                pod_vec = jnp.asarray(ctx.weights, jnp.float32
+                                      ).reshape(P, -1).sum(axis=1)
+                inner_ctx = ctx.narrowed(ctx.slow_axes).with_membership(
+                    pod_vec, pod_w)
+            else:
+                d = jax.lax.pmean(d, ctx.fast_axes)  # stage 1: fast, fp32
+                inner_ctx = ctx.narrowed(ctx.slow_axes)
         d, r = self.inner.reduce_leaf(d, r, tc, inner_ctx)
         if r is not None and ctx.fast_axes and self.inner.needs_residual:
             # the residual stopped varying over the fast axes at the
@@ -378,7 +435,7 @@ class Hierarchical(OuterSyncStrategy):
         return d, r
 
     def sim_reduce(self, delta, residual, tc, *, num_pods=1,
-                   pod_grouped=False):
+                   pod_grouped=False, weights=None):
         P = max(num_pods, 1)
         leaves = jax.tree_util.tree_leaves(delta)
         if leaves:
@@ -391,14 +448,31 @@ class Hierarchical(OuterSyncStrategy):
         # distributed path on a pod-less mesh.
         def pod_mean(d):
             G = d.shape[0]
-            pm = jnp.mean(d.reshape(P, G // P, *d.shape[1:]), axis=1,
-                          keepdims=True)
+            dp = d.reshape(P, G // P, *d.shape[1:])
+            if weights is not None:
+                wp = jnp.asarray(weights, jnp.float32).reshape(
+                    (P, G // P) + (1,) * (d.ndim - 1))
+                sw = jnp.sum(wp, axis=1, keepdims=True)
+                inv = jnp.where(sw > 0, jnp.float32(1.0) / sw,
+                                jnp.float32(0.0))
+                pm = jnp.sum(dp * wp, axis=1, keepdims=True) * inv
+            else:
+                pm = jnp.mean(dp, axis=1, keepdims=True)
             return jnp.broadcast_to(pm, (P, G // P, *d.shape[1:])
                                     ).reshape(d.shape)
 
         delta = jax.tree.map(pod_mean, delta)
+        entry_w = weights
+        if weights is not None:
+            # per-entry pod weight sums (broadcast over each pod's
+            # entries): the inner reduction weighs pod means by pod
+            # liveness, and ring inners pick the [:, 0] representatives
+            wp = jnp.asarray(weights, jnp.float32).reshape(P, -1)
+            entry_w = jnp.broadcast_to(
+                wp.sum(axis=1, keepdims=True), wp.shape).reshape(-1)
         return self.inner.sim_reduce(delta, residual, tc,
-                                     num_pods=num_pods, pod_grouped=True)
+                                     num_pods=num_pods, pod_grouped=True,
+                                     weights=entry_w)
 
 
 @dataclass(frozen=True)
@@ -447,15 +521,18 @@ class Chunked(OuterSyncStrategy):
     def reduce_leaf(self, d, r, tc, ctx: ReduceCtx):
         return self.inner.reduce_leaf(d, r, tc, ctx)
 
-    def sim_dispatch(self, group_params, outer, tc, *, mu, lr, num_pods=1):
+    def sim_dispatch(self, group_params, outer, tc, *, mu, lr, num_pods=1,
+                     weights=None):
         return self.inner.sim_dispatch(group_params, outer, tc, mu=mu,
-                                       lr=lr, num_pods=num_pods)
+                                       lr=lr, num_pods=num_pods,
+                                       weights=weights)
 
     def sim_reduce(self, delta, residual, tc, *, num_pods=1,
-                   pod_grouped=False):
+                   pod_grouped=False, weights=None):
         return self.inner.sim_reduce(delta, residual, tc,
                                      num_pods=num_pods,
-                                     pod_grouped=pod_grouped)
+                                     pod_grouped=pod_grouped,
+                                     weights=weights)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,164 @@
+"""Elastic membership on a real mesh (DESIGN.md §11).
+
+Run under XLA_FLAGS=--xla_force_host_platform_device_count=8.
+
+Three claims:
+
+1. **All-ones bit-identity**: a Trainer driven through the elastic
+   (weighted) step graphs at full membership is *bitwise* equal to the
+   fixed-membership Trainer — for the flat fp32 collective, the
+   quantized+delayed path (residual state included), and the
+   hierarchical int8 wire ring on a pod mesh. This is what makes it safe
+   to keep the elastic graphs always-on whenever a controller is
+   attached.
+2. **Churn agreement**: under scripted drop + rejoin + straggler churn,
+   the distributed Trainer and the vmap simulator — consuming identical
+   membership records and batch streams — agree on every group's params
+   at every outer boundary (inner-step noise tolerance, as
+   md_equivalence.py).
+3. The launcher wires ``--churn-script`` end to end.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import (MembershipConfig, ModelConfig, OuterCommConfig,
+                          ParallelConfig, TrainConfig)
+from repro.core.simulate import SimulatedRun
+from repro.launch.mesh import small_mesh
+from repro.launch.train import Trainer
+from repro.sync import ChurnSchedule, MembershipController
+
+assert jax.device_count() == 8
+
+mc = ModelConfig(num_layers=2, d_model=64, num_heads=2, num_kv_heads=2,
+                 d_ff=128, vocab_size=128, dtype="float32",
+                 norm="layernorm", activation="gelu", positional="learned",
+                 max_position_embeddings=64)
+tc = TrainConfig(optimizer="pier", total_steps=20, global_batch_size=8,
+                 seq_len=16, sync_interval=4, warmup_frac=0.4,
+                 inner_lr=1e-3, inner_min_lr=1e-4, seed=0)
+
+# 4 groups x 1 data_inner x 2 model
+pc = ParallelConfig(data_axis_size=4, model_axis_size=2, data_outer=4)
+mesh = small_mesh((4, 1, 2), ("data_outer", "data_inner", "model"))
+
+
+def _drive(trainer, sim, steps):
+    """Identical batch streams: sim._global_batch is pure in (seed, step)."""
+    for step in range(steps):
+        batch = sim._global_batch(step)
+        dist = jax.device_put(batch, trainer.bundle.batch_sharding(batch))
+        trainer.train_step(dist)
+    return trainer
+
+
+def _assert_bitwise(ta, tb, what):
+    for a, b in zip(jax.tree.leaves(ta.state.params),
+                    jax.tree.leaves(tb.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(ta.outer.momentum),
+                    jax.tree.leaves(tb.outer.momentum)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print(f"all-ones elastic bitwise == fixed ({what})")
+
+
+# ---- 1. all-ones elastic graphs bitwise == fixed graphs ----
+sim = SimulatedRun(mc, tc, num_groups=4, seed=0)  # batch-stream source
+
+variants = [
+    ("fp32 d=0", tc),
+    ("quantize d=2 (residual)", tc.replace(
+        sync_delay=2,
+        outer_comm=OuterCommConfig(compression="quantize", bits=8,
+                                   block=64))),
+]
+for what, tcv in variants:
+    fixed = _drive(Trainer(mc, tcv, pc, mesh), sim, 16)
+    elastic = _drive(
+        Trainer(mc, tcv, pc, mesh, membership=MembershipController(4)),
+        sim, 16)
+    _assert_bitwise(fixed, elastic, what)
+
+# hierarchical int8 wire ring on a pod mesh (2 pods x 2 groups)
+tc_h = tc.replace(outer_comm=OuterCommConfig(
+    compression="int8-wire", bits=8, block=64, hierarchical=True))
+pc_h = ParallelConfig(data_axis_size=2, model_axis_size=2, num_pods=2,
+                      data_outer=2)
+mesh_h = small_mesh((2, 2, 1, 2), ("pod", "data_outer", "data_inner",
+                                   "model"))
+sim_h = SimulatedRun(mc, tc_h, num_groups=4, seed=0, num_pods=2)
+fixed_h = _drive(Trainer(mc, tc_h, pc_h, mesh_h), sim_h, 16)
+elastic_h = _drive(
+    Trainer(mc, tc_h, pc_h, mesh_h, membership=MembershipController(4)),
+    sim_h, 16)
+_assert_bitwise(fixed_h, elastic_h, "int8 wire hier pod ring")
+
+# ---- 2. sim == Trainer at every outer boundary under scripted churn ----
+SCRIPT = "drop:1@1,rejoin:1@3,straggle:0@2+1"
+mcfg = MembershipConfig(max_staleness=1)
+
+
+def _worst_all_groups(sim, trainer):
+    w = 0.0
+    for a, b in zip(jax.tree.leaves(sim.state.group_params),
+                    jax.tree.leaves(trainer.state.params)):
+        w = max(w, float(jnp.abs(jnp.asarray(a, jnp.float32)
+                                 - jnp.asarray(b, jnp.float32)).max()))
+    return w
+
+
+def _churn_pair(tcv):
+    tcv = tcv.replace(membership=mcfg)
+    mk = lambda: MembershipController(4, cfg=mcfg,
+                                      schedule=ChurnSchedule.parse(SCRIPT))
+    s = SimulatedRun(mc, tcv, num_groups=4, seed=0, membership=mk())
+    t = Trainer(mc, tcv, pc, mesh, membership=mk())
+    return s, t
+
+
+# fp32 eager: outer events at steps 7/11/15/19/23 (ordinals 0..4); the
+# script's rejoin bootstrap lands after event 2's apply and group 1
+# re-enters the mask at event 3
+tc_c = tc.replace(total_steps=24, warmup_frac=0.25)
+sim_c, trainer_c = _churn_pair(tc_c)
+boundaries = [s for s in range(24)
+              if sim_c.sched.is_sync_step(s) and sim_c.sched.op_at(s) == "outer"]
+assert len(boundaries) == 5, boundaries
+for step in range(24):
+    batch = sim_c._global_batch(step)
+    dist = jax.device_put(batch, trainer_c.bundle.batch_sharding(batch))
+    trainer_c.train_step(dist)
+    sim_c.run(1)
+    if step in boundaries:
+        w = _worst_all_groups(sim_c, trainer_c)
+        assert w < 5e-4, (step, w)
+        print(f"churn boundary step {step}: worst divergence {w:.2e}")
+
+# int8 wire + delayed dispatch under the same script: the weighted ring
+# reduce, masked apply and bootstrap all agree end to end
+tc_w = tc_c.replace(sync_delay=1, outer_comm=OuterCommConfig(
+    compression="int8-wire", bits=8, block=64))
+sim_w, trainer_w = _churn_pair(tc_w)
+for step in range(24):
+    batch = sim_w._global_batch(step)
+    dist = jax.device_put(batch, trainer_w.bundle.batch_sharding(batch))
+    trainer_w.train_step(dist)
+    sim_w.run(1)
+w = _worst_all_groups(sim_w, trainer_w)
+print(f"churn int8-wire d=1 final: worst divergence {w:.2e}")
+assert w < 5e-4, w
+
+# ---- 3. launcher --churn-script smoke ----
+from repro.launch import train as train_launcher
+
+train_launcher.main([
+    "--reduced", "--steps", "20", "--global-batch", "8",
+    "--seq-len", "16", "--sync-interval", "4", "--groups", "4",
+    "--mesh", "4,2,1", "--log-every", "10",
+    "--churn-script", "drop:1@0,rejoin:1@2", "--max-staleness", "1",
+])
+print("launcher --churn-script smoke ok")
+
+print("MD_MEMBERSHIP_OK")

@@ -106,6 +106,86 @@ def test_checkpoint_duplicate_key_rejected_at_save(tmp_path):
     mgr.save(2, {"state": {"a": jnp.ones((2,)), "b": jnp.zeros((3,))}})
 
 
+# ---------------------------------------------------------------------------
+# crash safety: atomic save + corrupt-checkpoint quarantine
+# ---------------------------------------------------------------------------
+
+_TREE = {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.ones((4,))}
+
+
+def test_checkpoint_save_leaves_no_partial_state(tmp_path):
+    import os
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"state": _TREE})
+    mgr.save(2, {"state": _TREE})
+    # every temp artifact was renamed into place
+    assert not [n for n in os.listdir(tmp_path) if ".tmp" in n]
+    for d in os.listdir(tmp_path):
+        assert not [n for n in os.listdir(tmp_path / d) if ".tmp" in n]
+    # stale debris from a crashed save is swept on the next one
+    os.makedirs(tmp_path / "step_00000003.tmp")
+    mgr.save(3, {"state": _TREE})
+    assert mgr.all_steps() == [1, 2, 3]
+
+
+def test_checkpoint_truncated_npz_skipped_with_warning(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"state": _TREE})
+    mgr.save(2, {"state": _TREE})
+    victim = tmp_path / "step_00000002" / "state.npz"
+    victim.write_bytes(victim.read_bytes()[:-20])  # torn write
+    fresh = CheckpointManager(str(tmp_path))  # no memoized verification
+    with pytest.warns(UserWarning, match="skipping corrupt checkpoint"):
+        assert fresh.all_steps() == [1]
+    assert fresh.latest_step() == 1  # auto-resume lands on the survivor
+    with pytest.raises(ValueError, match="incomplete/corrupt"):
+        fresh.restore(2, {"state": _TREE})
+    out, _ = fresh.restore(1, {"state": _TREE})
+    np.testing.assert_allclose(np.asarray(out["state"]["w"]),
+                               np.asarray(_TREE["w"]))
+
+
+@pytest.mark.parametrize("breakage", ["no_manifest", "garbage_manifest",
+                                      "missing_archive", "missing_array"])
+def test_checkpoint_incomplete_step_skipped(tmp_path, breakage):
+    import json
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"state": _TREE})
+    mgr.save(2, {"state": _TREE})
+    step2 = tmp_path / "step_00000002"
+    if breakage == "no_manifest":
+        (step2 / "manifest.json").unlink()
+    elif breakage == "garbage_manifest":
+        (step2 / "manifest.json").write_text("{not json")
+    elif breakage == "missing_archive":
+        (step2 / "state.npz").unlink()
+    else:  # an archive that lost one of its manifest-listed arrays
+        np.savez(step2 / "state.npz", w=np.zeros((2, 3), np.float32))
+    fresh = CheckpointManager(str(tmp_path))
+    with pytest.warns(UserWarning, match="skipping corrupt checkpoint"):
+        assert fresh.all_steps() == [1]
+    with pytest.raises(ValueError, match="incomplete/corrupt"):
+        fresh.restore(2, {"state": _TREE})
+
+
+def test_checkpoint_corruption_warns_once_and_gc_survives(tmp_path):
+    import warnings as _warnings
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(1, {"state": _TREE})
+    (tmp_path / "step_00000001" / "manifest.json").unlink()
+    fresh = CheckpointManager(str(tmp_path), keep=2)
+    with pytest.warns(UserWarning):
+        fresh.all_steps()
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")  # second sweep stays quiet
+        assert fresh.all_steps() == []
+        # saves (and their GC pass over the corrupt dir) keep working
+        fresh.save(2, {"state": _TREE})
+        fresh.save(3, {"state": _TREE})
+        fresh.save(4, {"state": _TREE})
+        assert fresh.all_steps() == [3, 4]
+
+
 def test_trainer_resume_determinism(tmp_path):
     """train 10 == train 5 + save + restore + train 5 (single device)."""
     from repro.config import ModelConfig, ParallelConfig, TrainConfig

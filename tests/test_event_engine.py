@@ -246,6 +246,64 @@ def test_remeasure_zero_keeps_measure_once_behavior():
     assert not ctrl.wants_measurement
 
 
+def _measured_trainer(tc, *, min_windows=2, max_windows=3):
+    from repro.launch import mesh as M
+    from repro.launch.train import Trainer
+
+    pc = ParallelConfig(data_axis_size=1, model_axis_size=1, data_outer=1)
+    mesh = M.small_mesh((1, 1, 1), ("data_outer", "data_inner", "model"))
+    mdc = MeasuredDelayController(tc, min_windows=min_windows,
+                                  max_windows=max_windows, skip_windows=1)
+    tr = Trainer(MC, tc, pc, mesh,
+                 sync_controller=DelayDecisionAdapter(mdc))
+    return tr, mdc
+
+
+def _run_trainer(tr, steps):
+    from repro.launch import mesh as M
+    from repro.launch.train import synthetic_pipeline
+
+    pipe = synthetic_pipeline(tr.mesh, M.data_axes(tr.mesh), MC, tr.tc)
+    try:
+        tr.run(steps, pipe, log_every=0)
+    finally:
+        pipe.close()
+
+
+def test_warmup_windows_feed_measured_controller():
+    """fp32 strategies sample t_comm on the warmup accumulate windows
+    (the accumulate reduces the same full-precision tree as an fp32
+    outer sync), so d* resolves before the first post-warmup boundary
+    instead of burning the first real sync windows on measurement."""
+    # warmup 12 of 24, interval 4 -> accumulate boundaries at steps
+    # 3/7/11, first outer sync at step 15
+    tc = _tc(total_steps=24, sync_interval=4, warmup_frac=0.5,
+             sync_delay=0)
+    tr, mdc = _measured_trainer(tc)
+    _run_trainer(tr, 12)  # warmup only — no outer window has run yet
+    assert mdc.windows == 3  # all three accumulate windows were sampled
+    assert not mdc.wants_measurement  # max_windows reached inside warmup
+    assert mdc.t_comm is not None
+
+
+def test_warmup_measurement_skipped_for_compressed_wire():
+    """The accumulate always reduces fp32, which says nothing about a
+    packed int8 wire's timing — strategies whose plan declares a
+    non-fp32 ``wire_format`` start measuring at the first outer window,
+    as before. (``Quantized`` is NOT such a strategy: its collective is
+    the fp32 exact wire model, so it measures during warmup too.)"""
+    tc = _tc(total_steps=24, sync_interval=4, warmup_frac=0.5,
+             sync_delay=0,
+             outer_comm=OuterCommConfig(compression="int8-wire", bits=8,
+                                        block=BLOCK))
+    tr, mdc = _measured_trainer(tc)
+    _run_trainer(tr, 12)
+    assert mdc.windows == 0  # warmup said nothing about the int8 wire
+    assert mdc.wants_measurement
+    _run_trainer(tr, 12)  # outer syncs at 15/19/23 measure as before
+    assert mdc.windows == 3
+
+
 # ---------------------------------------------------------------------------
 # AdaptiveSyncController: ladder + exposure-triggered switching
 # ---------------------------------------------------------------------------
@@ -342,6 +400,51 @@ def test_scripted_controller_emits_strategy_once():
     assert ctrl.current_decision() == SyncDecision(2, q4)
     ctrl.tick_window()
     assert ctrl.current_decision() == SyncDecision(2, None)
+
+
+def test_scripted_controller_replay_determinism():
+    """Scripted decisions are pure data keyed on the window count: two
+    controllers built from the same script emit identical decision
+    sequences, and a fresh controller replays the exact sequence a prior
+    run produced — the property the sim↔Trainer lockstep tests (and
+    offline replay of a recorded adaptive run) stand on."""
+    def mk():
+        return ScriptedSyncController(
+            2, {1: SyncDecision(1, None), 3: Quantized(4, BLOCK),
+                5: SyncDecision(0, Quantized(8, BLOCK))})
+
+    def drive(ctrl, n=8):
+        seq = [ctrl.initial_decision()]
+        for _ in range(n):
+            ctrl.tick_window()
+            seq.append(ctrl.current_decision())
+        return seq
+
+    first = drive(mk())
+    assert drive(mk()) == first  # same script -> same sequence
+    assert first[2] == SyncDecision(1, None)  # standing delay kept
+    assert first[3] == SyncDecision(1, Quantized(4, BLOCK))
+    assert first[4].strategy is None  # never re-emitted
+    assert first[5] == SyncDecision(0, Quantized(8, BLOCK))
+    assert first[6] == SyncDecision(0, None)
+    assert first[8] == SyncDecision(0, None)
+    # wants_measurement never opens: decisions are data, not measurement
+    ctrl = mk()
+    assert not ctrl.wants_measurement
+
+
+def test_clamped_delay_edges():
+    """The single clamp both engines adopt (DESIGN.md §9/§11)."""
+    # delay == sync_interval - 1: the largest legal overlap, unchanged
+    assert SyncDecision(4).clamped_delay(5) == 4
+    # delay 0 stays eager
+    assert SyncDecision(0).clamped_delay(5) == 0
+    # interval 1 leaves no legal in-flight window at all
+    assert SyncDecision(3).clamped_delay(1) == 0
+    assert SyncDecision(0).clamped_delay(1) == 0
+    # out-of-range decisions clamp instead of desynchronizing the engines
+    assert SyncDecision(-2).clamped_delay(5) == 0
+    assert SyncDecision(99).clamped_delay(5) == 4
 
 
 # ---------------------------------------------------------------------------

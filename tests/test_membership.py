@@ -1,0 +1,368 @@
+"""Elastic membership (DESIGN.md §11): churn scripting, the weighted
+variable-membership reduction, and the simulator's elastic event loop.
+
+The contract under test:
+
+- **Spec grammar + state machine**: ``ChurnSchedule.parse`` round-trips
+  the launcher grammar and rejects malformed entries;
+  ``MembershipController`` replays drop/rejoin/straggle scripts into
+  per-event records — stragglers stay in the apply cohort while within
+  ``max_staleness`` missed events, are evicted beyond it, and bootstrap
+  on re-entry; ``min_live`` violations fail at construction.
+- **Exact weighting**: the weighted reducers are *bit-identical* to the
+  fixed 1/E mean at all-ones weights (the acceptance bar for keeping
+  the elastic graphs always-on under ``tc.membership``), and a masked
+  reduction equals the plain mean over the surviving subset exactly —
+  for the fp32 stack mean and the int8 wire-sum core alike.
+- **Simulator**: full membership through the elastic graphs reproduces
+  the fixed path bit for bit for FlatFP32, Quantized, and Int8Wire;
+  scripted churn bootstraps rejoining groups from the anchor (or a
+  checkpoint donor) and converges within 5% of the full-membership loss.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import MembershipConfig, OuterCommConfig, TrainConfig
+from repro.core.pier import PierSchedule
+from repro.core.simulate import SimulatedRun
+from repro.checkpoint import CheckpointManager
+from repro.kernels.ref import dequant_sum_sources, quantize_blockwise_ref
+from repro.sync import (ChurnEvent, ChurnSchedule, MembershipController,
+                        weighted_stack_mean)
+from test_delayed_sync import MC, _tc
+
+BLOCK = 64
+
+
+def _mtc(**kw):
+    base = dict(optimizer="pier", warmup_frac=0.25, sync_interval=5,
+                membership=MembershipConfig(max_staleness=1))
+    base.update(kw)
+    return _tc(**base)  # total_steps=40 -> warmup 10, outer events at
+    #                      14/19/24/29/34/39 (ordinals 0..5)
+
+
+# ---------------------------------------------------------------------------
+# spec grammar
+# ---------------------------------------------------------------------------
+
+
+def test_churn_spec_roundtrip():
+    s = ChurnSchedule.parse(" drop:1@3, rejoin:1@6 ,straggle:0@4+2 ")
+    assert s.events == (ChurnEvent("drop", 1, 3),
+                        ChurnEvent("rejoin", 1, 6),
+                        ChurnEvent("straggle", 0, 4, late=2))
+    assert s.max_event() == 6
+    assert s.for_group(1) == (ChurnEvent("drop", 1, 3),
+                              ChurnEvent("rejoin", 1, 6))
+    assert ChurnSchedule.parse("").events == ()
+
+
+@pytest.mark.parametrize("bad", [
+    "flake:0@1",          # unknown kind
+    "drop:0@1+2",         # +late only means something for straggle
+    "straggle:0@1",       # straggle needs a lateness
+    "rejoin:0@0",         # rejoin must name event >= 1 (bootstraps at k-1)
+    "drop:0",             # missing @event
+    "drop:a@1",           # non-numeric group
+])
+def test_churn_spec_rejects(bad):
+    with pytest.raises(ValueError):
+        ChurnSchedule.parse(bad)
+
+
+# ---------------------------------------------------------------------------
+# controller state machine
+# ---------------------------------------------------------------------------
+
+
+def test_controller_drop_rejoin_straggle_timeline():
+    ctrl = MembershipController(
+        4, cfg=MembershipConfig(max_staleness=1),
+        schedule=ChurnSchedule.parse("drop:1@3,rejoin:1@6,straggle:0@4+2"))
+    assert ctrl.elastic
+    assert ctrl.at(0).full and ctrl.at(2).full
+    # dropped: weight 0 and out of the apply cohort immediately
+    assert ctrl.at(3).weights == (1.0, 0.0, 1.0, 1.0)
+    assert ctrl.at(3).apply_live == (True, False, True, True)
+    assert ctrl.at(4).apply_live == (True, False, True, True)
+    # straggling group 0: deltas for events 4,5 discarded but it stays in
+    # the apply cohort while within the staleness bound (evicted only
+    # after missing more than max_staleness=1 events)
+    assert ctrl.at(4).weights == (0.0, 0.0, 1.0, 1.0)
+    assert ctrl.at(4).apply_live[0] is True
+    assert ctrl.at(5).weights[0] == 0.0
+    assert ctrl.at(5).apply_live[0] is True
+    # right after event 5's apply: group 1's scripted rejoin bootstraps,
+    # and so does group 0 (2 missed events > max_staleness -> evicted,
+    # its straggle window ends at 6) — both participate at event 6
+    assert ctrl.at(5).bootstrap_after_apply == (0, 1)
+    assert ctrl.at(6).full
+    # past the horizon: steady state, no one-shot bootstraps
+    assert ctrl.at(7).full and ctrl.at(7).bootstrap_after_apply == ()
+
+
+def test_controller_straggler_eviction_and_reentry():
+    ctrl = MembershipController(
+        2, cfg=MembershipConfig(max_staleness=1),
+        schedule=ChurnSchedule.parse("straggle:1@2+3"))
+    # misses events 2,3,4; evicted once missed > max_staleness — the
+    # eviction computed after event 3 takes effect at event 4's mask
+    assert ctrl.at(2).apply_live == (True, True)   # 1 missed: tolerated
+    assert ctrl.at(3).apply_live == (True, True)   # eviction decided here
+    assert ctrl.at(4).apply_live == (True, False)  # ...and lands here
+    assert ctrl.at(4).bootstrap_after_apply == (1,)  # re-enters at 5
+    assert ctrl.at(5).full
+
+
+def test_controller_min_live_fails_at_construction():
+    with pytest.raises(ValueError, match="min_live"):
+        MembershipController(
+            2, cfg=MembershipConfig(min_live=2),
+            schedule=ChurnSchedule.parse("drop:0@1,rejoin:0@3"))
+
+
+@pytest.mark.parametrize("spec", [
+    "drop:0@1,drop:0@2",       # double drop
+    "rejoin:0@2",              # rejoin without a drop
+    "drop:0@2,rejoin:0@2",     # rejoin not after its drop
+    "straggle:0@1+3,drop:0@2",     # drop inside the straggle window
+    "straggle:0@1+3,straggle:0@2+1",  # overlapping straggles
+])
+def test_controller_rejects_incoherent_scripts(spec):
+    with pytest.raises(ValueError):
+        MembershipController(4, schedule=ChurnSchedule.parse(spec))
+
+
+def test_controller_rejects_out_of_range_group():
+    with pytest.raises(ValueError, match="only 2 groups"):
+        MembershipController(2, schedule=ChurnSchedule.parse("drop:2@1"))
+
+
+def test_empty_schedule_is_not_elastic():
+    ctrl = MembershipController(3)
+    assert not ctrl.elastic
+    assert ctrl.at(0).full and ctrl.at(11).full
+
+
+# ---------------------------------------------------------------------------
+# exact weighting (the unit properties behind the all-ones acceptance bar)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("E", [2, 3, 4, 5])
+def test_weighted_stack_mean_all_ones_bitwise(E):
+    x = jax.random.normal(jax.random.PRNGKey(E), (E, 37, 5), jnp.float32)
+    w = jnp.ones((E,), jnp.float32)
+    a = jax.jit(lambda x: jnp.mean(x, axis=0))(x)
+    b = jax.jit(weighted_stack_mean)(x, w)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_weighted_stack_mean_mask_equals_subset_mean():
+    # up to summation order: XLA's pairwise reduce associates a 4-row
+    # and a 3-row sum differently, so subset agreement is 1-ulp, not
+    # bitwise (the bitwise contract is the all-ones identity above)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 33), jnp.float32)
+    w = jnp.asarray([1.0, 0.0, 1.0, 1.0], jnp.float32)
+    got = jax.jit(weighted_stack_mean)(x, w)
+    want = jax.jit(lambda x: jnp.mean(x, axis=0))(x[jnp.asarray([0, 2, 3])])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-6, atol=1e-6)
+
+
+def test_weighted_stack_mean_zero_sum_is_zero():
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 8), jnp.float32)
+    got = jax.jit(weighted_stack_mean)(x, jnp.zeros((3,), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.zeros((8,), np.float32))
+
+
+def _quantize_stack(E, n=512, seed=0):
+    deltas = jax.random.normal(jax.random.PRNGKey(seed), (E, n), jnp.float32)
+    qs = [quantize_blockwise_ref(d, block=BLOCK, bits=8) for d in deltas]
+    wg = jnp.stack([q for q, _ in qs])
+    sg = jnp.stack([s for _, s in qs])
+    return wg, sg
+
+
+@pytest.mark.parametrize("E", [2, 3, 4, 6])
+def test_dequant_sum_sources_all_ones_bitwise(E):
+    wg, sg = _quantize_stack(E)
+    f = jax.jit(lambda wg, sg: dequant_sum_sources(wg, sg, bits=8,
+                                                   block=BLOCK))
+    fw = jax.jit(lambda wg, sg, w: dequant_sum_sources(
+        wg, sg, bits=8, block=BLOCK, weights=w))
+    a = f(wg, sg)
+    b = fw(wg, sg, jnp.ones((E,), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dequant_sum_sources_mask_equals_subset():
+    """Weight-0 sources drop out exactly: the masked weighted sum over
+    all E equals the unweighted sum over the surviving subset (same
+    accumulation order — zeros are IEEE-exact additions)."""
+    wg, sg = _quantize_stack(4)
+    keep = jnp.asarray([0, 2, 3])
+    got = jax.jit(lambda wg, sg, w: dequant_sum_sources(
+        wg, sg, bits=8, block=BLOCK, weights=w))(
+            wg, sg, jnp.asarray([1.0, 0.0, 1.0, 1.0], jnp.float32))
+    want = jax.jit(lambda wg, sg: dequant_sum_sources(
+        wg, sg, bits=8, block=BLOCK))(wg[keep], sg[keep])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_dequant_sum_sources_downweight_normalizes():
+    """Non-binary weights: result is the w-weighted mean of the
+    dequantized payloads."""
+    wg, sg = _quantize_stack(3, n=256, seed=2)
+    w = jnp.asarray([1.0, 0.5, 0.25], jnp.float32)
+    got = dequant_sum_sources(wg, sg, bits=8, block=BLOCK, weights=w)
+    payloads = [dequant_sum_sources(wg[i:i + 1], sg[i:i + 1], bits=8,
+                                    block=BLOCK) for i in range(3)]
+    want = sum(float(wi) * p for wi, p in zip(w, payloads)) * (
+        jnp.float32(1.0) / jnp.sum(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# simulator: all-ones bit-identity per strategy (the elastic graphs must
+# reproduce the fixed path exactly when nobody churns)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("comm,delay", [
+    (OuterCommConfig(), 0),
+    (OuterCommConfig(), 2),
+    (OuterCommConfig(compression="quantize", bits=8, block=BLOCK), 0),
+    (OuterCommConfig(compression="int8-wire", bits=8, block=BLOCK), 2),
+])
+def test_sim_all_ones_membership_bit_identity(comm, delay):
+    tc = _mtc(outer_comm=comm, sync_delay=delay)
+    fixed = SimulatedRun(MC, tc.replace(membership=None), num_groups=4,
+                         seed=0)
+    h0 = fixed.run(25)
+    elastic = SimulatedRun(MC, tc, num_groups=4, seed=0,
+                           membership=MembershipController(
+                               4, cfg=tc.membership))
+    h1 = elastic.run(25)
+    assert h0["train_loss"] == h1["train_loss"]
+    elastic.flush(), fixed.flush()
+    for a, b in zip(jax.tree.leaves(fixed.state.group_params),
+                    jax.tree.leaves(elastic.state.group_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(fixed.state.outer.momentum),
+                    jax.tree.leaves(elastic.state.outer.momentum)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# simulator: scripted churn semantics
+# ---------------------------------------------------------------------------
+
+
+def _churn_sim(spec, tc=None, G=4, ckpt=None):
+    tc = tc if tc is not None else _mtc()
+    return SimulatedRun(
+        MC, tc, num_groups=G, seed=0,
+        membership=MembershipController(
+            G, cfg=tc.membership, schedule=ChurnSchedule.parse(spec)),
+        checkpoint_manager=ckpt)
+
+
+def test_sim_dropped_group_keeps_stale_params_then_bootstraps():
+    # warmup 10, interval 5: event k applies at step 14 + 5k (delay 0)
+    r = _churn_sim("drop:1@1,rejoin:1@3")
+    r.run(20)  # through event 1 (step 19): group 1 absent, no apply
+    gp = jax.tree.leaves(r.state.group_params)[0]
+    anchor = jax.tree.leaves(r.state.outer.anchor)[0]
+    # live groups synced onto the new anchor; dropped group kept stale
+    np.testing.assert_array_equal(np.asarray(gp[0]), np.asarray(anchor))
+    assert float(jnp.abs(gp[1] - anchor).max()) > 0
+    r.run(5)  # through event 2 (step 24): bootstrap for the rejoin at 3
+    gp = jax.tree.leaves(r.state.group_params)[0]
+    anchor = jax.tree.leaves(r.state.outer.anchor)[0]
+    np.testing.assert_array_equal(np.asarray(gp[1]), np.asarray(anchor))
+    # fresh inner-opt state for the bootstrapped group
+    assert int(r.state.opt.count[1]) == 0
+    assert all(float(jnp.abs(m[1]).max()) == 0.0
+               for m in jax.tree.leaves(r.state.opt.mu))
+
+
+def test_sim_checkpoint_bootstrap_donor(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    tc = _mtc(membership=MembershipConfig(rejoin_bootstrap="checkpoint"))
+    r = _churn_sim("drop:1@1,rejoin:1@3", tc=tc, ckpt=ckpt)
+    r.run(15)  # past event 0: groups synced at the anchor
+    donor = jax.tree.map(lambda x: np.asarray(x), r.state.params)
+    ckpt.save(15, {"params": r.state.params})
+    r.run(10)  # event 2's apply triggers the bootstrap for the rejoin
+    gp = jax.tree.leaves(r.state.group_params)[0]
+    np.testing.assert_array_equal(
+        np.asarray(gp[1]), jax.tree.leaves(donor)[0])
+
+
+def test_sim_straggler_receives_applies_but_contributes_nothing():
+    r = _churn_sim("straggle:0@1+1")
+    r.run(20)  # event 1 (step 19): group 0's delta discarded, apply lands
+    gp = jax.tree.leaves(r.state.group_params)[0]
+    anchor = jax.tree.leaves(r.state.outer.anchor)[0]
+    # within the staleness bound the straggler still installs the target
+    np.testing.assert_array_equal(np.asarray(gp[0]), np.asarray(anchor))
+
+
+def test_sim_membership_wrong_group_count_rejected():
+    with pytest.raises(ValueError, match="tracks 2 groups"):
+        SimulatedRun(MC, _mtc(), num_groups=4, seed=0,
+                     membership=MembershipController(2))
+
+
+def test_sim_membership_chunked_not_implemented():
+    tc = _mtc(comm_chunks=3)
+    with pytest.raises(NotImplementedError, match="chunked"):
+        SimulatedRun(MC, tc, num_groups=4, seed=0,
+                     membership=MembershipController(4, cfg=tc.membership))
+
+
+def test_outer_index_ordinals():
+    tc = _mtc()  # warmup 10, interval 5
+    sched = PierSchedule(tc)
+    assert sched.outer_index(14) == 0
+    assert sched.outer_index(19) == 1
+    assert sched.outer_index(39) == 5
+    with pytest.raises(ValueError):
+        sched.outer_index(15)  # not a boundary
+    with pytest.raises(ValueError):
+        sched.outer_index(9)  # warmup accumulate, not an outer event
+
+
+# ---------------------------------------------------------------------------
+# convergence under churn (acceptance: <= 5% of full-membership loss)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("comm", [
+    OuterCommConfig(),
+    OuterCommConfig(compression="int8-wire", bits=8, block=BLOCK),
+])
+def test_churn_convergence_within_5pct(comm):
+    tc = _mtc(total_steps=60, sync_delay=1, outer_comm=comm)
+    full = SimulatedRun(MC, tc.replace(membership=None), num_groups=4,
+                        seed=0)
+    hf = full.run(60)
+    churn = _churn_sim(
+        "drop:1@1,rejoin:1@4,straggle:0@2+1,drop:3@6,rejoin:3@8", tc=tc)
+    hc = churn.run(60)
+
+    def tail(h):  # average of the last 5 steps' train loss
+        return float(np.mean(h["train_loss"][-5:]))
+
+    lf, lc = tail(hf), tail(hc)
+    assert lc <= lf * 1.05, (lc, lf)

@@ -17,6 +17,7 @@ from repro import compat  # noqa: E402  (conftest puts src on sys.path)
 SCRIPTS = [
     "md_steps.py",
     "md_equivalence.py",
+    "md_membership.py",
     "md_7b_dryrun.py",
     pytest.param(
         "md_dryrun_mini.py",
