@@ -1,11 +1,14 @@
-"""Serving example: batched prefill + greedy decode with a sharded KV cache.
+"""Serving example: the continuous-batching engine on mixed-length prompts.
 
     PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         python examples/serve_decode.py --arch qwen3-1.7b
 
-Uses the reduced config of any assigned architecture (--arch), including the
-SSM/hybrid families (recurrent decode state instead of a KV cache) and
-whisper (encoder-decoder with a stubbed audio frontend).
+Paged-supported architectures (gqa-family KV caches) run through the real
+``repro.serve`` subsystem — paged KV pool, Pallas decode attention,
+requests of different lengths joining mid-flight; the SSM/hybrid families
+(recurrent decode state) and whisper (encoder-decoder, stubbed audio
+frontend) use the dense fallback inside the same
+:func:`repro.serve.generate` helper the launcher uses.
 """
 
 import argparse
@@ -23,7 +26,7 @@ from repro.config import ParallelConfig  # noqa: E402
 from repro.configs import get_reduced_config, list_architectures  # noqa: E402
 from repro.launch import mesh as M  # noqa: E402
 from repro.models import registry as R  # noqa: E402
-from repro.parallel.steps import build_serve_steps  # noqa: E402
+from repro.serve import generate, paged_supported  # noqa: E402
 
 
 def main():
@@ -39,39 +42,39 @@ def main():
     n = jax.device_count()
     mesh = M.small_mesh((n, 1), ("data", "model"))
     pc = ParallelConfig(data_axis_size=n, model_axis_size=1, data_outer=1)
-    max_len = args.prompt_len + args.tokens
-    bundle = build_serve_steps(mc, pc, mesh, batch=args.batch,
-                               max_len=max_len)
 
-    key = jax.random.PRNGKey(0)
-    params = jax.jit(lambda k: R.init_params(k, mc),
-                     out_shardings=bundle.param_shardings)(key)
-    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                mc.vocab_size)
-    batch_in = {"tokens": prompt}
+    key_params, key_prompt = jax.random.split(jax.random.PRNGKey(0))
+    params = jax.jit(lambda k: R.init_params(k, mc))(key_params)
+    prompts = np.asarray(jax.random.randint(
+        key_prompt, (args.batch, args.prompt_len), 0, mc.vocab_size))
+    frames = None
     if mc.is_encoder_decoder:
         # stubbed audio frontend: precomputed frame embeddings
-        batch_in["frames"] = jax.random.normal(
-            key, (args.batch, mc.encoder_seq_len, mc.d_model), jnp.float32)
+        frames = jax.random.normal(
+            key_prompt, (args.batch, mc.encoder_seq_len, mc.d_model),
+            jnp.float32)
 
     t0 = time.time()
-    logits, state = bundle.prefill_step(params, batch_in)
-    next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    generated = [next_tok]
-    t1 = time.time()
-    for _ in range(args.tokens - 1):
-        logits, state = bundle.serve_step(params, state, next_tok)
-        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        generated.append(next_tok)
-    jax.block_until_ready(next_tok)
-    t2 = time.time()
-    out = np.concatenate([np.asarray(t) for t in generated], axis=1)
-    kind = ("recurrent state" if mc.sub_quadratic
-            else ("latent cache" if mc.attention_kind == "mla" else "KV cache"))
-    print(f"arch={mc.name} decode-state={kind}")
-    print(f"prefill {t1 - t0:.2f}s | decode "
-          f"{(t2 - t1) / max(args.tokens - 1, 1) * 1e3:.0f} ms/token "
-          f"(batch={args.batch}, CPU interpret-scale)")
+    out, info = generate(params, mc, pc, mesh, prompts, args.tokens,
+                         frames=frames)
+    dt = time.time() - t0
+
+    ok, why = paged_supported(mc)
+    kind = ("paged KV pool" if info["path"] == "paged" else
+            ("recurrent state" if mc.sub_quadratic
+             else ("latent cache" if mc.attention_kind == "mla"
+                   else "dense KV cache")))
+    print(f"arch={mc.name} path={info['path']} decode-state={kind}")
+    if info["path"] == "paged":
+        eng = info["engine"]
+        print(f"engine: {eng.stats['decode_steps']} decode steps, "
+              f"{eng.stats['prefills']} prefills, "
+              f"{eng.stats['tokens_out']} tokens "
+              f"({eng.stats['tokens_out'] / max(dt, 1e-9):.1f} tok/s, "
+              f"CPU interpret-scale)")
+    else:
+        print(f"dense path: {why or 'encoder-decoder frames'} "
+              f"({out.size / max(dt, 1e-9):.1f} tok/s, CPU interpret-scale)")
     print("greedy tokens[0]:", out[0].tolist())
 
 

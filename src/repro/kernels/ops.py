@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.kernels.backend import default_interpret
+from repro.kernels.decode_attention import paged_decode_attention as _paged_decode
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.pier_update import pier_update as _pier_update
 from repro.kernels.quantize import (dequantize_blockwise as _dequantize,
@@ -40,6 +41,24 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0):
     return _flash(
         q, k, v, causal=causal, window=window, softcap=softcap,
         block_q=128, block_kv=128, interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (serving, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, context_lens,
+                           k_scales=None, v_scales=None, *,
+                           window: int = 0, softcap: float = 0.0):
+    """Single-query attention through a block table (kernels/decode_attention).
+
+    q (B, H, hd); pools (N, bs, Hkv, hd) [+ (N, bs, Hkv) fp32 scales when
+    int8-quantized]; block_tables (B, T) int32; context_lens (B,) int32.
+    """
+    return _paged_decode(
+        q, k_pool, v_pool, block_tables, context_lens, k_scales, v_scales,
+        window=window, softcap=softcap, interpret=_interpret())
 
 
 # ---------------------------------------------------------------------------

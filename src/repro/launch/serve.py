@@ -1,6 +1,13 @@
-"""Serving launcher: batched prefill + decode against the sharded KV cache.
+"""Serving launcher: the continuous-batching engine behind a CLI.
 
 ``python -m repro.launch.serve --arch qwen3-1.7b --reduced --tokens 32``
+
+Paged-supported architectures (gqa-family KV caches) decode through the
+``repro.serve`` engine — paged KV pool, Pallas decode attention,
+continuous batching; MLA / SSM / encoder-decoder configs take the dense
+``build_serve_steps`` path inside the same :func:`repro.serve.generate`
+helper. ``--ckpt-dir`` hot-swaps params from the newest complete trainer
+checkpoint between decode steps (``serve/handoff.py``).
 """
 
 from __future__ import annotations
@@ -16,7 +23,8 @@ from repro.config import ParallelConfig
 from repro.configs import get_config, get_reduced_config
 from repro.launch import mesh as M
 from repro.models import registry as R
-from repro.parallel.steps import build_serve_steps
+from repro.serve import (CheckpointPoller, EngineConfig, PagedCacheConfig,
+                         ServeEngine, generate, paged_supported)
 
 
 def main(argv=None):
@@ -27,7 +35,17 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--mesh", default="")
-    ap.add_argument("--greedy", action="store_true", default=True)
+    # store_true + default=True left this flag dead (it could never be
+    # turned off); sampling is the actual toggle now
+    ap.add_argument("--sample", action="store_true",
+                    help="temperature sampling instead of greedy decode")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV-pool block size (paged path)")
+    ap.add_argument("--int8-kv", action="store_true",
+                    help="int8-quantized KV blocks (paged path)")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="hot-swap params from new complete checkpoints here")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -40,34 +58,63 @@ def main(argv=None):
     mesh = M.small_mesh(shape, ("data", "model"))
     pc = ParallelConfig(data_axis_size=shape[0], model_axis_size=shape[-1],
                         data_outer=1)
-    max_len = args.prompt_len + args.tokens
-    bundle = build_serve_steps(mc, pc, mesh, batch=args.batch, max_len=max_len)
 
-    key = jax.random.PRNGKey(args.seed)
-    params = jax.jit(
-        lambda k: R.init_params(k, mc),
-        out_shardings=bundle.param_shardings)(key)
-    prompt = jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, mc.vocab_size)
-    batch_in = {"tokens": prompt}
+    # independent keys: reusing one key for params AND the prompt made the
+    # "random" prompt a function of the weights' randomness
+    key_params, key_prompt = jax.random.split(jax.random.PRNGKey(args.seed))
+    params = jax.jit(lambda k: R.init_params(k, mc))(key_params)
+    prompts = np.asarray(jax.random.randint(
+        key_prompt, (args.batch, args.prompt_len), 0, mc.vocab_size))
+    frames = None
     if mc.is_encoder_decoder:
-        batch_in["frames"] = jax.random.normal(
-            key, (args.batch, mc.encoder_seq_len, mc.d_model), jnp.float32)
+        frames = jax.random.normal(
+            key_prompt, (args.batch, mc.encoder_seq_len, mc.d_model),
+            jnp.float32)
+
+    ok, why = paged_supported(mc)
+    pcfg = None
+    if ok and frames is None:
+        bs = args.block_size
+        padded = -(-args.prompt_len // bs) * bs
+        need = -(-(padded + args.tokens) // bs)  # blocks per sequence
+        pcfg = PagedCacheConfig(num_blocks=need * args.batch + 1,
+                                block_size=bs, quantized=args.int8_kv)
 
     t0 = time.time()
-    logits, state = bundle.prefill_step(params, batch_in)
-    next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    generated = [next_tok]
-    t1 = time.time()
-    for _ in range(args.tokens - 1):
-        logits, state = bundle.serve_step(params, state, next_tok)
-        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        generated.append(next_tok)
-    jax.block_until_ready(next_tok)
-    t2 = time.time()
-    out = np.concatenate([np.asarray(t) for t in generated], axis=1)
-    print(f"arch={mc.name} prefill={t1-t0:.3f}s "
-          f"decode={(t2-t1)/max(args.tokens-1,1)*1e3:.1f} ms/tok")
+    if args.ckpt_dir and pcfg is not None:
+        # explicit engine loop so the handoff hook runs between steps
+        from repro.parallel.steps import build_paged_serve_steps
+        bundle = build_paged_serve_steps(mc, pc, mesh, pcfg=pcfg)
+        engine = ServeEngine(params, mc, bundle, pcfg, EngineConfig(
+            max_slots=args.batch, max_new_tokens=args.tokens,
+            greedy=not args.sample, temperature=args.temperature,
+            seed=args.seed, max_blocks_per_seq=need))
+        for b in range(args.batch):
+            engine.submit(prompts[b], args.tokens)
+        poller = CheckpointPoller(args.ckpt_dir, params)
+        results = engine.run(on_step=poller.on_step)
+        out = np.stack([np.asarray(r.tokens[: args.tokens], np.int32)
+                        for r in results])
+        info = {"path": "paged", "engine": engine}
+        if poller.swapped_steps:
+            print(f"hot-swapped params at checkpoint steps "
+                  f"{poller.swapped_steps}")
+    else:
+        out, info = generate(
+            params, mc, pc, mesh, prompts, args.tokens,
+            greedy=not args.sample, temperature=args.temperature,
+            seed=args.seed, frames=frames, pcfg=pcfg)
+    dt = time.time() - t0
+
+    print(f"arch={mc.name} path={info['path']} "
+          f"tokens/s={out.size / max(dt, 1e-9):.1f} ({dt:.2f}s total)")
+    if info["path"] == "paged":
+        eng = info["engine"]
+        print(f"engine: {eng.stats['decode_steps']} decode steps, "
+              f"{eng.stats['prefills']} prefills, peak pool "
+              f"{eng.stats['peak_blocks']}/{pcfg.num_blocks - 1} blocks")
+    else:
+        print(f"dense path ({why or 'frames given'})")
     print("generated[0,:16]:", out[0, :16].tolist())
 
 

@@ -977,3 +977,75 @@ def build_serve_steps(
         mesh=mesh, pspec=pspec, param_shardings=param_shardings,
         state_shardings=state_shardings, serve_step=serve_step,
         prefill_step=prefill_step, init_state=init_state)
+
+
+# ===========================================================================
+# Paged serving (continuous batching over a shared KV block pool, §12)
+# ===========================================================================
+
+
+@dataclass
+class PagedServeBundle:
+    """Jitted steps for the paged decode path (``repro.serve``).
+
+    ``decode_step(params, pools, tokens, positions, block_tables,
+    context_lens)`` donates the pools; ``prefill_step(params, tokens,
+    pools, block_table, last_index)`` re-jits per padded prompt length —
+    prompts are padded to a block multiple, so the bucket count is
+    ``max_prompt / block_size``, not ``max_prompt``.
+    """
+
+    mesh: Mesh
+    pspec: Any
+    param_shardings: Any
+    decode_step: Callable
+    prefill_step: Callable
+    init_pools: Callable
+
+
+def build_paged_serve_steps(
+    mc: ModelConfig, pc: ParallelConfig, mesh: Mesh, *, pcfg,
+) -> PagedServeBundle:
+    from repro.serve import kv_cache as KC
+    from repro.serve import paged_model as PM
+
+    rules = pier_rules(
+        have_pod="pod" in mesh.axis_names, fsdp=pc.fsdp,
+        shard_experts=pc.shard_experts, inside_manual=False,
+        context_parallel_seq=pc.context_parallel,
+        axis_sizes=M.axis_sizes(mesh))
+
+    pshapes = _param_shapes(mc, scan_layers=False)  # paged path is unstacked
+    pspec = S.param_specs(pshapes, mesh, pc)
+    param_shardings = S.shardings(pspec, mesh)
+
+    def decode(params, pools, tokens, positions, block_tables, context_lens):
+        with use_rules(rules):
+            return PM.paged_decode_step(
+                params, mc, pools, tokens, positions, block_tables,
+                context_lens, pcfg=pcfg)
+
+    def prefill(params, tokens, pools, block_table, last_index):
+        with use_rules(rules):
+            logits, pools = PM.paged_prefill(
+                params, mc, tokens, pools, block_table,
+                pcfg=pcfg, use_pallas=pc.use_pallas)
+            # serving semantics: only the last real token's logits leave
+            # the step (``last_index`` skips the block-padding tail)
+            last = jax.lax.dynamic_index_in_dim(logits, last_index, axis=1)
+            return last[:, 0], pools
+
+    def _with_mesh(fn):
+        def call(*args, **kw):
+            with compat.mesh_context(mesh):
+                return fn(*args, **kw)
+        return call
+
+    decode_step = _with_mesh(jax.jit(decode, donate_argnums=(1,)))
+    prefill_step = _with_mesh(jax.jit(prefill, donate_argnums=(2,)))
+    init_pools = _with_mesh(jax.jit(lambda: KC.init_pools(mc, pcfg)))
+
+    return PagedServeBundle(
+        mesh=mesh, pspec=pspec, param_shardings=param_shardings,
+        decode_step=decode_step, prefill_step=prefill_step,
+        init_pools=init_pools)

@@ -1,0 +1,19 @@
+"""Serving subsystem (DESIGN.md §12): the other half of the Pier loop.
+
+- :mod:`repro.serve.kv_cache` — paged/blocked KV cache: a fixed pool of
+  KV blocks, a host-side free-list allocator, per-sequence block tables,
+  and an optional int8 block format reusing ``kernels/quantize.py``.
+- :mod:`repro.serve.paged_model` — single-token decode forward against the
+  paged pool (the ``kernels/decode_attention.py`` Pallas kernel).
+- :mod:`repro.serve.engine` — continuous-batching engine: admission
+  control, prefill/decode interleaving, eviction, latency accounting.
+- :mod:`repro.serve.handoff` — train→serve hot handoff: poll
+  ``CheckpointManager`` for new complete steps and hot-swap params into
+  the running engine between decode steps.
+"""
+
+from repro.serve.engine import (EngineConfig, Request, RequestResult,  # noqa: F401
+                                ServeEngine, generate)
+from repro.serve.handoff import CheckpointPoller  # noqa: F401
+from repro.serve.kv_cache import (BlockAllocator, PagedCacheConfig,  # noqa: F401
+                                  paged_supported)

@@ -1,0 +1,113 @@
+"""Train→serve hot handoff (DESIGN.md §12).
+
+The Pier trainer checkpoints through :class:`~repro.checkpoint.manager.
+CheckpointManager`, whose manifest-last write order makes "complete"
+well-defined: a checkpoint directory is live iff its ``manifest.json``
+exists and every archive it names passes the CRC sweep —
+``latest_step()`` already applies that filter, so the poller never
+half-reads a checkpoint the trainer is still writing.
+
+:class:`CheckpointPoller` watches the directory and, when a new complete
+step appears, loads *serve params only* (no optimizer moments, no outer
+state) and hands them to the engine via ``engine.set_params`` — which
+takes effect at the next decode-step boundary. In-flight sequences keep
+their KV blocks: their already-cached K/V was produced by the old params
+(the usual serving-side relaxation of a hot swap; sequences started after
+the swap are pure new-params), so nothing is dropped, recomputed, or
+leaked.
+
+Both on-disk conventions are understood:
+
+- trainer (``launch/train.py``): ``state.npz`` holding a (G,)-stacked
+  :class:`TrainState` — the poller slices group ``group`` (default 0) off
+  every param leaf, i.e. serves one Pier replica;
+- plain ``params.npz`` holding an unstacked param tree (the simulator /
+  tests convention).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager, _path_key
+
+
+class CheckpointPoller:
+    """Poll a checkpoint directory for new complete steps.
+
+    ``template`` is a pytree of the *unstacked* serve params (arrays or
+    ShapeDtypeStructs) giving the expected shapes/dtypes; a checkpoint
+    whose param leaves do not match is rejected loudly rather than served.
+    """
+
+    def __init__(self, manager: Union[str, CheckpointManager], template,
+                 *, group: int = 0):
+        self.mgr = (CheckpointManager(manager)
+                    if isinstance(manager, str) else manager)
+        self.template = template
+        self.group = group
+        self.seen_step: Optional[int] = None
+        self.swapped_steps: List[int] = []
+
+    def poll(self) -> Optional[Tuple[int, Any]]:
+        """(step, params) when a newer complete checkpoint exists, else None."""
+        step = self.mgr.latest_step()
+        if step is None or (self.seen_step is not None
+                            and step <= self.seen_step):
+            return None
+        params = self._load(step)
+        self.seen_step = step
+        return step, params
+
+    def on_step(self, engine) -> None:
+        """``engine.run(on_step=poller.on_step)`` — swap at step boundaries."""
+        got = self.poll()
+        if got is not None:
+            step, params = got
+            engine.set_params(params)
+            self.swapped_steps.append(step)
+
+    # ------------------------------------------------------------------ load
+
+    def _load(self, step: int):
+        path = os.path.join(self.mgr.directory, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        trees = manifest.get("trees", {})
+        if "params" in trees:
+            npz, prefix, stacked = "params.npz", "", False
+        elif "state" in trees:
+            npz, prefix, stacked = "state.npz", "params/", True
+        else:
+            raise ValueError(
+                f"checkpoint step_{step:08d} carries neither a 'params' nor "
+                f"a 'state' tree (found {sorted(trees)}); nothing to serve")
+        flat_t, treedef = jax.tree_util.tree_flatten_with_path(self.template)
+        leaves = []
+        with np.load(os.path.join(path, npz)) as data:
+            for p, leaf in flat_t:
+                key = prefix + _path_key(p)
+                if key not in data:
+                    raise ValueError(
+                        f"checkpoint step_{step:08d}: param {key!r} missing "
+                        f"from {npz}")
+                arr = data[key]
+                if stacked:
+                    if arr.shape[0] <= self.group:
+                        raise ValueError(
+                            f"checkpoint step_{step:08d}: group {self.group} "
+                            f"out of range for {key!r} with shape {arr.shape}")
+                    arr = arr[self.group]
+                if tuple(arr.shape) != tuple(leaf.shape):
+                    raise ValueError(
+                        f"checkpoint step_{step:08d}: {key!r} shape "
+                        f"{arr.shape} != serve template {leaf.shape}")
+                leaves.append(jax.device_put(
+                    jnp.asarray(arr, jnp.dtype(leaf.dtype))))
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,247 @@
+"""Paged/blocked KV cache for continuous-batching decode (DESIGN.md §12).
+
+Instead of one dense (B, max_len, Hkv, hd) buffer per sequence, K/V lives
+in a fixed pool of ``num_blocks`` blocks of ``block_size`` token slots,
+shared by every sequence and every attention layer:
+
+    k_pool / v_pool   (L_kv, num_blocks, block_size, Hkv, hd)
+
+A sequence owns an ordered list of physical block ids (its *block table*);
+logical token ``t`` lives in block ``table[t // block_size]`` slot
+``t % block_size``. Blocks are handed out by a host-side free-list
+:class:`BlockAllocator` and returned when the sequence completes, so pool
+memory is bounded by *live tokens*, not ``batch × max_len`` — the memory
+feature that makes mixed-length continuous batching viable at scale.
+
+Physical block 0 is a reserved *sink*: empty decode slots in a batched
+step point their table at it, so their (garbage) writes land somewhere
+harmless and never corrupt a live sequence.
+
+int8 block format: with ``quantized=True`` the pools store int8 values
+plus one fp32 absmax scale per (block, slot, kv-head) row of ``hd``
+elements — exactly the ``kernels/quantize.py`` blockwise wire format with
+``block = hd``, produced by the same Pallas kernel at write time and
+consumed by the decode kernel's in-VMEM dequant (elementwise-identical to
+``kernels/ref.py:dequantize_blockwise_ref``, asserted in tests). KV-cache
+HBM drops ~4x (int8 payload + fp32/hd scale overhead) for a documented
+logit tolerance (DESIGN.md §12).
+
+Device-side write helpers here are pure jnp scatters, traced inside the
+jitted decode/prefill steps of ``parallel/steps.build_paged_serve_steps``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels import ops as kops
+from repro.models import layers as L
+
+SINK_BLOCK = 0  # reserved physical block for inactive decode slots
+
+
+@dataclass(frozen=True)
+class PagedCacheConfig:
+    """Shape/format of the shared block pool."""
+
+    num_blocks: int = 64  # total physical blocks, incl. the sink
+    block_size: int = 16  # token slots per block
+    quantized: bool = False  # int8 blocks + fp32 per-(slot, head) scales
+    quant_bits: int = 8
+    dtype: Optional[str] = None  # unquantized pool dtype; None = compute dtype
+
+    def __post_init__(self):
+        if self.num_blocks < 2:
+            raise ValueError("num_blocks must be >= 2 (block 0 is the sink)")
+        if self.block_size < 1:
+            raise ValueError(f"block_size must be >= 1: {self.block_size}")
+
+    def blocks_for(self, num_tokens: int) -> int:
+        """Blocks needed to hold ``num_tokens`` token slots."""
+        return -(-num_tokens // self.block_size)
+
+    def pool_dtype(self, cfg: ModelConfig):
+        """Element dtype of unquantized pools (the model compute dtype
+        unless overridden, e.g. fp32 for the parity tests)."""
+        return jnp.dtype(self.dtype) if self.dtype else L.compute_dtype(cfg)
+
+
+def kv_layer_indices(cfg: ModelConfig) -> List[int]:
+    """Decoder layers that carry a KV cache (attn / local_attn blocks)."""
+    return [i for i in range(cfg.num_layers) if cfg.uses_kv_cache(i)]
+
+
+def paged_supported(cfg: ModelConfig) -> Tuple[bool, str]:
+    """Whether the paged decode path covers this architecture.
+
+    MLA's latent cache and SSM/rgLRU recurrent state keep the existing
+    dense decode path (``ModelConfig.attention_kind`` dispatch); the paged
+    pool covers the mha/gqa/mqa KV-cache families.
+    """
+    if cfg.attention_kind != "gqa":
+        return False, f"attention_kind={cfg.attention_kind!r} (dense path)"
+    if cfg.is_encoder_decoder:
+        return False, "encoder-decoder (dense path)"
+    kinds = {cfg.block_kind(i) for i in range(cfg.num_layers)}
+    bad = kinds - {"attn", "local_attn"}
+    if bad:
+        return False, f"recurrent blocks {sorted(bad)} (dense path)"
+    if cfg.num_heads % max(cfg.num_kv_heads, 1) != 0:
+        return False, (f"H={cfg.num_heads} not a multiple of "
+                       f"Hkv={cfg.num_kv_heads}")
+    return True, ""
+
+
+def init_pools(cfg: ModelConfig, pcfg: PagedCacheConfig) -> Dict[str, Any]:
+    """Zero-initialized pool pytree for every KV-carrying layer."""
+    lkv = len(kv_layer_indices(cfg))
+    hd = cfg.resolved_head_dim
+    shape = (lkv, pcfg.num_blocks, pcfg.block_size, cfg.num_kv_heads, hd)
+    if pcfg.quantized:
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:-1], jnp.float32),
+            "v_scale": jnp.zeros(shape[:-1], jnp.float32),
+        }
+    dt = pcfg.pool_dtype(cfg)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def pool_nbytes(cfg: ModelConfig, pcfg: PagedCacheConfig) -> int:
+    """HBM footprint of the pool (the benchmark's occupancy denominator)."""
+    lkv = len(kv_layer_indices(cfg))
+    hd = cfg.resolved_head_dim
+    elems = (lkv * pcfg.num_blocks * pcfg.block_size * cfg.num_kv_heads * hd)
+    if pcfg.quantized:
+        return 2 * (elems + elems // hd * 4)  # int8 payload + fp32 scales
+    return 2 * elems * jnp.dtype(pcfg.pool_dtype(cfg)).itemsize
+
+
+# ---------------------------------------------------------------------------
+# device-side writes (traced inside the jitted serve steps)
+# ---------------------------------------------------------------------------
+
+
+def _quantize_rows(x: jnp.ndarray, *, bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise-quantize the trailing hd axis: one fp32 scale per row.
+
+    Reuses the ``kernels/quantize.py`` Pallas kernel with ``block = hd`` —
+    the same absmax/reciprocal-multiply math as the outer collective's
+    wire format, so the dequant oracle is shared.
+    """
+    hd = x.shape[-1]
+    flat = x.astype(jnp.float32).reshape(-1)
+    q, s = kops.quantize_blockwise(flat, bits=bits, block=hd)
+    return q.reshape(x.shape), s.reshape(x.shape[:-1])
+
+
+def write_token(pools: Dict[str, Any], layer: int, block_ids, slots,
+                k, v, *, pcfg: PagedCacheConfig) -> Dict[str, Any]:
+    """Scatter one decode step's K/V: block_ids/slots (B,), k/v (B, Hkv, hd)."""
+    out = dict(pools)
+    if pcfg.quantized:
+        kq, ks = _quantize_rows(k, bits=pcfg.quant_bits)
+        vq, vs = _quantize_rows(v, bits=pcfg.quant_bits)
+        out["k"] = pools["k"].at[layer, block_ids, slots].set(kq)
+        out["v"] = pools["v"].at[layer, block_ids, slots].set(vq)
+        out["k_scale"] = pools["k_scale"].at[layer, block_ids, slots].set(ks)
+        out["v_scale"] = pools["v_scale"].at[layer, block_ids, slots].set(vs)
+        return out
+    dt = pools["k"].dtype
+    out["k"] = pools["k"].at[layer, block_ids, slots].set(k.astype(dt))
+    out["v"] = pools["v"].at[layer, block_ids, slots].set(v.astype(dt))
+    return out
+
+
+def write_prefill(pools: Dict[str, Any], layer: int, block_table,
+                  k, v, *, pcfg: PagedCacheConfig) -> Dict[str, Any]:
+    """Scatter a prefilled sequence's K/V stream into its blocks.
+
+    ``k``/``v`` are (S, Hkv, hd) with S a whole number of blocks (the
+    engine pads prompts to a block multiple; pad slots are masked at
+    attention time by ``context_lens``); ``block_table`` is (S / bs,).
+    """
+    bs = pcfg.block_size
+    nb, rem = divmod(k.shape[0], bs)
+    if rem:
+        raise ValueError(
+            f"prefill stream length {k.shape[0]} is not a whole number of "
+            f"blocks of {bs}; pad the prompt to a block multiple")
+    kb = k.reshape(nb, bs, *k.shape[1:])
+    vb = v.reshape(nb, bs, *v.shape[1:])
+    out = dict(pools)
+    if pcfg.quantized:
+        kq, ks = _quantize_rows(kb, bits=pcfg.quant_bits)
+        vq, vs = _quantize_rows(vb, bits=pcfg.quant_bits)
+        out["k"] = pools["k"].at[layer, block_table].set(kq)
+        out["v"] = pools["v"].at[layer, block_table].set(vq)
+        out["k_scale"] = pools["k_scale"].at[layer, block_table].set(ks)
+        out["v_scale"] = pools["v_scale"].at[layer, block_table].set(vs)
+        return out
+    dt = pools["k"].dtype
+    out["k"] = pools["k"].at[layer, block_table].set(kb.astype(dt))
+    out["v"] = pools["v"].at[layer, block_table].set(vb.astype(dt))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# host-side block allocator
+# ---------------------------------------------------------------------------
+
+
+class BlockAllocator:
+    """Free-list allocator over the physical blocks of one pool.
+
+    Host-side and strictly bookkeeping — device code only ever sees the
+    block ids it hands out. Invariants (property-tested):
+
+    - a block is never handed out twice without an intervening ``free``;
+    - ``free`` of an unallocated block raises (double-free guard);
+    - ``num_free + len(allocated)`` is conserved at ``num_blocks - 1``
+      (block 0 is the reserved sink and never circulates).
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the sink)")
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, SINK_BLOCK, -1))
+        self._allocated: set = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def allocated(self) -> frozenset:
+        return frozenset(self._allocated)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("KV block pool exhausted")
+        blk = self._free.pop()
+        self._allocated.add(blk)
+        return blk
+
+    def alloc_many(self, n: int) -> List[int]:
+        if n > self.num_free:
+            raise RuntimeError(
+                f"KV block pool exhausted: need {n}, have {self.num_free}")
+        return [self.alloc() for _ in range(n)]
+
+    def free(self, block: int) -> None:
+        if block not in self._allocated:
+            raise ValueError(
+                f"freeing block {block} that is not allocated "
+                f"(double free or sink/out-of-range id)")
+        self._allocated.remove(block)
+        self._free.append(block)
+
+    def free_many(self, blocks) -> None:
+        for b in blocks:
+            self.free(b)

@@ -1,0 +1,133 @@
+"""Model forward passes against the paged KV pool (DESIGN.md §12).
+
+Two entry points, both pure functions jitted by
+``parallel/steps.build_paged_serve_steps``:
+
+- :func:`paged_prefill` — run the ordinary training forward with
+  ``collect_kv=True`` over one (padded) prompt and scatter the collected
+  K/V streams into the sequence's blocks. Pad tokens' K/V lands in the
+  pool but is masked at decode time by ``context_lens``.
+- :func:`paged_decode_step` — one token per active slot, per-sequence
+  positions (unlike the dense ``registry.decode_step`` lockstep scalar
+  position), attention via the ``kernels/decode_attention.py`` Pallas
+  kernel gathering through each sequence's block table.
+
+Only architectures passing ``kv_cache.paged_supported`` come through
+here — every decoder layer is attn/local_attn with a gqa-family head
+layout, so the layer loop needs exactly the norm/attn/mlp residual
+structure of ``transformer._decoder_layer_fwd`` (MoE MLPs included).
+MLA / SSM / rgLRU / encoder-decoder configs use the dense path.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels import ops as kops
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import transformer as T
+from repro.serve import kv_cache as KC
+
+
+def _embed(p, tokens, positions, cfg: ModelConfig):
+    """tokens (B, 1) + per-sequence absolute positions (B,) -> (B, 1, D).
+
+    ``layers.embed_tokens`` broadcasts one scalar offset across the batch
+    (lockstep dense decode); continuous batching needs a position per
+    sequence, so learned-position lookup happens per row here.
+    """
+    x = jnp.take(L.cast(p["tokens"], cfg), tokens, axis=0)
+    if cfg.positional == "learned":
+        pos_emb = jnp.take(L.cast(p["positions"], cfg), positions, axis=0)
+        x = x + pos_emb[:, None]
+    return x
+
+
+def _layer_window(cfg: ModelConfig, layer_idx: int) -> int:
+    kind = cfg.block_kind(layer_idx)
+    return cfg.local_window if kind == "local_attn" else cfg.sliding_window
+
+
+def paged_prefill(params, cfg: ModelConfig, tokens, pools, block_table, *,
+                  pcfg: KC.PagedCacheConfig, use_pallas: bool = False):
+    """Prefill one prompt into its blocks.
+
+    tokens (1, S) with S a multiple of ``pcfg.block_size`` (engine pads;
+    right-padding is harmless under the causal mask — pad K/V is masked
+    by ``context_lens`` at decode time). block_table (S / bs,) int32
+    physical block ids. Returns (logits (1, S, V), pools).
+    """
+    if T.is_scanned(params["layers"]):
+        raise ValueError("paged serving expects unstacked layer params")
+    logits, aux = T.forward(
+        params, cfg, {"tokens": tokens}, use_pallas=use_pallas,
+        collect_kv=True)
+    for kv_i, li in enumerate(KC.kv_layer_indices(cfg)):
+        k, v = aux["kv"][li]
+        pools = KC.write_prefill(pools, kv_i, block_table, k[0], v[0],
+                                 pcfg=pcfg)
+    return logits, pools
+
+
+def paged_decode_step(params, cfg: ModelConfig, pools, tokens, positions,
+                      block_tables, context_lens, *,
+                      pcfg: KC.PagedCacheConfig):
+    """One decode step over every slot of the batch.
+
+    tokens (B,) int32 — the token being fed at ``positions`` (B,) int32
+    (its absolute index, so after an S-token prefill the first decode
+    feeds the sampled token at position S). block_tables (B, T) int32.
+    context_lens (B,) int32 — tokens visible *including* this one
+    (``positions + 1`` for live slots, 0 for empty slots, whose rows
+    compute garbage into the sink block and come out as zero logits).
+
+    Returns (logits (B, V) fp32, pools).
+    """
+    B = tokens.shape[0]
+    bs = pcfg.block_size
+    active = context_lens > 0
+    # Empty slots write their garbage K/V to the reserved sink block.
+    rows = jnp.arange(B)
+    blk_idx = jnp.clip(positions // bs, 0, block_tables.shape[1] - 1)
+    write_blocks = jnp.where(active, block_tables[rows, blk_idx],
+                             KC.SINK_BLOCK).astype(jnp.int32)
+    slots = (positions % bs).astype(jnp.int32)
+    pos2d = positions[:, None]  # (B, 1)
+
+    x = _embed(params["embed"], tokens[:, None], positions, cfg)
+    quantized = "k_scale" in pools
+    for kv_i, li in enumerate(KC.kv_layer_indices(cfg)):
+        lp = params["layers"][li]
+        h = L.apply_norm(lp["norm1"], x, cfg)
+        q, k, v = A._project_qkv(lp["mix"], h, h, cfg)  # (B, 1, H/Hkv, hd)
+        if cfg.positional == "rope":
+            q = L.apply_rope(q, pos2d, cfg.rope_theta)
+            k = L.apply_rope(k, pos2d, cfg.rope_theta)
+        pools = KC.write_token(pools, kv_i, write_blocks, slots,
+                               k[:, 0], v[:, 0], pcfg=pcfg)
+        out = kops.paged_decode_attention(
+            q[:, 0], pools["k"][kv_i], pools["v"][kv_i],
+            block_tables, context_lens,
+            pools["k_scale"][kv_i] if quantized else None,
+            pools["v_scale"][kv_i] if quantized else None,
+            window=_layer_window(cfg, li))
+        x = x + jnp.einsum("bshk,hkd->bsd", out[:, None],
+                           L.cast(lp["mix"]["wo"], cfg))
+        if "mlp" in lp:
+            h = L.apply_norm(lp["norm2"], x, cfg)
+            if cfg.is_moe and li >= cfg.first_dense_layers:
+                mlp_out, _ = MOE.apply_moe(lp["mlp"], h, cfg)
+            else:
+                mlp_out = L.apply_mlp(lp["mlp"], h, cfg)
+            x = x + mlp_out
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.lm_logits(params["embed"], x, cfg)[:, 0]  # (B, V)
+    logits = jnp.where(active[:, None], logits, 0.0)
+    return logits, pools
