@@ -244,6 +244,28 @@ def measured_wire_fields(n_params: float, *, endpoints: int, bits: int,
     }
 
 
+def backend_fields() -> Dict[str, str]:
+    """Which kernel backend / lane / wire transport produced these rows.
+
+    ``backend``: the resolved KernelBackend name; ``kernel_lane``: its
+    lane for the quantizer (the kernel every compressed strategy runs);
+    ``transport``: the wire transport the int8 ring exchange resolves to
+    on this backend (``kernels/ring_allreduce.resolve_transport``). Empty
+    when the runtime package is not importable (benchmarks-only
+    deployment), like :func:`measured_wire_fields`.
+    """
+    try:
+        from repro.kernels.backend import kernel_lane, resolve_backend
+        from repro.kernels.ring_allreduce import resolve_transport
+    except ImportError:
+        return {}
+    return {
+        "backend": resolve_backend().name,
+        "kernel_lane": kernel_lane("quantize"),
+        "transport": resolve_transport(axis_names=("data_outer",)),
+    }
+
+
 def resolve_sync_delay(*, n_params: float, n_devices: int, group_size: int,
                        sync_interval: int, chip: Optional[str] = None,
                        bits: int = 32, block: int = 256,
@@ -276,6 +298,7 @@ def sweep(chip_name: str, *, n_devices: int, sync_interval: int,
     chip = CHIPS[chip_name]
     n_groups = max(n_devices // group_size, 1)
     rows = []
+    lane = backend_fields()  # one resolution for the whole sweep
     for model, n in PAPER_MODELS.items():
         # measured (not modeled) wire bytes ride on the reporting rows
         # only — the analytic resolve_sync_delay path must stay free of
@@ -291,7 +314,7 @@ def sweep(chip_name: str, *, n_devices: int, sync_interval: int,
                             hierarchical=hierarchical, pods=pods,
                             comm_chunks=comm_chunks, sharded=sharded)
             rows.append({"chip": chip_name, "model": model, "delay": d,
-                         **measured, **r})
+                         **lane, **measured, **r})
     return rows
 
 
@@ -356,7 +379,19 @@ def main(argv=None):
                     help="write the sweep rows to this JSON file")
     ap.add_argument("--measure", action="store_true",
                     help="also wall-clock the CPU host loop (slow)")
+    ap.add_argument("--kernel-backend", default="",
+                    choices=["", "auto", "tpu-mosaic", "gpu-triton",
+                             "interpret", "jnp-ref"],
+                    help="force the kernel lowering lane for the measured "
+                         "fields (default: REPRO_KERNEL_BACKEND env var or "
+                         "platform auto-detect)")
     args = ap.parse_args(argv)
+    if args.kernel_backend:
+        try:
+            from repro.kernels.backend import set_kernel_backend
+            set_kernel_backend(args.kernel_backend)
+        except ImportError:  # benchmarks-only deployment without src/
+            pass
 
     all_rows = []
     print("chip,model,delay,t_inner_ms,t_comm_ms,exposed_frac,"
@@ -402,6 +437,7 @@ def main(argv=None):
                     "block": args.block, "hierarchical": args.hierarchical,
                     "pods": args.pods, "comm_chunks": args.comm_chunks,
                     "sharded": args.sharded, "strategy": strategy,
+                    **backend_fields(),
                 },
                 "rows": all_rows,
             }, f, indent=2)

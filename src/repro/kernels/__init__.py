@@ -1,1 +1,4 @@
 from repro.kernels import ops  # noqa: F401
+from repro.kernels.backend import (kernel_lane,  # noqa: F401
+                                   reset_backend_cache, resolve_backend,
+                                   set_kernel_backend)

@@ -52,7 +52,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.backend import default_interpret
+from repro.kernels.backend import resolve_kernel
 
 # jax < 0.5 names this TPUCompilerParams; it was renamed to CompilerParams.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
@@ -136,10 +136,6 @@ def _decode_kernel(
         o_ref[0, 0, ...] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("window", "softcap", "interpret"),
-)
 def paged_decode_attention(
     q: jax.Array,  # (B, H, hd)
     k_pool: jax.Array,  # (N, bs, Hkv, hd) — fp or int8 (with scales)
@@ -156,9 +152,30 @@ def paged_decode_attention(
     """Paged single-query attention. Returns (B, H, hd) in q.dtype.
 
     Sequences with ``context_lens[b] == 0`` (empty decode slots) produce
-    zeros. ``interpret=None`` resolves backend-aware (kernels/backend.py).
+    zeros. ``interpret=None`` dispatches through the KernelBackend
+    registry: compiled Mosaic on tpu-mosaic, the interpreter
+    off-accelerator, the jnp oracle on gpu-triton (scalar-prefetch grids
+    don't lower to Triton) and jnp-ref. An explicit bool forces the
+    Pallas body (legacy override — the bitwise tests pin
+    ``interpret=True``).
     """
-    interpret = default_interpret(interpret)
+    impl, interpret = resolve_kernel("decode_attention", interpret)
+    if impl == "jnp":
+        return paged_decode_attention_ref(
+            q, k_pool, v_pool, block_tables, context_lens,
+            k_scales, v_scales, window=window, softcap=softcap)
+    return _paged_decode_pallas(
+        q, k_pool, v_pool, block_tables, context_lens, k_scales, v_scales,
+        window=window, softcap=softcap, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "interpret"),
+)
+def _paged_decode_pallas(q, k_pool, v_pool, block_tables, context_lens,
+                         k_scales=None, v_scales=None, *,
+                         window: int, softcap: float, interpret: bool):
     B, H, hd = q.shape
     N, bs, Hkv, _ = k_pool.shape
     assert H % Hkv == 0, (H, Hkv)

@@ -22,11 +22,15 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.backend import resolve_kernel
+from repro.kernels.ref import flash_attention_ref
 
 # jax < 0.5 names this TPUCompilerParams; it was renamed to CompilerParams.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
@@ -109,11 +113,6 @@ def _attn_kernel(
         o_ref[0, 0, ...] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("causal", "window", "softcap", "block_q", "block_kv",
-                     "interpret"),
-)
 def flash_attention(
     q: jax.Array,  # (B, S, H, hd)
     k: jax.Array,  # (B, S, Hkv, hd)
@@ -124,9 +123,39 @@ def flash_attention(
     softcap: float = 0.0,
     block_q: int = 128,
     block_kv: int = 128,
-    interpret: bool = True,  # False on real TPUs
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Pallas flash attention. Returns (B, S, H, hd) in q.dtype."""
+    """Pallas flash attention. Returns (B, S, H, hd) in q.dtype.
+
+    ``interpret=None`` dispatches through the KernelBackend registry —
+    compiled Mosaic on tpu-mosaic (the old hardcoded ``interpret=True``
+    default meant direct callers never compiled on real TPUs), the
+    interpreter off-accelerator, the jnp oracle on gpu-triton/jnp-ref
+    (VMEM scratch + dimension_semantics don't lower to Triton). An
+    explicit bool forces the Pallas body (legacy override).
+    """
+    impl, interpret = resolve_kernel("flash_attention", interpret)
+    if impl == "jnp":
+        return _flash_attention_jnp(q, k, v, causal=causal, window=window,
+                                    softcap=softcap)
+    return _flash_attention_pallas(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_kv=block_kv, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap"))
+def _flash_attention_jnp(q, k, v, *, causal, window, softcap):
+    return flash_attention_ref(q, k, v, causal=causal, window=window,
+                               softcap=softcap)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "block_q", "block_kv",
+                     "interpret"),
+)
+def _flash_attention_pallas(q, k, v, *, causal, window, softcap,
+                            block_q, block_kv, interpret):
     B, S, H, hd = q.shape
     Hkv = k.shape[2]
     assert H % Hkv == 0, (H, Hkv)

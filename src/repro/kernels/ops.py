@@ -1,25 +1,22 @@
 """Jit'd wrappers: the integration surface between kernels and the system.
 
-``interpret`` resolves backend-aware (kernels/backend.py): compiled Mosaic
-on a real TPU, interpreter mode elsewhere (the kernels execute their Python
-bodies for correctness validation). The same BlockSpecs drive both.
+Every wrapper dispatches through the KernelBackend registry
+(kernels/backend.py): each kernel entry point resolves its lane (compiled
+Pallas, interpreted Pallas, or the jnp oracle) from the process-wide
+backend and its per-kernel capability table — there is no ``interpret``
+threading here anymore.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.backend import default_interpret
 from repro.kernels.decode_attention import paged_decode_attention as _paged_decode
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.pier_update import pier_update as _pier_update
 from repro.kernels.quantize import (dequantize_blockwise as _dequantize,
                                     quantize_blockwise as _quantize)
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
-
-
-def _interpret() -> bool:
-    return default_interpret(None)
 
 
 # ---------------------------------------------------------------------------
@@ -40,7 +37,7 @@ def flash_attention_supported(q, k, v, *, window: int = 0,
 def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0):
     return _flash(
         q, k, v, causal=causal, window=window, softcap=softcap,
-        block_q=128, block_kv=128, interpret=_interpret())
+        block_q=128, block_kv=128)
 
 
 # ---------------------------------------------------------------------------
@@ -58,7 +55,7 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, context_lens,
     """
     return _paged_decode(
         q, k_pool, v_pool, block_tables, context_lens, k_scales, v_scales,
-        window=window, softcap=softcap, interpret=_interpret())
+        window=window, softcap=softcap)
 
 
 # ---------------------------------------------------------------------------
@@ -77,7 +74,7 @@ def pier_update_leaf(a, m, d, tc, *, mu, lr):
     p1, m1 = _pier_update(
         a.reshape(-1), m.reshape(-1), d.reshape(-1),
         jnp.asarray(mu, jnp.float32), jnp.asarray(lr, jnp.float32),
-        formulation=tc.outer_optimizer, interpret=_interpret())
+        formulation=tc.outer_optimizer)
     return p1.reshape(shape), m1.reshape(shape).astype(m.dtype)
 
 
@@ -88,17 +85,17 @@ def pier_update_leaf(a, m, d, tc, *, mu, lr):
 
 def quantize_blockwise(x, *, bits: int = 8, block: int = 256):
     """Flat (N,) -> (q int8 (nblocks*block,), scales f32 (nblocks,))."""
-    return _quantize(x, bits=bits, block=block, interpret=_interpret())
+    return _quantize(x, bits=bits, block=block)
 
 
 def dequantize_blockwise(q, scales, *, block: int = 256):
     """Inverse of :func:`quantize_blockwise` (padded payload, fp32)."""
-    return _dequantize(q, scales, block=block, interpret=_interpret())
+    return _dequantize(q, scales, block=block)
 
 
 # NOTE: the int8-wire ring all-reduce (kernels/ring_allreduce.py) is NOT
-# wrapped here: it resolves its backend from the strategy's ReduceCtx
-# (use_pallas + transport), not from the process-global default, so the
+# wrapped here: its transport resolves backend-aware from the strategy's
+# ReduceCtx (use_pallas + resolve_transport), not per-call, so the
 # Int8Wire strategy imports it directly.
 
 
@@ -108,4 +105,4 @@ def dequantize_blockwise(q, scales, *, block: int = 256):
 
 
 def rmsnorm(x, scale, *, eps: float = 1e-5):
-    return _rmsnorm(x, scale, eps=eps, interpret=_interpret())
+    return _rmsnorm(x, scale, eps=eps)

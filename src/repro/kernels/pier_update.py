@@ -20,7 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.backend import default_interpret
+from repro.kernels.backend import resolve_kernel
+from repro.kernels.ref import pier_update_ref
 
 _BLOCK = 4096  # lanes*32 panels: multiple of the (8,128) fp32 VMEM tile
 
@@ -43,8 +44,6 @@ def _update_kernel(mu_ref, lr_ref, a_ref, m_ref, d_ref, p_out, m_out, *,
     m_out[...] = m_new.astype(m_out.dtype)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("formulation", "block", "interpret"))
 def pier_update(
     anchor: jax.Array,  # flattened (N,) — any dtype
     momentum: jax.Array,  # (N,)
@@ -58,11 +57,32 @@ def pier_update(
 ):
     """Returns (new_params_f32, new_momentum) for one flat leaf.
 
-    ``interpret=None`` resolves backend-aware: compiled Mosaic on a real
-    TPU, interpreter mode elsewhere — so direct callers get the fused
-    compiled kernel on hardware instead of the interpreter.
+    ``interpret=None`` dispatches through the KernelBackend registry:
+    compiled Mosaic on tpu-mosaic, the interpreter off-accelerator, and
+    the jnp oracle on gpu-triton (SMEM scalars don't lower to Triton) and
+    jnp-ref. An explicit bool forces the Pallas body (legacy override).
     """
-    interpret = default_interpret(interpret)
+    impl, interpret = resolve_kernel("pier_update", interpret)
+    if impl == "jnp":
+        return _pier_update_jnp(anchor, momentum, delta, mu, lr,
+                                formulation=formulation)
+    return _pier_update_pallas(anchor, momentum, delta, mu, lr,
+                               formulation=formulation, block=block,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("formulation",))
+def _pier_update_jnp(anchor, momentum, delta, mu, lr, *, formulation):
+    p, m = pier_update_ref(anchor, momentum, delta, mu=mu, lr=lr,
+                           formulation=formulation)
+    # match the kernel's output dtypes: p fp32, m in the momentum dtype
+    return p, m.astype(momentum.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("formulation", "block", "interpret"))
+def _pier_update_pallas(anchor, momentum, delta, mu, lr, *,
+                        formulation, block, interpret):
     (n,) = anchor.shape
     np_ = ((n + block - 1) // block) * block
     if np_ != n:

@@ -26,7 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.backend import default_interpret
+from repro.kernels.backend import resolve_kernel
+from repro.kernels.ref import dequantize_blockwise_ref, quantize_blockwise_ref
 
 _ROWS = 8  # quant blocks (= scale rows) per grid step: fp32 sublane tile
 
@@ -52,8 +53,6 @@ def _pad_rows(nb: int) -> int:
     return ((nb + _ROWS - 1) // _ROWS) * _ROWS
 
 
-@functools.partial(
-    jax.jit, static_argnames=("bits", "block", "interpret"))
 def quantize_blockwise(
     x: jax.Array,  # flattened (N,) — any float dtype
     *,
@@ -64,10 +63,24 @@ def quantize_blockwise(
     """Returns (q int8 (nblocks*block,), scales f32 (nblocks,)).
 
     The payload is padded to whole blocks; callers slice the dequantized
-    result back to N. ``interpret=None`` resolves backend-aware (compiled
-    on TPU, interpreter elsewhere).
+    result back to N. ``interpret=None`` dispatches through the
+    KernelBackend registry (compiled/interpreted Pallas or the jnp
+    oracle); an explicit bool forces the Pallas body (legacy override).
     """
-    interpret = default_interpret(interpret)
+    impl, interpret = resolve_kernel("quantize", interpret)
+    if impl == "jnp":
+        return _quantize_jnp(x, bits=bits, block=block)
+    return _quantize_pallas(x, bits=bits, block=block, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block"))
+def _quantize_jnp(x, *, bits, block):
+    return quantize_blockwise_ref(x, bits=bits, block=block)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "block", "interpret"))
+def _quantize_pallas(x, *, bits, block, interpret):
     qmax = float(2 ** (bits - 1) - 1)
     (n,) = x.shape
     nb = (n + block - 1) // block
@@ -94,7 +107,6 @@ def quantize_blockwise(
     return q[:nb].reshape(nb * block), s[:nb]
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def dequantize_blockwise(
     q: jax.Array,  # (nblocks*block,) int8
     scales: jax.Array,  # (nblocks,) f32
@@ -103,7 +115,19 @@ def dequantize_blockwise(
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Inverse of :func:`quantize_blockwise`; returns fp32 (nblocks*block,)."""
-    interpret = default_interpret(interpret)
+    impl, interpret = resolve_kernel("dequantize", interpret)
+    if impl == "jnp":
+        return _dequantize_jnp(q, scales, block=block)
+    return _dequantize_pallas(q, scales, block=block, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def _dequantize_jnp(q, scales, *, block):
+    return dequantize_blockwise_ref(q, scales, block=block)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _dequantize_pallas(q, scales, *, block, interpret):
     (nq,) = q.shape
     nb = nq // block
     if nb * block != nq:

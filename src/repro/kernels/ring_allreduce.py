@@ -52,7 +52,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.backend import on_tpu
+from repro.kernels.backend import COMPILED, kernel_lane, on_tpu
 from repro.kernels.ref import (dequant_sum_sources, pack_wire,  # noqa: F401
                                unpack_wire)
 
@@ -280,6 +280,32 @@ def ring_allgather_wire_tpu(w: jax.Array, s: jax.Array, axis_name: str,
 # ---------------------------------------------------------------------------
 
 
+def resolve_transport(*, axis_names: Sequence[str],
+                      use_pallas: bool = True) -> str:
+    """Backend-aware wire-transport resolution (the ``"auto"`` rule).
+
+    The remote-DMA ring is TPU-only twice over: the resolved kernel
+    backend must serve ``ring_allreduce`` compiled (its capability-table
+    lane — interpret/jnp-ref force the collective transports even on TPU
+    hardware) AND the process must actually run on TPU devices (a forced
+    ``tpu-mosaic`` backend on CPU still falls back) — and it only
+    composes over a single exchange axis. Everything else resolves to the
+    collective transports: the ppermute ring where shard_map can lower it
+    (modern jax), one-hot psum on jax 0.4.x partial-manual shard_map.
+
+    ``use_pallas=True`` (the default) answers "best transport this
+    backend could use"; strategies pass their actual ``ReduceCtx``
+    setting at dispatch time.
+    """
+    from repro import compat
+
+    names = tuple(axis_names)
+    if (use_pallas and len(names) == 1 and on_tpu()
+            and kernel_lane("ring_allreduce") == COMPILED):
+        return "dma"
+    return "ring" if compat.HAS_NEW_SHARD_MAP else "psum"
+
+
 def ring_allreduce_quantized(q: jax.Array, s: jax.Array, *,
                              axis_names: Sequence[str],
                              axis_sizes: Mapping[str, int],
@@ -305,20 +331,13 @@ def ring_allreduce_quantized(q: jax.Array, s: jax.Array, *,
 
     ``transport``: ``"dma"`` (Pallas remote-DMA ring, real TPU only),
     ``"ring"`` (ppermute hops), ``"psum"`` (one-hot scatter + psum), or
-    ``"auto"`` — dma on a TPU single-axis exchange, else ring where
-    shard_map can lower ppermute (modern jax), else psum (jax 0.4.x).
+    ``"auto"`` — resolved backend-aware by :func:`resolve_transport`.
     """
-    from repro import compat
-
     names = tuple(axis_names)
     w = pack_wire(q, bits)
     if transport == "auto":
-        if use_pallas and on_tpu() and len(names) == 1:
-            transport = "dma"
-        elif compat.HAS_NEW_SHARD_MAP:
-            transport = "ring"
-        else:
-            transport = "psum"
+        transport = resolve_transport(axis_names=names,
+                                      use_pallas=use_pallas)
     if transport == "dma":
         _check_axis_sizes(names[:1], axis_sizes)
         wg, sg = ring_allgather_wire_tpu(

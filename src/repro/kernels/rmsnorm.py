@@ -9,10 +9,14 @@ two HBM round trips over the activation.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.backend import resolve_kernel
+from repro.kernels.ref import rmsnorm_ref
 
 
 def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
@@ -23,16 +27,33 @@ def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
     ).astype(o_ref.dtype)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("eps", "block_rows", "interpret"))
 def rmsnorm(
     x: jax.Array,  # (..., D)
     scale: jax.Array,  # (D,)
     *,
     eps: float = 1e-5,
     block_rows: int = 256,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
+    """Fused RMSNorm. ``interpret=None`` dispatches through the
+    KernelBackend registry (the body is plain-BlockSpec, so it compiles on
+    both tpu-mosaic and gpu-triton); an explicit bool forces the Pallas
+    body (legacy override)."""
+    impl, interpret = resolve_kernel("rmsnorm", interpret)
+    if impl == "jnp":
+        return _rmsnorm_jnp(x, scale, eps=eps)
+    return _rmsnorm_pallas(x, scale, eps=eps, block_rows=block_rows,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def _rmsnorm_jnp(x, scale, *, eps):
+    return rmsnorm_ref(x, scale, eps=eps)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def _rmsnorm_pallas(x, scale, *, eps, block_rows, interpret):
     orig_shape = x.shape
     D = x.shape[-1]
     rows = 1

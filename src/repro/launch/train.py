@@ -29,6 +29,7 @@ from repro.configs import get_config, get_reduced_config
 from repro.core import offload
 from repro.core.pier import PierSchedule
 from repro.data.pipeline import synthetic_pipeline
+from repro.kernels import backend as kbackend
 from repro.launch import mesh as M
 from repro.parallel.steps import build_train_steps
 from repro.sync import (ChurnSchedule, MembershipController,
@@ -572,11 +573,34 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kernel-backend", default="",
+                    choices=["", "auto", "tpu-mosaic", "gpu-triton",
+                             "interpret", "jnp-ref"],
+                    help="force the kernel lowering lane "
+                         "(kernels/backend.py registry; default: "
+                         "REPRO_KERNEL_BACKEND env var or platform "
+                         "auto-detect) and apply its environment preset "
+                         "before first device use")
     args = ap.parse_args(argv)
     if ((args.adaptive_sync or args.remeasure_every)
             and args.sync_delay != "auto"):
         ap.error("--adaptive-sync/--remeasure-every need --sync-delay auto "
                  "(the measured controller they configure only runs there)")
+
+    if args.kernel_backend and args.kernel_backend != "auto":
+        # env preset before the jax.device_count() below triggers backend
+        # init (XLA_FLAGS is read exactly once, at init) — append-only,
+        # so CI's pre-set --xla_force_host_platform_device_count survives
+        preset = M.apply_env_preset(args.kernel_backend)
+        if preset["xla_flags_appended"]:
+            print("env preset "
+                  f"({args.kernel_backend}): appended XLA_FLAGS "
+                  + " ".join(preset["xla_flags_appended"]))
+        if preset["ld_preload_hint"]:
+            print(f"env preset ({args.kernel_backend}): tcmalloc available "
+                  f"at {preset['ld_preload_hint']} — export LD_PRELOAD in "
+                  f"the wrapper script to use it")
+    kbackend.set_kernel_backend(args.kernel_backend or None)
 
     mc = (get_reduced_config(args.arch) if args.reduced
           else get_config(args.arch))
@@ -618,9 +642,12 @@ def main(argv=None):
         membership = MembershipController(
             pc.num_groups, cfg=mcfg,
             schedule=ChurnSchedule.parse(args.churn_script))
+    strategy = resolve_strategy(tc)
     print(f"arch={mc.name} optimizer={tc.optimizer} mesh={shape} "
           f"groups={pc.num_groups} devices={jax.device_count()} "
-          f"outer_sync={resolve_strategy(tc).name}"
+          f"outer_sync={strategy.name} "
+          f"kernel_backend={kbackend.resolve_backend().name} "
+          f"transport={strategy.transport_name(mesh)}"
           + (f" churn={args.churn_script}" if args.churn_script else ""))
     trainer = Trainer(mc, tc, pc, mesh,
                       checkpoint_dir=args.checkpoint_dir or None,

@@ -45,7 +45,11 @@ class SyncPlan(NamedTuple):
     ``wire_format`` names what actually crosses the slow exchange axes:
     ``"fp32"`` for full-width (or dequantized-payload) collectives,
     ``"int8+scales"`` / ``"int4+scales"`` for the packed ring exchange of
-    :class:`~repro.sync.strategies.Int8Wire`.
+    :class:`~repro.sync.strategies.Int8Wire`. ``transport`` names *how*
+    it crosses: ``"collective"`` for pmean/psum-lowered strategies, or
+    the backend-resolved wire transport (``"dma"`` | ``"ring"`` |
+    ``"psum"``, see ``kernels/ring_allreduce.resolve_transport``) for the
+    packed ring exchange.
     """
 
     num_leaves: int
@@ -53,6 +57,7 @@ class SyncPlan(NamedTuple):
     needs_residual: bool
     name: str
     wire_format: str = "fp32"
+    transport: str = "collective"
 
     @property
     def num_chunks(self) -> int:
@@ -289,13 +294,24 @@ class OuterSyncStrategy:
     def __repr__(self) -> str:
         return f"<{type(self).__name__} {self.name}>"
 
+    def transport_name(self, mesh=None) -> str:
+        """How the payload crosses the slow exchange axes (SyncPlan field).
+
+        ``"collective"`` for pmean/psum-lowered strategies; Int8Wire
+        overrides with the backend-resolved wire transport. Resolved with
+        the Pallas ring lane assumed available (``use_pallas=True``) —
+        dispatch re-resolves against the actual ``ReduceCtx.use_pallas``.
+        """
+        return "collective"
+
     # ------------------------------------------------------------- planning
     def plan(self, pshapes, tc, mesh=None) -> SyncPlan:
         """Single fused span by default; the chunked combinator splits."""
         n = len(jax.tree_util.tree_leaves(pshapes))
         return SyncPlan(num_leaves=n, spans=((0, n),),
                         needs_residual=self.needs_residual, name=self.name,
-                        wire_format=self.wire_format)
+                        wire_format=self.wire_format,
+                        transport=self.transport_name(mesh))
 
     # ------------------------------------------------- distributed dispatch
     def reduce_leaf(self, d, r, tc, ctx: ReduceCtx):

@@ -159,6 +159,16 @@ class Int8Wire(OuterSyncStrategy):
     def wire_format(self) -> str:  # type: ignore[override]
         return f"int{self.bits}+scales"
 
+    def transport_name(self, mesh=None) -> str:
+        from repro.kernels.ring_allreduce import resolve_transport
+
+        names = ("data_outer",)
+        if mesh is not None:
+            from repro.launch.mesh import manual_axes
+
+            names = manual_axes(mesh) or names
+        return resolve_transport(axis_names=names)
+
     def reduce_leaf(self, d, r, tc, ctx: ReduceCtx):
         from repro.core.outer import quant_fns
         from repro.kernels.ring_allreduce import ring_allreduce_quantized
@@ -302,6 +312,9 @@ class Sharded(OuterSyncStrategy):
     def wire_format(self) -> str:  # type: ignore[override]
         return self.inner.wire_format
 
+    def transport_name(self, mesh=None) -> str:
+        return self.inner.transport_name(mesh)
+
     def plan(self, pshapes, tc, mesh=None) -> SyncPlan:
         return self.inner.plan(pshapes, tc, mesh)._replace(name=self.name)
 
@@ -405,6 +418,9 @@ class Hierarchical(OuterSyncStrategy):
     def sharded_state(self) -> bool:  # type: ignore[override]
         return self.inner.sharded_state
 
+    def transport_name(self, mesh=None) -> str:
+        return self.inner.transport_name(mesh)
+
     def reduce_leaf(self, d, r, tc, ctx: ReduceCtx):
         inner_ctx = ctx
         if ctx.fast_axes:
@@ -506,6 +522,9 @@ class Chunked(OuterSyncStrategy):
     def sharded_state(self) -> bool:  # type: ignore[override]
         return self.inner.sharded_state
 
+    def transport_name(self, mesh=None) -> str:
+        return self.inner.transport_name(mesh)
+
     def plan(self, pshapes, tc, mesh=None) -> SyncPlan:
         sizes = _leaf_sizes(pshapes)
         # clamp to the leaf count: more chunks than leaves would plan
@@ -516,7 +535,8 @@ class Chunked(OuterSyncStrategy):
                  else ((0, 0),))
         return SyncPlan(num_leaves=len(sizes), spans=spans,
                         needs_residual=self.needs_residual, name=self.name,
-                        wire_format=self.wire_format)
+                        wire_format=self.wire_format,
+                        transport=self.transport_name(mesh))
 
     def reduce_leaf(self, d, r, tc, ctx: ReduceCtx):
         return self.inner.reduce_leaf(d, r, tc, ctx)
