@@ -111,6 +111,27 @@ def cross_domain_bytes(n_params: float, *, n_groups: int, pods: int = 1,
     return 2.0 * per * (e - 1)
 
 
+def rs_ag_bytes_per_device(n_params: float, *, endpoints: int,
+                           bits: int = 8,
+                           block: int = 256) -> Dict[str, float]:
+    """Modeled bytes SENT per device per sync on the rs-ag wire path.
+
+    Each endpoint ships E−1 of its E payload slots on the reduce-scatter
+    leg and its one re-quantized reduced slot to the E−1 peers on the
+    all-gather leg: ``(E−1)/E · P_wire`` per leg, ``2·(E−1)/E · P_wire``
+    total — versus the gather-based wire exchange's ``(E−1) · P_wire``
+    per device (``measured_cross_domain_bytes``), a 2/E ratio.
+    """
+    per = n_params * payload_bytes_per_param(bits, block)
+    e = max(int(endpoints), 1)
+    leg = per * (e - 1) / e
+    return {
+        "rs_bytes_per_device": leg,
+        "ag_bytes_per_device": leg,
+        "rs_ag_bytes_per_device": 2.0 * leg,
+    }
+
+
 def outer_comm_time(n_params: float, n_devices: int, chip: Chip,
                     group_size: int, *, bits: int = 32, block: int = 256,
                     hierarchical: bool = False, pods: int = 1,
@@ -146,8 +167,8 @@ def period_times(n_params: float, n_devices: int, chip: Chip, *,
                  sync_interval: int, sync_delay: int,
                  group_size: int = 4, bits: int = 32, block: int = 256,
                  hierarchical: bool = False, pods: int = 1,
-                 comm_chunks: int = 1,
-                 sharded: bool = False) -> Dict[str, float]:
+                 comm_chunks: int = 1, sharded: bool = False,
+                 rs_ag: bool = False) -> Dict[str, float]:
     t_inner = inner_step_time(n_params, n_devices, chip, group_size)
     t_comm = outer_comm_time(n_params, n_devices, chip, group_size,
                              bits=bits, block=block,
@@ -189,7 +210,15 @@ def period_times(n_params: float, n_devices: int, chip: Chip, *,
     inner_step = t_inner + inner_comm_per_step
     grad_cross_bytes = 2.0 * n_params * 4.0 * (n_groups - 1)
     shards = max(group_size, 1) if sharded else 1
+    rs_fields = {}
+    if rs_ag:
+        # each sharded lane exchanges its 1/shards of the payload over
+        # the same n_groups endpoints; total-bytes fields above already
+        # match (E endpoints × 2·(E−1)/E·P == the 2·P·(E−1) ring total)
+        rs_fields = rs_ag_bytes_per_device(
+            n_params / shards, endpoints=n_groups, bits=bits, block=block)
     return {
+        **rs_fields,
         "t_inner": t_inner, "t_comm": t_comm, "t_update": t_upd,
         "eager": eager, "overlap": overlap,
         "reduction": 1.0 - overlap / eager,
@@ -244,6 +273,24 @@ def measured_wire_fields(n_params: float, *, endpoints: int, bits: int,
     }
 
 
+def measured_rs_ag_fields(n_params: float, *, endpoints: int, bits: int,
+                          block: int, shards: int = 1) -> Dict[str, float]:
+    """Measured rs-ag wire bytes: run the real quantizer + per-slot
+    packer (``shard_slot_wire``) and read the actual slot buffer sizes,
+    scaled onto the bytes-sent-per-device convention of
+    :func:`rs_ag_bytes_per_device`. Empty when the runtime package is not
+    importable, like :func:`measured_wire_fields`.
+    """
+    try:
+        from repro.kernels.ring_allreduce import measured_rs_ag_bytes
+    except ImportError:
+        return {}
+    shards = max(int(shards), 1)
+    n_shard = -(-int(n_params) // shards)  # ceil
+    return measured_rs_ag_bytes(n_shard, endpoints=endpoints, bits=bits,
+                                block=block)
+
+
 def backend_fields() -> Dict[str, str]:
     """Which kernel backend / lane / wire transport produced these rows.
 
@@ -294,7 +341,8 @@ def resolve_sync_delay(*, n_params: float, n_devices: int, group_size: int,
 def sweep(chip_name: str, *, n_devices: int, sync_interval: int,
           delays: List[int], group_size: int, bits: int = 32,
           block: int = 256, hierarchical: bool = False, pods: int = 1,
-          comm_chunks: int = 1, sharded: bool = False) -> List[Dict]:
+          comm_chunks: int = 1, sharded: bool = False,
+          rs_ag: bool = False) -> List[Dict]:
     chip = CHIPS[chip_name]
     n_groups = max(n_devices // group_size, 1)
     rows = []
@@ -307,12 +355,17 @@ def sweep(chip_name: str, *, n_devices: int, sync_interval: int,
             n, endpoints=(pods if hierarchical else n_groups),
             bits=bits, block=block,
             shards=(group_size if sharded else 1))
+        if rs_ag:
+            measured = {**measured, **measured_rs_ag_fields(
+                n, endpoints=n_groups, bits=bits, block=block,
+                shards=(group_size if sharded else 1))}
         for d in delays:
             r = period_times(n, n_devices, chip, sync_interval=sync_interval,
                             sync_delay=d, group_size=group_size,
                             bits=bits, block=block,
                             hierarchical=hierarchical, pods=pods,
-                            comm_chunks=comm_chunks, sharded=sharded)
+                            comm_chunks=comm_chunks, sharded=sharded,
+                            rs_ag=rs_ag)
             rows.append({"chip": chip_name, "model": model, "delay": d,
                          **lane, **measured, **r})
     return rows
@@ -375,6 +428,13 @@ def main(argv=None):
     ap.add_argument("--sharded", action="store_true",
                     help="sharded outer exchange: each device lane carries "
                          "1/group_size of the payload (DESIGN.md §10)")
+    ap.add_argument("--compression", default="",
+                    choices=["", "none", "quantize", "int8-wire", "rs-ag"],
+                    help="pin the wire format for the strategy name and "
+                         "the rs-ag byte fields (default: inferred from "
+                         "--bits the legacy way). rs-ag adds the modeled "
+                         "and measured reduce-scatter/all-gather bytes "
+                         "per device to every row (DESIGN.md §14)")
     ap.add_argument("--json", default="",
                     help="write the sweep rows to this JSON file")
     ap.add_argument("--measure", action="store_true",
@@ -393,6 +453,7 @@ def main(argv=None):
         except ImportError:  # benchmarks-only deployment without src/
             pass
 
+    rs_ag = args.compression == "rs-ag"
     all_rows = []
     print("chip,model,delay,t_inner_ms,t_comm_ms,exposed_frac,"
           "eager_ms_per_period,overlap_ms_per_period,step_time_reduction,"
@@ -404,7 +465,7 @@ def main(argv=None):
                          bits=args.bits, block=args.block,
                          hierarchical=args.hierarchical, pods=args.pods,
                          comm_chunks=args.comm_chunks,
-                         sharded=args.sharded):
+                         sharded=args.sharded, rs_ag=rs_ag):
             all_rows.append(row)
             print(f"{row['chip']},{row['model']},{row['delay']},"
                   f"{row['t_inner']*1e3:.3f},{row['t_comm']*1e3:.3f},"
@@ -423,7 +484,8 @@ def main(argv=None):
             strategy = strategy_name(
                 bits=args.bits, block=args.block,
                 hierarchical=args.hierarchical, chunks=args.comm_chunks,
-                sharded=args.sharded)
+                sharded=args.sharded,
+                compression=args.compression or None)
         except ImportError:  # benchmarks-only deployment without src/
             strategy = None
         except ValueError:  # bits the runtime has no strategy for (the
@@ -436,7 +498,9 @@ def main(argv=None):
                     "sync_interval": args.sync_interval, "bits": args.bits,
                     "block": args.block, "hierarchical": args.hierarchical,
                     "pods": args.pods, "comm_chunks": args.comm_chunks,
-                    "sharded": args.sharded, "strategy": strategy,
+                    "sharded": args.sharded,
+                    "compression": args.compression or None,
+                    "strategy": strategy,
                     **backend_fields(),
                 },
                 "rows": all_rows,

@@ -217,7 +217,13 @@ class OuterCommConfig:
     # (DESIGN.md §8): the packed (q, scales) pairs themselves cross the
     # slow axes through a ring exchange with per-source-scale sum
     # semantics; same payload mean as "quantize", real bytes win.
-    compression: str = "none"  # none | quantize | int8-wire
+    # "rs-ag" is the reduce-scatter + all-gather variant of the int8 wire
+    # (DESIGN.md §14): the quantized payload is sliced into one slot per
+    # exchange endpoint, each endpoint reduces only its own slot (with a
+    # second error-feedback residual over the re-quantized reduced shard),
+    # then the shards are all-gathered — ~2/E of the gather-based wire's
+    # per-device bytes.
+    compression: str = "none"  # none | quantize | int8-wire | rs-ag
     bits: int = 8  # 4 | 8 (int stored in int8; 4 models packing)
     block: int = 256  # absmax-scale block (elements per scale)
     # Two-stage reduce: full-precision psum over the fast intra-pod axis
@@ -239,10 +245,11 @@ class OuterCommConfig:
     sharded: bool = False
 
     def __post_init__(self):
-        if self.compression not in ("none", "quantize", "int8-wire"):
+        if self.compression not in ("none", "quantize", "int8-wire",
+                                    "rs-ag"):
             raise ValueError(
-                f"outer compression must be 'none', 'quantize' or "
-                f"'int8-wire', got {self.compression!r}")
+                f"outer compression must be 'none', 'quantize', "
+                f"'int8-wire' or 'rs-ag', got {self.compression!r}")
         if self.compression != "none" and self.bits not in (4, 8):
             raise ValueError(
                 f"outer comm bits must be 4 or 8, got {self.bits}")
@@ -252,10 +259,16 @@ class OuterCommConfig:
         if self.chunks < 1:
             raise ValueError(
                 f"comm chunks must be >= 1, got {self.chunks}")
-        if self.sharded and self.compression == "int8-wire":
+        if self.compression == "rs-ag" and self.hierarchical:
             raise ValueError(
-                "sharded outer exchange composes 'none' or 'quantize' "
-                "compression; the int8 ring exchange owns its own layout")
+                "rs-ag composes a flat exchange: the two-stage "
+                "hierarchical reduce cannot thread the second "
+                "error-feedback residual through its pod stage")
+        if self.compression == "rs-ag" and self.chunks > 1:
+            raise ValueError(
+                "rs-ag needs chunks=1: per-chunk threading of the "
+                "second error-feedback residual is a recorded "
+                "follow-up (DESIGN.md §14)")
 
     def replace(self, **kw) -> "OuterCommConfig":
         return dataclasses.replace(self, **kw)

@@ -54,25 +54,33 @@ class OuterState(NamedTuple):
     # param shape with a leading ``num_groups`` axis (group-local, unlike
     # the replicated momentum/anchor).
     residual: Any = None
+    # Second error-feedback residual for the reduce-scatter + all-gather
+    # wire path (DESIGN.md §14): what re-quantizing the *reduced shard*
+    # before the gather leg dropped. Same layout as ``residual`` (fp32,
+    # leading ``num_groups`` axis), but each group's leaf is nonzero only
+    # on its own 1/E payload shard — the slot the reduce-scatter delivered
+    # to it. ``None`` unless the strategy's plan sets ``needs_residual2``.
+    residual2: Any = None
 
 
 def outer_init(params, tc: TrainConfig, *, num_groups: int = 1,
-               needs_residual: Optional[bool] = None) -> OuterState:
+               needs_residual: Optional[bool] = None,
+               needs_residual2: bool = False) -> OuterState:
     """``needs_residual`` defaults from the config's own strategy; pass it
     explicitly when an injected strategy overrides the config (the runner
     keys its specs off the strategy plan, and the state must match)."""
     dt = jnp.dtype(tc.opt_state_dtype)
     if needs_residual is None:
         needs_residual = tc.outer_comm.compression != "none"
-    residual = None
-    if needs_residual:
-        residual = jax.tree.map(
-            lambda p: jnp.zeros((num_groups, *p.shape), jnp.float32), params)
+    zeros_g = lambda p: jnp.zeros((num_groups, *p.shape), jnp.float32)  # noqa: E731
+    residual = jax.tree.map(zeros_g, params) if needs_residual else None
+    residual2 = jax.tree.map(zeros_g, params) if needs_residual2 else None
     return OuterState(
         momentum=jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params),
         anchor=jax.tree.map(lambda p: p.astype(dt), params),
         num_syncs=jnp.zeros((), jnp.int32),
         residual=residual,
+        residual2=residual2,
     )
 
 
@@ -98,7 +106,8 @@ def warmup_reduce(state: OuterState, params, mu) -> OuterState:
     new_anchor = jax.tree.map(lambda p, a: p.astype(a.dtype), params, state.anchor)
     return OuterState(momentum=new_m, anchor=new_anchor,
                       num_syncs=state.num_syncs + 1,
-                      residual=state.residual)
+                      residual=state.residual,
+                      residual2=state.residual2)
 
 
 def warmup_apply(pending: OuterState) -> OuterState:
@@ -198,6 +207,7 @@ def outer_reduce(
     lr,  # outer LR (schedule of §V)
     use_pallas: bool = False,
     residual=_UNSET,  # new error-feedback residual to store (default: keep)
+    residual2=_UNSET,  # new gather-leg residual to store (default: keep)
 ):
     """Algorithm 2, lines 19-21. Returns (target_params_f32, new_state).
 
@@ -208,6 +218,7 @@ def outer_reduce(
     (single HBM pass over θ/M/Δθ — see kernels/pier_update.py).
     """
     new_residual = state.residual if residual is _UNSET else residual
+    new_residual2 = state.residual2 if residual2 is _UNSET else residual2
 
     flat, treedef = jax.tree_util.tree_flatten(state.momentum)
     a_flat = treedef.flatten_up_to(state.anchor)
@@ -221,6 +232,7 @@ def outer_reduce(
         anchor=unf(treedef, anchor_new),
         num_syncs=state.num_syncs + 1,
         residual=new_residual,
+        residual2=new_residual2,
     )
     return new_params, new_state
 
@@ -299,6 +311,7 @@ def outer_update(
     lr,
     use_pallas: bool = False,
     residual=_UNSET,
+    residual2=_UNSET,
 ):
     """Eager fused update (sync_delay=0): reduce with zero in-flight drift.
 
@@ -307,4 +320,5 @@ def outer_update(
     directly on the d=0 path.
     """
     return outer_reduce(state, delta_avg, tc, mu=mu, lr=lr,
-                        use_pallas=use_pallas, residual=residual)
+                        use_pallas=use_pallas, residual=residual,
+                        residual2=residual2)

@@ -122,7 +122,9 @@ class SimulatedRun:
             group_params=None,
             opt=adamw_init(params, tc),
             outer=outer_init(params, tc, num_groups=num_groups,
-                             needs_residual=self.plan.needs_residual),
+                             needs_residual=self.plan.needs_residual,
+                             needs_residual2=getattr(
+                                 self.plan, "needs_residual2", False)),
         )
         self._val_batch = make_train_batch(
             self.lm, jax.random.PRNGKey(99991), 16, tc.seq_len)
@@ -238,6 +240,14 @@ class SimulatedRun:
                 st.params))
         elif not self.plan.needs_residual and outer.residual is not None:
             st.outer = outer._replace(residual=None)
+        # the rs-ag wire path's second residual retargets the same way
+        need2 = getattr(self.plan, "needs_residual2", False)
+        if need2 and st.outer.residual2 is None:
+            st.outer = st.outer._replace(residual2=jax.tree.map(
+                lambda p: jnp.zeros((self.G, *p.shape), jnp.float32),
+                st.params))
+        elif not need2 and st.outer.residual2 is not None:
+            st.outer = st.outer._replace(residual2=None)
 
     def _consult_controller(self):
         """One controller round after an outer dispatch (mirrors the
@@ -302,7 +312,8 @@ class SimulatedRun:
                             lambda p, a: p.astype(a.dtype),
                             st.params, st.outer.anchor),
                         num_syncs=st.outer.num_syncs,
-                        residual=st.outer.residual)
+                        residual=st.outer.residual,
+                        residual2=st.outer.residual2)
             else:
                 if st.group_params is None:
                     self._switch_to_groups()
@@ -441,6 +452,10 @@ class SimulatedRun:
             st.outer = st.outer._replace(residual=jax.tree.map(
                 lambda r: r.at[g].set(jnp.zeros_like(r[g])),
                 st.outer.residual))
+        if st.outer.residual2 is not None:
+            st.outer = st.outer._replace(residual2=jax.tree.map(
+                lambda r: r.at[g].set(jnp.zeros_like(r[g])),
+                st.outer.residual2))
 
     def flush(self):
         """Apply an in-flight dispatch early (end-of-run drain)."""

@@ -205,6 +205,127 @@ def ring_allreduce_qs_ref(q, scales, *, block: int = 256, bits: int = 8,
                                weights=weights)
 
 
+# ---------------------------------------------------------------------------
+# quantized reduce-scatter + all-gather (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+def wire_shard_blocks(nb: int, endpoints: int) -> int:
+    """Quant blocks per reduce-scatter shard slot: ``ceil(nb / E)``.
+
+    The rs/ag wire path partitions the ``nb`` quantization blocks of a
+    payload into ``E`` fixed-size slots of this many blocks each; when E
+    does not divide nb the trailing slot(s) carry zero-padded blocks
+    (zero scale -> dequantize to exactly 0), so every endpoint's slot has
+    the same static shape — ragged last shards cost padding, never a
+    shape mismatch.
+    """
+    if endpoints < 1:
+        raise ValueError(f"endpoints must be >= 1, got {endpoints}")
+    return -(-nb // endpoints)
+
+
+def shard_slot_wire(q, scales, *, bits: int, block: int, endpoints: int):
+    """One endpoint's (q, scales) -> per-slot packed wire buffers.
+
+    ``q``: (nb*block,) int8, ``scales``: (nb,) f32. Pads to
+    ``E * wire_shard_blocks(nb, E)`` blocks and packs each slot's values
+    *independently* (``pack_wire`` per slot), so int4 nibble boundaries
+    never straddle a slot boundary — slot ``e`` of the wire stream is a
+    self-contained byte buffer whatever the shard length's parity.
+    Returns ``((E, nw_slot) wire bytes, (E, sb) scales)``.
+    """
+    nb = scales.shape[0]
+    sb = wire_shard_blocks(nb, endpoints)
+    qp = jnp.pad(q, (0, (endpoints * sb - nb) * block))
+    sp = jnp.pad(scales, (0, endpoints * sb - nb))
+    q_slots = qp.reshape(endpoints, sb * block)
+    w_slots = jnp.stack(
+        [pack_wire(q_slots[e], bits) for e in range(endpoints)])
+    return w_slots, sp.reshape(endpoints, sb)
+
+
+def reduce_scatter_qs_ref(q, scales, *, block: int = 256, bits: int = 8,
+                          weights=None):
+    """Reduce-scatter oracle: every endpoint's reduced shard, stacked.
+
+    ``q``: (E, nb*block) int8 values, ``scales``: (E, nb) f32 — one row
+    per endpoint (source). Row ``e`` of the (E, sb*block) fp32 result is
+    what endpoint ``e`` computes in the distributed exchange: the
+    canonical-order per-source-scale sum (:func:`dequant_sum_sources` —
+    THE reduction, shared with the all-reduce wire path) applied to slot
+    ``e`` of every source's per-slot packed wire stream. ``weights``
+    forwards the elastic-membership mask.
+    """
+    E = q.shape[0]
+    slots = [shard_slot_wire(q[j], scales[j], bits=bits, block=block,
+                             endpoints=E) for j in range(E)]
+    rows = []
+    for e in range(E):
+        wg = jnp.stack([slots[j][0][e] for j in range(E)])
+        sg = jnp.stack([slots[j][1][e] for j in range(E)])
+        rows.append(dequant_sum_sources(wg, sg, bits=bits, block=block,
+                                        weights=weights))
+    return jnp.stack(rows)
+
+
+def dequant_concat_sources(wg, sg, *, bits: int, block: int):
+    """All-gather reconstruction: (E, nw_slot) wire + (E, sb) scales ->
+    (E*sb*block,) fp32 payload.
+
+    The gather leg of the rs/ag exchange: every endpoint dequantizes the
+    *identical* re-quantized wire bytes per slot and concatenates in slot
+    order, so the reconstructed payload is bit-identical on every
+    endpoint (no summation — one contributor per slot). Shared by the
+    distributed :func:`repro.kernels.ring_allreduce.allgather_qs`, the
+    simulator, and the oracle below.
+    """
+    E, sb = sg.shape
+    nq = sb * block
+    return jnp.concatenate([
+        dequantize_blockwise_ref(unpack_wire(wg[j], bits, nq), sg[j],
+                                 block=block)
+        for j in range(E)])
+
+
+def rs_ag_qs_ref(q, scales, *, block: int = 256, bits: int = 8,
+                 residual2=None, weights=None):
+    """End-to-end rs/ag oracle: reduce-scatter, re-quantize, all-gather.
+
+    ``q``: (E, nb*block) int8, ``scales``: (E, nb) f32 per endpoint.
+    ``residual2``: optional (E, sb*block) f32 — endpoint ``e``'s second
+    error-feedback residual over *its own* reduced shard (``None`` =
+    zeros). Endpoint ``e`` reduces shard ``e``
+    (:func:`reduce_scatter_qs_ref`), adds its residual, re-quantizes
+    (second quantization — the gather leg ships quantized bytes too),
+    and the all-gather reconstructs the full payload from the identical
+    per-slot wire bytes on every endpoint
+    (:func:`dequant_concat_sources`).
+
+    Returns ``(payload (nb*block,), new_residual2 (E, sb*block))`` —
+    the payload is cropped back from slot padding to the quantizer's own
+    ``nb*block`` length, and the residual telescopes:
+    ``reduced_shard + r2 = dequant(q2, s2) + new_r2`` exactly.
+    """
+    E, nbq = q.shape
+    reduced = reduce_scatter_qs_ref(q, scales, block=block, bits=bits,
+                                    weights=weights)
+    if residual2 is None:
+        residual2 = jnp.zeros_like(reduced)
+    c2 = reduced + residual2
+    q2s, s2s, w2s, deq = [], [], [], []
+    for e in range(E):
+        q2, s2 = quantize_blockwise_ref(c2[e], bits=bits, block=block)
+        q2s.append(q2)
+        s2s.append(s2)
+        w2s.append(pack_wire(q2, bits))
+        deq.append(dequantize_blockwise_ref(q2, s2, block=block))
+    new_r2 = c2 - jnp.stack(deq)
+    payload = dequant_concat_sources(jnp.stack(w2s), jnp.stack(s2s),
+                                     bits=bits, block=block)
+    return payload[:nbq], new_r2
+
+
 def rmsnorm_ref(x, scale, *, eps: float = 1e-5):
     """Row RMSNorm oracle. x: (..., D); scale: (D,)."""
     xf = x.astype(jnp.float32)

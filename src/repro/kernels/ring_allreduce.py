@@ -39,6 +39,22 @@ two's-complement nibbles two-per-byte (:func:`pack_wire` /
 :func:`measure_wire_bytes` reads the *actual* device-buffer sizes off a
 real quantize+pack run — the measured (not modeled) bytes that
 ``benchmarks/overlap.py --json`` reports next to the analytic model.
+
+**Reduce-scatter + all-gather wire path (DESIGN.md §14).** The all-reduce
+above ships the *full* payload per device ((E−1)·P sent on the gather).
+:func:`reduce_scatter_qs` / :func:`allgather_qs` split the payload into E
+fixed-size per-endpoint slots (``wire_shard_blocks`` quant blocks each,
+zero-padded tail, per-slot nibble packing) and move only shard-sized
+buffers: endpoint e reduces slot e of all sources via the same
+:func:`dequant_sum_sources` oracle, re-quantizes its reduced shard with a
+second error-feedback residual, and all-gathers the (q2, s2) pair —
+2·(E−1)·P/E sent per device (0.5× the all-reduce wire path at E=4).
+Reconstruction is per-slot dequant + concat (:func:`dequant_concat_sources`
+— no summation, bit-identical on every endpoint). The same three
+transports serve both legs; the scatter leg adds
+:func:`ring_scatter_wire` (stride-k ppermute, true (E−1)/E traffic),
+:func:`onehot_scatter_wire` (psum correctness lane), and
+:func:`shard_scatter_wire_tpu` (remote-DMA with a full entry barrier).
 """
 
 from __future__ import annotations
@@ -53,8 +69,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.backend import COMPILED, kernel_lane, on_tpu
-from repro.kernels.ref import (dequant_sum_sources, pack_wire,  # noqa: F401
-                               unpack_wire)
+from repro.kernels.ref import (dequant_concat_sources,  # noqa: F401
+                               dequant_sum_sources, pack_wire,
+                               shard_slot_wire, unpack_wire,
+                               wire_shard_blocks)
 
 # jax < 0.5 names this TPUCompilerParams; it was renamed to CompilerParams.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
@@ -143,6 +161,96 @@ def ring_gather_wire(w: jax.Array, s: jax.Array,
         wg = _ring_gather(wg, ax, axis_sizes[ax], idx)
         sg = _ring_gather(sg, ax, axis_sizes[ax], idx)
     return (wg.reshape(-1, w.shape[0]), sg.reshape(-1, s.shape[0]))
+
+
+def _linear_exchange_idx(axis_names, axis_sizes, axis_coords):
+    """(E, linearized row-major index) over the exchange axes."""
+    E, idx = 1, jnp.int32(0)
+    for ax in axis_names:
+        E *= int(axis_sizes[ax])
+        idx = idx * int(axis_sizes[ax]) + _axis_idx(ax, axis_coords)
+    return E, idx
+
+
+def _ring_scatter(slots: jax.Array, axis_name: str, size: int,
+                  idx) -> jax.Array:
+    """Direct shard exchange: (E, ·) per-slot buffers -> (E, ·) stack of
+    *my* slot as held by every source, in canonical source order.
+
+    At offset ``k`` every device sends slot ``(idx + k) % E`` straight to
+    its owner (``ppermute`` with the stride-k permutation — one slot per
+    link per step), so the receiver at distance k deposits the arriving
+    buffer — the sender's copy of *the receiver's* slot — into the
+    sender's canonical row. Per-device traffic over E−1 offsets is
+    ``(E−1)/E`` of the payload: the reduce-scatter byte win, not a
+    gather of everything.
+    """
+    out = jnp.zeros((size, *slots.shape[1:]), slots.dtype)
+    own = jax.lax.dynamic_index_in_dim(slots, idx, 0, keepdims=False)
+    out = jax.lax.dynamic_update_index_in_dim(out, own, idx, 0)
+    for k in range(1, size):
+        perm = [(i, (i + k) % size) for i in range(size)]
+        buf = jax.lax.dynamic_index_in_dim(slots, (idx + k) % size, 0,
+                                           keepdims=False)
+        buf = jax.lax.ppermute(buf, axis_name, perm)
+        out = jax.lax.dynamic_update_index_in_dim(out, buf,
+                                                  (idx - k) % size, 0)
+    return out
+
+
+def ring_scatter_wire(w_slots: jax.Array, s_slots: jax.Array,
+                      axis_names: Sequence[str],
+                      axis_sizes: Mapping[str, int],
+                      axis_coords=None) -> Tuple[jax.Array, jax.Array]:
+    """ppermute reduce-scatter transport: my shard slot from every source.
+
+    ``w_slots``/``s_slots``: (E, ·) per-slot packed wire buffers
+    (:func:`repro.kernels.ref.shard_slot_wire`). A single exchange axis
+    runs the direct stride-k shard exchange ((E−1)/E·payload per
+    device); composed axes fall back to the nested-ring full gather +
+    slice (correct, but gather-sized traffic — the multi-axis rs case
+    has no single ring to stride over).
+    """
+    names = tuple(axis_names)
+    _check_axis_sizes(names, axis_sizes)
+    E, idx = _linear_exchange_idx(names, axis_sizes, axis_coords)
+    if len(names) == 1:
+        wg = _ring_scatter(w_slots, names[0], E, idx)
+        sg = _ring_scatter(s_slots, names[0], E, idx)
+        return wg, sg
+    wg_all, sg_all = ring_gather_wire(
+        w_slots.reshape(-1), s_slots.reshape(-1), names, axis_sizes,
+        axis_coords)
+    wg = jax.lax.dynamic_index_in_dim(
+        wg_all.reshape(E, *w_slots.shape), idx, 1, keepdims=False)
+    sg = jax.lax.dynamic_index_in_dim(
+        sg_all.reshape(E, *s_slots.shape), idx, 1, keepdims=False)
+    return wg, sg
+
+
+def onehot_scatter_wire(w_slots: jax.Array, s_slots: jax.Array,
+                        axis_names: Sequence[str],
+                        axis_sizes: Mapping[str, int],
+                        axis_coords=None) -> Tuple[jax.Array, jax.Array]:
+    """psum reduce-scatter transport (jax 0.4.x partial-manual fallback).
+
+    Deposits the per-slot stack at the canonical source row of a zero
+    (E, E, ·) cube and psums — every endpoint then slices the column of
+    its own slot index. Exact (one contributor per cell) and lowerable
+    where ppermute CHECK-fails; the byte win of a true reduce-scatter
+    lives in the ring/dma transports — this is the correctness lane.
+    """
+    names = tuple(axis_names)
+    _check_axis_sizes(names, axis_sizes)
+    E, idx = _linear_exchange_idx(names, axis_sizes, axis_coords)
+
+    def scatter(slots):
+        buf = jnp.zeros((E, *slots.shape), slots.dtype)
+        buf = jax.lax.dynamic_update_index_in_dim(buf, slots, idx, 0)
+        cube = jax.lax.psum(buf, names)  # (E_src, E_slot, ·)
+        return jax.lax.dynamic_index_in_dim(cube, idx, 1, keepdims=False)
+
+    return scatter(w_slots), scatter(s_slots)
 
 
 def onehot_gather_wire(w: jax.Array, s: jax.Array,
@@ -275,6 +383,96 @@ def ring_allgather_wire_tpu(w: jax.Array, s: jax.Array, axis_name: str,
     return wg, sg
 
 
+def _shard_scatter_kernel(slots_ref, out_ref, send_buf, recv_buf,
+                          send_sem, recv_sem, *, num_devices: int,
+                          axis_name: str):
+    """Remote-DMA shard exchange: slot ``e`` of every device -> device e.
+
+    At offset ``k`` every device stages its slot ``(my + k) % E`` and
+    DMAs it straight to the owner (the stride-k permutation of the ring
+    — still a permutation, so the SPMD ``rdma.wait()`` semantics of the
+    guide's ring pattern hold: the matching incoming descriptor uses the
+    same step-parity semaphore slots on every device). Per-device bytes
+    over the E−1 offsets are (E−1)/E of the payload — the reduce-scatter
+    win on the real fabric. The opening barrier is *global* (unlike the
+    neighbor barrier of the all-gather kernel): sends target arbitrary
+    ring distances, so every peer must be inside the kernel before the
+    first copy is issued.
+    """
+    my = jax.lax.axis_index(axis_name)
+
+    own = pl.load(slots_ref, (pl.ds(my, 1), slice(None)))
+    pl.store(out_ref, (pl.ds(my, 1), slice(None)), own)
+
+    barrier = pltpu.get_barrier_semaphore()
+    for off in range(1, num_devices):
+        pltpu.semaphore_signal(
+            barrier, inc=1,
+            device_id=jax.lax.rem(my + off, num_devices))
+    pltpu.semaphore_wait(barrier, num_devices - 1)
+
+    for k in range(1, num_devices):
+        dst = jax.lax.rem(my + k, num_devices)
+        src = jax.lax.rem(my + num_devices - k, num_devices)
+        slot = (k - 1) % 2
+        send_buf[slot] = pl.load(slots_ref,
+                                 (pl.ds(dst, 1), slice(None)))[0]
+        rdma = pltpu.make_async_remote_copy(
+            src_ref=send_buf.at[slot],
+            dst_ref=recv_buf.at[slot],
+            send_sem=send_sem.at[slot],
+            recv_sem=recv_sem.at[slot],
+            device_id=(dst,),
+            device_id_type=pltpu.DeviceIdType.LOGICAL,
+        )
+        rdma.start()
+        rdma.wait()
+        pl.store(out_ref, (pl.ds(src, 1), slice(None)),
+                 recv_buf[slot][None])
+
+
+def _shard_scatter_tpu_1d(slots: jax.Array, axis_name: str, size: int,
+                          collective_id: int) -> jax.Array:
+    """(E, n) per-slot buffers -> (E, n) canonical stack of my slot."""
+    _, n = slots.shape
+    return pl.pallas_call(
+        functools.partial(_shard_scatter_kernel, num_devices=size,
+                          axis_name=axis_name),
+        out_shape=jax.ShapeDtypeStruct((size, n), slots.dtype),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        scratch_shapes=[
+            pltpu.VMEM((2, n), slots.dtype),
+            pltpu.VMEM((2, n), slots.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        compiler_params=_CompilerParams(collective_id=collective_id),
+    )(slots)
+
+
+def shard_scatter_wire_tpu(w_slots: jax.Array, s_slots: jax.Array,
+                           axis_name: str,
+                           size: int) -> Tuple[jax.Array, jax.Array]:
+    """TPU remote-DMA reduce-scatter transport (chunked like the ring).
+
+    Slot-sized panels are sliced to ≤ ``_WIRE_CHUNK_BYTES`` so the
+    staging buffers fit VMEM; scales ride as one extra panel. The
+    reduction stays in :func:`dequant_sum_sources` — bytes only here.
+    """
+    nw = w_slots.shape[1]
+    chunk = max(_WIRE_CHUNK_BYTES // max(w_slots.dtype.itemsize, 1), 1)
+    parts = []
+    for lo in range(0, nw, chunk):
+        parts.append(_shard_scatter_tpu_1d(
+            w_slots[:, lo:lo + chunk], axis_name, size,
+            collective_id=_next_collective_id()))
+    wg = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    sg = _shard_scatter_tpu_1d(s_slots, axis_name, size,
+                               collective_id=_next_collective_id())
+    return wg, sg
+
+
 # ---------------------------------------------------------------------------
 # public entry: quantized ring all-reduce
 # ---------------------------------------------------------------------------
@@ -352,6 +550,91 @@ def ring_allreduce_quantized(q: jax.Array, s: jax.Array, *,
                                weights=weights)
 
 
+def reduce_scatter_qs(q: jax.Array, s: jax.Array, *,
+                      axis_names: Sequence[str],
+                      axis_sizes: Mapping[str, int],
+                      bits: int, block: int,
+                      use_pallas: bool = False,
+                      axis_coords=None,
+                      transport: str = "auto",
+                      weights=None) -> jax.Array:
+    """Quantized reduce-scatter: each endpoint gets its reduced 1/E shard.
+
+    ``q``: (nb·block,) int8 values, ``s``: (nb,) fp32 scales — one
+    endpoint's quantized payload. The payload is split into E fixed-size
+    slots of ``wire_shard_blocks(nb, E)`` quant blocks (zero-padded at the
+    tail; zero blocks quantize to zero scales and dequantize to exact
+    zeros, so padding is bit-transparent), each slot packed independently
+    so int4 nibbles never straddle slot boundaries. Endpoint ``e``
+    receives slot ``e`` of every source and reduces through the shared
+    :func:`dequant_sum_sources` oracle — returning the fp32
+    (sb·block,) mean of its own shard, bit-identical to rows of
+    :func:`repro.kernels.ref.reduce_scatter_qs_ref`.
+
+    Per-device wire traffic on the ring/dma transports is
+    (E−1)/E·payload — the reduce-scatter win. The psum transport is the
+    jax 0.4.x partial-manual correctness lane (gather-sized traffic).
+    """
+    names = tuple(axis_names)
+    E = 1
+    for ax in names:
+        E *= int(axis_sizes[ax])
+    w_slots, s_slots = shard_slot_wire(q, s, bits=bits, block=block,
+                                       endpoints=E)
+    if transport == "auto":
+        transport = resolve_transport(axis_names=names,
+                                      use_pallas=use_pallas)
+    if transport == "dma":
+        _check_axis_sizes(names[:1], axis_sizes)
+        wg, sg = shard_scatter_wire_tpu(
+            w_slots, s_slots, names[0], axis_sizes[names[0]])
+    elif transport == "ring":
+        wg, sg = ring_scatter_wire(w_slots, s_slots, names, axis_sizes,
+                                   axis_coords)
+    elif transport == "psum":
+        wg, sg = onehot_scatter_wire(w_slots, s_slots, names, axis_sizes,
+                                     axis_coords)
+    else:
+        raise ValueError(f"unknown wire transport {transport!r}")
+    return dequant_sum_sources(wg, sg, bits=bits, block=block,
+                               weights=weights)
+
+
+def allgather_qs(q2: jax.Array, s2: jax.Array, *,
+                 axis_names: Sequence[str],
+                 axis_sizes: Mapping[str, int],
+                 bits: int, block: int,
+                 use_pallas: bool = False,
+                 axis_coords=None,
+                 transport: str = "auto") -> jax.Array:
+    """Quantized all-gather: reconstruct the full payload from shards.
+
+    ``q2``: (sb·block,) int8 re-quantized reduced shard, ``s2``: (sb,)
+    fp32 scales — endpoint ``e`` holds shard ``e``. Ships the packed
+    (w2, s2) pair over the same three transports as the all-reduce wire
+    path and concatenates per-slot dequantizations in canonical source
+    order via :func:`dequant_concat_sources` — every endpoint
+    reconstructs the identical (E·sb·block,) fp32 payload (concatenation,
+    not summation: no FMA-order hazard, bit-identical everywhere).
+    """
+    names = tuple(axis_names)
+    w2 = pack_wire(q2, bits)
+    if transport == "auto":
+        transport = resolve_transport(axis_names=names,
+                                      use_pallas=use_pallas)
+    if transport == "dma":
+        _check_axis_sizes(names[:1], axis_sizes)
+        wg, sg = ring_allgather_wire_tpu(
+            w2, s2, names[0], axis_sizes[names[0]])
+    elif transport == "ring":
+        wg, sg = ring_gather_wire(w2, s2, names, axis_sizes, axis_coords)
+    elif transport == "psum":
+        wg, sg = onehot_gather_wire(w2, s2, names, axis_sizes, axis_coords)
+    else:
+        raise ValueError(f"unknown wire transport {transport!r}")
+    return dequant_concat_sources(wg, sg, bits=bits, block=block)
+
+
 # ---------------------------------------------------------------------------
 # measured bytes-on-wire (benchmarks/overlap.py --json)
 # ---------------------------------------------------------------------------
@@ -404,3 +687,47 @@ def measured_cross_domain_bytes(n: int, *, endpoints: int, bits: int = 8,
     with the *measured* per-payload bytes."""
     per = measure_wire_bytes(n, bits=bits, block=block)
     return 2.0 * per["measured_payload_bytes"] * (max(endpoints, 1) - 1)
+
+
+@functools.lru_cache(maxsize=32)
+def _measure_slot_sample(sample: int, endpoints: int, bits: int,
+                         block: int):
+    """(slot_value_bytes, slot_scale_bytes) of one real rs/ag slot for a
+    ``sample``-element payload: run the actual quantize + per-slot pack
+    and read ``.nbytes`` off the slot buffers (captures block padding,
+    slot zero-padding, and per-slot nibble packing exactly)."""
+    from repro.kernels.ref import quantize_blockwise_ref
+
+    x = jnp.zeros((sample,), jnp.float32)
+    q, s = quantize_blockwise_ref(x, bits=bits, block=block)
+    w_slots, s_slots = shard_slot_wire(q, s, bits=bits, block=block,
+                                      endpoints=endpoints)
+    return int(w_slots[0].nbytes), int(s_slots[0].nbytes)
+
+
+def measured_rs_ag_bytes(n: int, *, endpoints: int, bits: int = 8,
+                         block: int = 256,
+                         sample_cap: int = 1 << 22) -> dict:
+    """Measured per-device wire bytes for the rs/ag exchange.
+
+    Convention: bytes *sent* per device per sync. Each device sends
+    (E−1) quantized payload slots on the reduce-scatter leg and its one
+    re-quantized (q2, s2) slot to (E−1) peers on the all-gather leg —
+    2·(E−1)·slot_bytes total, vs (E−1)·payload_bytes for the
+    gather-based all-reduce wire path (ratio 2/E: 0.5× at E=4). Slot
+    sizes come from real buffers (see :func:`_measure_slot_sample`);
+    payloads above ``sample_cap`` are measured on a sample and scaled.
+    """
+    E = max(int(endpoints), 1)
+    sample = int(min(n, sample_cap))
+    value_bytes, scale_bytes = _measure_slot_sample(sample, E, bits, block)
+    scale = n / max(sample, 1)
+    slot_bytes = (value_bytes + scale_bytes) * scale
+    per_leg = (E - 1) * slot_bytes
+    return {
+        "measured_slot_bytes": slot_bytes,
+        "measured_rs_bytes_per_device": per_leg,
+        "measured_ag_bytes_per_device": per_leg,
+        "measured_rs_ag_bytes_per_device": 2.0 * per_leg,
+        "measured_rs_ag_bytes_total": 2.0 * per_leg * E,
+    }

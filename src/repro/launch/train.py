@@ -255,21 +255,19 @@ class Trainer:
         the apply installs the result (whose stale-delta correction is
         identically zero — ``core.outer.warmup_apply``).
 
-        While a measured controller still wants t_comm samples AND the
-        strategy's wire format is fp32, the warmup accumulate windows are
-        wall-clocked too: the accumulate's global reduce moves the same
-        full-precision tree as an fp32 outer sync, so its timing is
-        representative — sampling here lets d* resolve *before* the first
-        post-warmup sync instead of burning the first real windows on
-        measurement. Compressed strategies skip this (the accumulate
-        always reduces fp32, which says nothing about the quantized outer
-        wire width); their measurement starts at the first outer window
-        as before.
+        While a measured controller still wants t_comm samples, the
+        warmup accumulate windows are wall-clocked too: the accumulate's
+        global reduce moves the full-precision Δθ tree, so for an fp32
+        strategy its timing is directly representative, and for a
+        compressed wire the controller rescales the sample by the modeled
+        payload-width ratio (``warmup=True`` →
+        :attr:`~repro.sync.delay.MeasuredDelayController.warmup_scale`) —
+        either way d* resolves *before* the first post-warmup sync
+        instead of burning the first real windows on measurement.
         """
         mu = jnp.float32(self.sched.mu_at(ev.sync_step))
         ctrl = self.sync_controller
-        measure = (ctrl is not None and ctrl.wants_measurement
-                   and self.bundle.plan.wire_format == "fp32")
+        measure = ctrl is not None and ctrl.wants_measurement
         t0 = time.perf_counter() if measure else 0.0
         self._outer_to_device()
         if ev.apply_step <= ev.sync_step:
@@ -292,7 +290,8 @@ class Trainer:
             # of holding 2x the outer state on device for d steps
             self._outer_to_host()
         if measure:
-            ctrl.observe_window(t_comm=time.perf_counter() - t0)
+            ctrl.observe_window(t_comm=time.perf_counter() - t0,
+                                warmup=True)
             # adopt a freshly resolved d* right away (delay only — no
             # tick: strategy decisions stay keyed on *outer* windows, so
             # scripted replays are unaffected by warmup sampling)
@@ -394,6 +393,14 @@ class Trainer:
                 residual=self.bundle.init_residual(self.state))
         elif not need and self.outer.residual is not None:
             self.outer = self.outer._replace(residual=None)
+        # the rs-ag wire path's second residual retargets the same way
+        # (init_residual's zero tree has the right stacked shardings)
+        need2 = getattr(self.bundle.plan, "needs_residual2", False)
+        if need2 and getattr(self.outer, "residual2", None) is None:
+            self.outer = self.outer._replace(
+                residual2=self.bundle.init_residual(self.state))
+        elif not need2 and getattr(self.outer, "residual2", None) is not None:
+            self.outer = self.outer._replace(residual2=None)
         self._outer_to_host()
 
     def _apply_inflight(self):
@@ -530,9 +537,11 @@ def main(argv=None):
                     help="re-sample t_comm/t_inner every N sync windows "
                          "after the initial measurement (0 = measure once)")
     ap.add_argument("--outer-compression", default="none",
-                    choices=["none", "quantize", "int8-wire"],
+                    choices=["none", "quantize", "int8-wire", "rs-ag"],
                     help="compress the cross-pod Δθ payload (int8-wire: "
-                         "ring-exchange the actual packed q+scales)")
+                         "ring-exchange the actual packed q+scales; "
+                         "rs-ag: quantized reduce-scatter + all-gather, "
+                         "~2/E of the per-device wire bytes)")
     ap.add_argument("--outer-comm-bits", type=int, default=8,
                     choices=[4, 8])
     ap.add_argument("--hierarchical-reduce", action="store_true",

@@ -189,6 +189,11 @@ def build_train_steps(
     state_shardings = S.shardings(state_spec, mesh)
     plan = strategy.plan(pshapes, tc, mesh)
     compress = plan.needs_residual
+    # The rs-ag wire path (DESIGN.md §14) carries a second error-feedback
+    # residual over the re-quantized reduced shard; like the first it is
+    # group-local (nonzero only on each group's own 1/E slot), so both
+    # are (G,)-stacked.
+    compress2 = getattr(plan, "needs_residual2", False)
     # The error-feedback residual is group-local (each group quantizes its
     # own payload), so unlike momentum/anchor it is (G,)-stacked.
     outer_spec = OuterState(
@@ -196,7 +201,9 @@ def build_train_steps(
         anchor=S.param_specs(pshapes, mesh, pc),
         num_syncs=P(),
         residual=(S.stack_spec(S.param_specs(pshapes, mesh, pc), manual)
-                  if compress else None))
+                  if compress else None),
+        residual2=(S.stack_spec(S.param_specs(pshapes, mesh, pc), manual)
+                   if compress2 else None))
     outer_shardings = S.shardings(outer_spec, mesh)
     bspec = S.batch_spec(mesh)
 
@@ -219,7 +226,8 @@ def build_train_steps(
         def f(state):
             params = jax.tree.map(lambda x: x[0], state.params)
             return outer_init(params, tc, num_groups=G,
-                              needs_residual=compress)
+                              needs_residual=compress,
+                              needs_residual2=compress2)
         return jax.jit(f, out_shardings=outer_shardings)(state)
 
     # ---- the shared inner/warmup body -------------------------------------
@@ -320,7 +328,11 @@ def build_train_steps(
             num_syncs=P(),
             residual=(jax.tree.map(lambda _: P(manual), outer_spec.residual,
                                    is_leaf=lambda s: isinstance(s, P))
-                      if compress else None))
+                      if compress else None),
+            residual2=(jax.tree.map(lambda _: P(manual),
+                                    outer_spec.residual2,
+                                    is_leaf=lambda s: isinstance(s, P))
+                       if compress2 else None))
 
     _dspec = lambda sspec: DispatchState(
         target=jax.tree.map(lambda _: P(), sspec.params,
@@ -389,7 +401,11 @@ def build_train_steps(
         return strategy.reduce_leaf(d, r, tc, ctx.with_leaf_spec(spec))
 
     def _reduced_delta(params, outer, ctx=reduce_ctx):
-        """(delta_avg tree, new residual tree | None) for one group."""
+        """(delta_avg tree, new residual tree | None) for one group.
+
+        Under the rs-ag wire path (``compress2``) each leaf's residual
+        travels as an opaque ``(r1, r2)`` pair and ``new_res`` comes back
+        as the ``(tree_r1, tree_r2)`` pair ``_residual_kw`` unpacks."""
         delta = jax.tree.map(
             lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32),
             params, outer.anchor)
@@ -398,15 +414,26 @@ def build_train_steps(
         flat_d, treedef = jax.tree_util.tree_flatten(delta)
         flat_r = (treedef.flatten_up_to(res) if compress
                   else [None] * len(flat_d))
+        if compress2:
+            res2 = jax.tree.map(lambda x: x[0], outer.residual2)
+            flat_r2 = treedef.flatten_up_to(res2)
+            flat_r = [(r1, r2) for r1, r2 in zip(flat_r, flat_r2)]
         out = [_reduce_delta_leaf(d, r, ctx, spec)
                for d, r, spec in zip(flat_d, flat_r, pspec_flat)]
         unf = jax.tree_util.tree_unflatten
         delta_avg = unf(treedef, [p for p, _ in out])
-        new_res = (unf(treedef, [jnp.expand_dims(r, 0) for _, r in out])
-                   if compress else None)
+        if compress2:
+            new_res = (
+                unf(treedef, [jnp.expand_dims(r[0], 0) for _, r in out]),
+                unf(treedef, [jnp.expand_dims(r[1], 0) for _, r in out]))
+        else:
+            new_res = (unf(treedef, [jnp.expand_dims(r, 0) for _, r in out])
+                       if compress else None)
         return delta_avg, new_res
 
     def _residual_kw(new_res):
+        if compress2:
+            return {"residual": new_res[0], "residual2": new_res[1]}
         return {"residual": new_res} if compress else {}
 
     def accumulate_body(state, outer, mu):
@@ -654,7 +681,9 @@ def build_train_steps(
             a compressed one: momentum/anchor carry over, the residual
             starts at zero — exactly the first-sync semantics of
             ``compress_delta(residual=None)``, now materialized so the
-            stacked shardings match this bundle's specs.
+            stacked shardings match this bundle's specs. The Trainer also
+            reuses it to materialize ``residual2`` when a switch lands on
+            the rs-ag wire path (same zero tree, same stacked shardings).
             """
             def f(state):
                 params = jax.tree.map(lambda x: x[0], state.params)
@@ -832,9 +861,13 @@ def build_train_steps(
                 new_res = (jax.tree.map(
                     lambda r: jnp.where(is_g, jnp.zeros_like(r), r),
                     outer.residual) if compress else None)
+                new_res2 = (jax.tree.map(
+                    lambda r: jnp.where(is_g, jnp.zeros_like(r), r),
+                    outer.residual2) if compress2 else None)
                 new_outer = OuterState(
                     momentum=outer.momentum, anchor=outer.anchor,
-                    num_syncs=outer.num_syncs, residual=new_res)
+                    num_syncs=outer.num_syncs, residual=new_res,
+                    residual2=new_res2)
                 return TrainState(params=new_params, opt=new_opt), new_outer
 
         def bootstrap_fn(state, outer, g, donor):

@@ -58,6 +58,11 @@ class SyncPlan(NamedTuple):
     name: str
     wire_format: str = "fp32"
     transport: str = "collective"
+    # Whether the strategy carries the second (gather-leg) error-feedback
+    # residual of the reduce-scatter + all-gather wire path (DESIGN.md
+    # §14) in ``OuterState.residual2``. Trailing with a default so
+    # existing pickled/compared plans keep their layout.
+    needs_residual2: bool = False
 
     @property
     def num_chunks(self) -> int:
@@ -275,6 +280,12 @@ class OuterSyncStrategy:
     # Whether this strategy carries a per-group error-feedback residual in
     # ``OuterState.residual`` (compressed payloads only).
     needs_residual: bool = False
+    # Whether it also carries the gather-leg residual in
+    # ``OuterState.residual2`` (the rs/ag wire path, DESIGN.md §14). When
+    # True, ``reduce_leaf``/``sim_reduce`` receive and return the residual
+    # argument as an ``(r1, r2)`` pair; combinators pass it through
+    # opaquely.
+    needs_residual2: bool = False
     # Whether the reduce runs as two stages (fp32 fast-domain mean, then
     # the payload exchange over the slow domain).
     two_stage: bool = False
@@ -311,7 +322,8 @@ class OuterSyncStrategy:
         return SyncPlan(num_leaves=n, spans=((0, n),),
                         needs_residual=self.needs_residual, name=self.name,
                         wire_format=self.wire_format,
-                        transport=self.transport_name(mesh))
+                        transport=self.transport_name(mesh),
+                        needs_residual2=self.needs_residual2)
 
     # ------------------------------------------------- distributed dispatch
     def reduce_leaf(self, d, r, tc, ctx: ReduceCtx):
@@ -337,8 +349,17 @@ class OuterSyncStrategy:
         delta = jax.tree.map(
             lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32)[None],
             group_params, outer.anchor)
+        residual = outer.residual
+        if self.needs_residual2:
+            # rs/ag strategies thread both residuals as an opaque pair —
+            # combinators forward it untouched; the core unpacks it.
+            residual = (outer.residual, outer.residual2)
         delta_avg, new_res = self.sim_reduce(
-            delta, outer.residual, tc, num_pods=num_pods, weights=weights)
+            delta, residual, tc, num_pods=num_pods, weights=weights)
+        if self.needs_residual2:
+            new_r1, new_r2 = new_res
+            return outer_reduce(outer, delta_avg, tc, mu=mu, lr=lr,
+                                residual=new_r1, residual2=new_r2)
         return outer_reduce(outer, delta_avg, tc, mu=mu, lr=lr,
                             residual=new_res)
 
@@ -363,6 +384,18 @@ class OuterSyncStrategy:
         """Install a dispatched target with the stale-delta correction."""
         return outer_apply(target_f32, dispatch_params, current_params)
 
+    def wire_bytes_per_param(self, tc) -> float:
+        """Modeled slow-axis payload width in bytes per parameter.
+
+        4.0 for fp32-wire strategies (including ``Quantized``, whose
+        actual collective is an fp32 pmean of the dequantized payload);
+        the wire strategies override with ``bits/8 + 4/block``. Used to
+        scale warmup ``t_comm`` samples — warmup accumulates exchange
+        fp32 Δθ regardless of strategy, so a compressed strategy's
+        post-warmup collective is narrower by exactly this ratio.
+        """
+        return 4.0
+
     # ------------------------------------------------------ delay injection
     def make_delay_controller(self, tc, mc, pc, *, chip: str = "",
                               measured: bool = True):
@@ -377,7 +410,9 @@ class OuterSyncStrategy:
         model = ModelDelayController(tc, mc, pc, chip=chip)
         if not measured:
             return model
-        return MeasuredDelayController(tc, fallback=model)
+        return MeasuredDelayController(
+            tc, fallback=model,
+            warmup_scale=self.wire_bytes_per_param(tc) / 4.0)
 
     # --------------------------------------------------- decision injection
     def make_sync_controller(self, tc, mc, pc, *, chip: str = "",
@@ -409,4 +444,5 @@ class OuterSyncStrategy:
         return AdaptiveSyncController(
             tc, ladder=default_ladder(
                 self, num_pods=getattr(pc, "num_pods", 1)),
-            fallback=fallback, remeasure_every=remeasure_every)
+            fallback=fallback, remeasure_every=remeasure_every,
+            warmup_scale=self.wire_bytes_per_param(tc) / 4.0)

@@ -73,8 +73,12 @@ class SyncController:
         """Record one inner step's wall-clock seconds."""
 
     def observe_window(self, *, t_comm: float,
-                       t_inner: Optional[float] = None) -> None:
-        """Record one measured sync window (dispatch-to-ready seconds)."""
+                       t_inner: Optional[float] = None,
+                       warmup: bool = False) -> None:
+        """Record one measured sync window (dispatch-to-ready seconds).
+        ``warmup=True`` marks a warmup accumulate window (fp32 Δθ on the
+        wire regardless of strategy — see
+        :meth:`repro.sync.delay.DelayController.observe_window`)."""
 
     def tick_window(self) -> None:
         """Note that one sync window elapsed (measured or not)."""
@@ -108,8 +112,10 @@ class DelayDecisionAdapter(SyncController):
         self._delay.observe_step(t_inner)
 
     def observe_window(self, *, t_comm: float,
-                       t_inner: Optional[float] = None) -> None:
-        self._delay.observe_window(t_comm=t_comm, t_inner=t_inner)
+                       t_inner: Optional[float] = None,
+                       warmup: bool = False) -> None:
+        self._delay.observe_window(t_comm=t_comm, t_inner=t_inner,
+                                   warmup=warmup)
 
     def tick_window(self) -> None:
         self._delay.tick_window()
@@ -139,7 +145,8 @@ class AdaptiveSyncController(SyncController):
     def __init__(self, tc, *, ladder: Sequence,
                  fallback: Optional[DelayController] = None,
                  min_windows: int = 2, max_windows: int = 6,
-                 skip_windows: int = 1, remeasure_every: int = 0):
+                 skip_windows: int = 1, remeasure_every: int = 0,
+                 warmup_scale: float = 1.0):
         if not ladder:
             raise ValueError("adaptive sync needs a non-empty ladder")
         self.tc = tc
@@ -152,6 +159,7 @@ class AdaptiveSyncController(SyncController):
         self.max_windows = max(int(max_windows),
                                self.min_windows + self.skip_windows)
         self.remeasure_every = int(remeasure_every)
+        self.warmup_scale = float(warmup_scale)
         self._measure = self._fresh_measure(
             fallback if isinstance(fallback, DelayController)
             else FixedDelayController(0, tc.sync_interval))
@@ -161,7 +169,8 @@ class AdaptiveSyncController(SyncController):
         m = MeasuredDelayController(
             self.tc, fallback=fallback, min_windows=self.min_windows,
             max_windows=self.max_windows, skip_windows=self.skip_windows,
-            remeasure_every=self.remeasure_every)
+            remeasure_every=self.remeasure_every,
+            warmup_scale=self.warmup_scale)
         # the inner step does not change across strategy switches — carry
         # the EMA so the fresh t_comm resolves against live numbers
         m.t_inner = t_inner
@@ -182,8 +191,10 @@ class AdaptiveSyncController(SyncController):
         self._measure.observe_step(t_inner)
 
     def observe_window(self, *, t_comm: float,
-                       t_inner: Optional[float] = None) -> None:
-        self._measure.observe_window(t_comm=t_comm, t_inner=t_inner)
+                       t_inner: Optional[float] = None,
+                       warmup: bool = False) -> None:
+        self._measure.observe_window(t_comm=t_comm, t_inner=t_inner,
+                                     warmup=warmup)
 
     def tick_window(self) -> None:
         self._measure.tick_window()
@@ -268,7 +279,11 @@ def _core_ladder(strategy):
         return [strategy] + ([Quantized(4, strategy.block)]
                              if strategy.bits > 4 else [])
     if isinstance(strategy, Int8Wire):
-        return [strategy] + ([Int8Wire(4, strategy.block)]
+        import dataclasses
+
+        # replace() rather than a fresh Int8Wire: the downgrade must keep
+        # the rs/ag wire-path flag (reduce_scatter) along with the block
+        return [strategy] + ([dataclasses.replace(strategy, bits=4)]
                              if strategy.bits > 4 else [])
     if isinstance(strategy, FlatFP32):
         return [strategy, Quantized(8, 256), Quantized(4, 256)]

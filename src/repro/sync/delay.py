@@ -42,8 +42,14 @@ class DelayController:
         """Record one inner step's wall-clock seconds."""
 
     def observe_window(self, *, t_comm: float,
-                       t_inner: Optional[float] = None) -> None:
-        """Record one measured sync window (dispatch-to-ready seconds)."""
+                       t_inner: Optional[float] = None,
+                       warmup: bool = False) -> None:
+        """Record one measured sync window (dispatch-to-ready seconds).
+
+        ``warmup=True`` marks a warmup accumulate window: its collective
+        exchanged the fp32 Δθ, not the strategy's wire payload, so
+        width-scaling controllers rescale the sample before folding it
+        into their estimate."""
 
     def tick_window(self) -> None:
         """Note that one sync window elapsed, measured or not.
@@ -152,12 +158,22 @@ class MeasuredDelayController(DelayController):
     without re-sampling the controller would freeze on the first
     minutes' timings forever. 0 (the default) keeps the original
     measure-once behavior.
+
+    ``warmup_scale`` is the modeled payload-width ratio (strategy wire
+    bytes/param over fp32's 4.0): warmup accumulate windows exchange the
+    *fp32* Δθ whatever the strategy, so their ``t_comm`` samples
+    over-estimate a compressed wire's collective by exactly that ratio.
+    Samples observed with ``warmup=True`` are multiplied by it before
+    entering the EMA — d* then resolves from representative-width
+    samples before the first post-warmup sync, instead of deferring to
+    the fallback until ``min_windows`` post-warmup windows have been
+    paid for. 1.0 (fp32 strategies) keeps warmup samples exact.
     """
 
     def __init__(self, tc, *, fallback: Optional[DelayController] = None,
                  min_windows: int = 2, max_windows: int = 6,
                  skip_windows: int = 1, ema: float = 0.5,
-                 remeasure_every: int = 0):
+                 remeasure_every: int = 0, warmup_scale: float = 1.0):
         self.tc = tc
         self.fallback = fallback or FixedDelayController(0)
         self.min_windows = int(min_windows)
@@ -167,6 +183,7 @@ class MeasuredDelayController(DelayController):
         self.skip_windows = int(skip_windows)
         self.ema = float(ema)
         self.remeasure_every = int(remeasure_every)
+        self.warmup_scale = float(warmup_scale)
         self.windows = 0
         self.t_inner: Optional[float] = None
         self.t_comm: Optional[float] = None
@@ -202,13 +219,16 @@ class MeasuredDelayController(DelayController):
         self.t_inner = self._ema(self.t_inner, t_inner)
 
     def observe_window(self, *, t_comm: float,
-                       t_inner: Optional[float] = None) -> None:
+                       t_inner: Optional[float] = None,
+                       warmup: bool = False) -> None:
         if self._burst > 0:
             self._burst -= 1
         self._measured_this_window = True
         self.windows += 1
         if self.windows <= self.skip_windows:
             return
+        if warmup:
+            t_comm = t_comm * self.warmup_scale
         self.t_comm = self._ema(self.t_comm, t_comm)
         if t_inner is not None:
             self.t_inner = self._ema(self.t_inner, t_inner)

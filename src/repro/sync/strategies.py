@@ -34,6 +34,7 @@ combination via the deprecation shim) onto the equivalent strategy object.
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 import jax
@@ -44,6 +45,20 @@ from repro.core.outer import compress_delta, outer_reduce
 from repro.sync.base import (OuterSyncStrategy, ReduceCtx, SyncPlan,
                              balanced_spans, constrain_to_spec, _leaf_sizes,
                              weighted_psum_mean, weighted_stack_mean)
+
+
+def _can_pad_in_manual() -> bool:
+    """Whether in-graph pad/slice of auto-sharded values inside the
+    partial-manual shard_map region is safe.
+
+    jaxlib 0.4.x trips an XLA partitioner CHECK (hlo_sharding_util
+    IsManualSubgroup) repartitioning padded flat payloads there, so
+    :class:`Sharded` keeps ragged leaves on the replicated round trip;
+    modern jax (the new shard_map, jax >= 0.5) lowers the pad fine and
+    takes the shard-local quantize path. Module-level so tests can
+    exercise the gate both ways by monkeypatching.
+    """
+    return compat.HAS_NEW_SHARD_MAP
 
 
 @dataclass(frozen=True)
@@ -144,20 +159,44 @@ class Int8Wire(OuterSyncStrategy):
     order and multiplies by ``1/E`` (per-source-scale sum semantics,
     DESIGN.md §8), so every endpoint produces bit-identical results and
     the payload mean equals :class:`Quantized`'s dequantized-payload mean.
+
+    ``reduce_scatter=True`` replaces the full-payload ring with the
+    explicit reduce-scatter → all-gather wire path (DESIGN.md §14):
+    endpoint e reduces only slot e of every source's payload
+    (``kernels.ring_allreduce.reduce_scatter_qs``), re-quantizes its
+    reduced 1/E shard behind a *second* error-feedback residual
+    (``OuterState.residual2``), and all-gathers the packed ``(q2, s2)``
+    pair (``allgather_qs``) — per-device sent bytes drop from
+    (E−1)·payload to 2·(E−1)/E·payload, and the residual/payload pair
+    still telescopes exactly: ``reduced + r2 == dequant(q2, s2) + r2'``
+    per slot. Both residuals thread as an opaque ``(r1, r2)`` pair (see
+    ``OuterSyncStrategy.needs_residual2``).
     """
 
     bits: int = 8
     block: int = 256
+    reduce_scatter: bool = False
 
     needs_residual = True
 
     @property
+    def needs_residual2(self) -> bool:  # type: ignore[override]
+        return self.reduce_scatter
+
+    @property
     def name(self) -> str:
+        if self.reduce_scatter:
+            return f"rs-ag(int{self.bits},block={self.block})"
         return f"int{self.bits}-wire(block={self.block})"
 
     @property
     def wire_format(self) -> str:  # type: ignore[override]
+        if self.reduce_scatter:
+            return f"int{self.bits}+scales/rs-ag"
         return f"int{self.bits}+scales"
+
+    def wire_bytes_per_param(self, tc) -> float:
+        return self.bits / 8.0 + 4.0 / self.block
 
     def transport_name(self, mesh=None) -> str:
         from repro.kernels.ring_allreduce import resolve_transport
@@ -173,6 +212,8 @@ class Int8Wire(OuterSyncStrategy):
         from repro.core.outer import quant_fns
         from repro.kernels.ring_allreduce import ring_allreduce_quantized
 
+        if self.reduce_scatter:
+            return self._reduce_leaf_rs_ag(d, r, tc, ctx)
         quant, dequant = quant_fns(bits=self.bits, block=self.block,
                                    use_pallas=ctx.use_pallas)
         c = d.astype(jnp.float32)
@@ -197,6 +238,68 @@ class Int8Wire(OuterSyncStrategy):
             axis_coords=ctx.axis_coords, weights=ctx.weights)
         return avg[:n].reshape(c.shape), new_r
 
+    def _reduce_leaf_rs_ag(self, d, r, tc, ctx: ReduceCtx):
+        """The reduce-scatter + all-gather exchange of one Δθ leaf.
+
+        ``r`` arrives as the opaque ``(r1, r2)`` residual pair (or None on
+        the stateless path). The second residual is *stored* full-size in
+        the leaf's shape — zeros outside this endpoint's own slot — so
+        the OuterState layout (and its sharding specs) stay uniform; the
+        slot is sliced out/scattered back around the exchange. Slot
+        padding positions beyond the leaf carry exact zeros end to end
+        (zero-padded blocks reduce to zero, a zero residual re-quantizes
+        to zero), so truncating the stored residual to the leaf is
+        lossless — the invariant tests/test_rs_ag_wire.py proves.
+        """
+        from repro.core.outer import quant_fns
+        from repro.kernels.ref import wire_shard_blocks
+        from repro.kernels.ring_allreduce import (_linear_exchange_idx,
+                                                  allgather_qs,
+                                                  reduce_scatter_qs)
+
+        r1, r2 = r if isinstance(r, tuple) else (r, None)
+        quant, dequant = quant_fns(bits=self.bits, block=self.block,
+                                   use_pallas=ctx.use_pallas)
+        c = d.astype(jnp.float32)
+        if r1 is not None:
+            c = c + r1.astype(jnp.float32)
+        flat = c.reshape(-1)
+        n = flat.shape[0]
+        q, s = quant(flat)
+        payload_local = dequant(q, s)[:n].reshape(c.shape)
+        new_r1 = c - payload_local
+        if not ctx.exchange_axes or ctx.exchange_size() <= 1:
+            # no exchange: deliver the local dequant; the gather-leg
+            # residual has nothing new to absorb
+            return payload_local, (new_r1, r2)
+        E = ctx.exchange_size()
+        sb = wire_shard_blocks(int(s.shape[0]), E)
+        slot = sb * self.block
+        _, idx = _linear_exchange_idx(ctx.exchange_axes, ctx.axis_sizes,
+                                      ctx.axis_coords)
+        reduced = reduce_scatter_qs(
+            q, s, axis_names=ctx.exchange_axes, axis_sizes=ctx.axis_sizes,
+            bits=self.bits, block=self.block, use_pallas=ctx.use_pallas,
+            axis_coords=ctx.axis_coords, weights=ctx.weights)
+        # second error feedback on my reduced shard, then the gather leg
+        if r2 is None:
+            r2_shard = jnp.zeros((slot,), jnp.float32)
+        else:
+            r2_flat = jnp.pad(r2.astype(jnp.float32).reshape(-1),
+                              (0, E * slot - n))
+            r2_shard = jax.lax.dynamic_slice(r2_flat, (idx * slot,), (slot,))
+        c2 = reduced + r2_shard
+        q2, s2 = quant(c2)
+        new_r2_shard = c2 - dequant(q2, s2)[:slot]
+        payload = allgather_qs(
+            q2, s2, axis_names=ctx.exchange_axes, axis_sizes=ctx.axis_sizes,
+            bits=self.bits, block=self.block, use_pallas=ctx.use_pallas,
+            axis_coords=ctx.axis_coords)
+        new_r2 = jax.lax.dynamic_update_slice(
+            jnp.zeros((E * slot,), jnp.float32), new_r2_shard,
+            (idx * slot,))[:n].reshape(c.shape)
+        return payload[:n].reshape(c.shape), (new_r1, new_r2)
+
     def sim_reduce(self, delta, residual, tc, *, num_pods=1,
                    pod_grouped=False, weights=None):
         """Exact model of the ring: per-source-scale sum in source order.
@@ -215,6 +318,11 @@ class Int8Wire(OuterSyncStrategy):
                                        dequantize_blockwise_ref,
                                        quantize_blockwise_ref)
 
+        if self.reduce_scatter:
+            return self._sim_reduce_rs_ag(delta, residual, tc,
+                                          num_pods=num_pods,
+                                          pod_grouped=pod_grouped,
+                                          weights=weights)
         bits, block = self.bits, self.block
         src_w = weights
         if weights is not None and pod_grouped:
@@ -255,6 +363,73 @@ class Int8Wire(OuterSyncStrategy):
         return (unf(treedef, [p for p, _ in out]),
                 unf(treedef, [r for _, r in out]))
 
+    def _sim_reduce_rs_ag(self, delta, residual, tc, *, num_pods=1,
+                          pod_grouped=False, weights=None):
+        """Exact model of the rs/ag exchange: the (G,)-stacked sources
+        ARE the endpoints, and the whole round trip runs through
+        :func:`repro.kernels.ref.rs_ag_qs_ref` — the identical subgraph
+        the distributed ``reduce_scatter_qs``/``allgather_qs`` legs
+        decompose into, so sim ↔ distributed binds bit for bit.
+        ``residual`` is the opaque ``(r1_tree, r2_tree)`` pair."""
+        from repro.kernels.ref import (dequantize_blockwise_ref,
+                                       quantize_blockwise_ref,
+                                       rs_ag_qs_ref, wire_shard_blocks)
+
+        if pod_grouped:
+            raise ValueError(
+                "the rs/ag wire path does not compose with the "
+                "hierarchical two-stage reduce: the reduce-scatter "
+                "already owns the slow-axis layout")
+        bits, block = self.bits, self.block
+        r1_tree, r2_tree = (residual if isinstance(residual, tuple)
+                            else (residual, None))
+
+        def leaf(d, r1, r2):
+            G = d.shape[0]
+            c = d.astype(jnp.float32)
+            if r1 is not None:
+                c = c + r1.astype(jnp.float32)
+            flat = c.reshape(G, -1)
+            n = flat.shape[1]
+            q, s = jax.vmap(lambda x: quantize_blockwise_ref(
+                x, bits=bits, block=block))(flat)
+            payload_local = jax.vmap(lambda q1, s1: dequantize_blockwise_ref(
+                q1, s1, block=block))(q, s)[:, :n].reshape(c.shape)
+            new_r1 = c - payload_local
+            E = G
+            if E <= 1:
+                return payload_local[0], new_r1, (r2 if r2 is not None
+                                                  else jnp.zeros_like(c))
+            sb = wire_shard_blocks(int(s.shape[1]), E)
+            slot = sb * block
+            # endpoint g's stored full-size residual2 -> its own slot g
+            if r2 is None:
+                r2_shards = jnp.zeros((E, slot), jnp.float32)
+            else:
+                r2_pad = jnp.pad(r2.astype(jnp.float32).reshape(G, -1),
+                                 ((0, 0), (0, E * slot - n)))
+                r2_shards = r2_pad.reshape(E, E, slot)[
+                    jnp.arange(E), jnp.arange(E)]
+            payload, new_r2_shards = rs_ag_qs_ref(
+                q, s, block=block, bits=bits, residual2=r2_shards,
+                weights=weights)
+            new_r2 = jnp.zeros((E, E * slot), jnp.float32).reshape(
+                E, E, slot).at[jnp.arange(E), jnp.arange(E)].set(
+                new_r2_shards).reshape(E, E * slot)[:, :n].reshape(c.shape)
+            return payload[:n].reshape(c.shape[1:]), new_r1, new_r2
+
+        flat_d, treedef = jax.tree_util.tree_flatten(delta)
+        flat_r1 = (treedef.flatten_up_to(r1_tree) if r1_tree is not None
+                   else [None] * len(flat_d))
+        flat_r2 = (treedef.flatten_up_to(r2_tree) if r2_tree is not None
+                   else [None] * len(flat_d))
+        out = [leaf(d, r1, r2)
+               for d, r1, r2 in zip(flat_d, flat_r1, flat_r2)]
+        unf = jax.tree_util.tree_unflatten
+        return (unf(treedef, [p for p, _, _ in out]),
+                (unf(treedef, [r1 for _, r1, _ in out]),
+                 unf(treedef, [r2 for _, _, r2 in out])))
+
 
 @dataclass(frozen=True)
 class Sharded(OuterSyncStrategy):
@@ -276,15 +451,23 @@ class Sharded(OuterSyncStrategy):
       ``block * A`` (A = auto-axis shard count) quantize shard-locally —
       every shard holds whole quantization blocks, so blockwise absmax
       never crosses a shard boundary and the blocks are bitwise what the
-      unsharded :class:`Quantized` produces. Ragged leaves fall back to
-      the inner replicated round trip (in-graph pad/slice inside the
-      partial-manual region trips a jaxlib 0.4.x partitioner CHECK; only
-      small odd leaves are affected). Same numeric model, same simulator
-      tolerance.
+      unsharded :class:`Quantized` produces. Ragged leaves pad in-graph
+      to whole per-shard blocks and still quantize shard-locally on
+      modern jax; on jaxlib 0.4.x (where the in-graph pad/slice trips a
+      partitioner CHECK — see :func:`_can_pad_in_manual`) they fall back
+      to the inner replicated round trip. Same numeric model, same
+      simulator tolerance.
+    - ``Sharded(Int8Wire(...))``: the explicit reduce-scatter +
+      all-gather wire exchange (DESIGN.md §14). The combinator force-
+      normalizes the inner's ``reduce_scatter=True`` — a full-payload
+      ring under the sharded layout would rebuild every leaf on every
+      device, the exact thing this combinator exists to avoid — and pins
+      the delivered payload and both residuals back to the leaf spec, so
+      shard-resident outer state composes with the 1/E wire traffic.
 
     With ``sharded_state`` the step builder additionally pins the outer
-    momentum/anchor/residual and dispatch buffers to the same specs via
-    jit ``out_shardings``, so outer-state memory per device scales as
+    momentum/anchor/residual(s) and dispatch buffers to the same specs
+    via jit ``out_shardings``, so outer-state memory per device scales as
     ~1/(TP×FSDP) (DESIGN.md §10).
     """
 
@@ -293,12 +476,17 @@ class Sharded(OuterSyncStrategy):
     sharded_state = True
 
     def __post_init__(self):
-        if not isinstance(self.inner, (FlatFP32, Quantized)):
+        if isinstance(self.inner, Int8Wire):
+            if not self.inner.reduce_scatter:
+                # normalize: the sharded wire exchange IS the rs/ag path
+                object.__setattr__(
+                    self, "inner",
+                    dataclasses.replace(self.inner, reduce_scatter=True))
+        elif not isinstance(self.inner, (FlatFP32, Quantized)):
             raise ValueError(
-                f"Sharded composes FlatFP32 or Quantized, got "
-                f"{type(self.inner).__name__}: the int8 ring exchange "
-                f"(Int8Wire) owns its own layout and cannot run on "
-                f"auto-axis shards")
+                f"Sharded composes FlatFP32, Quantized or Int8Wire, got "
+                f"{type(self.inner).__name__}: combinators cannot nest "
+                f"inside the sharded exchange")
 
     @property
     def name(self) -> str:
@@ -309,8 +497,15 @@ class Sharded(OuterSyncStrategy):
         return self.inner.needs_residual
 
     @property
+    def needs_residual2(self) -> bool:  # type: ignore[override]
+        return self.inner.needs_residual2
+
+    @property
     def wire_format(self) -> str:  # type: ignore[override]
         return self.inner.wire_format
+
+    def wire_bytes_per_param(self, tc) -> float:
+        return self.inner.wire_bytes_per_param(tc)
 
     def transport_name(self, mesh=None) -> str:
         return self.inner.transport_name(mesh)
@@ -320,14 +515,31 @@ class Sharded(OuterSyncStrategy):
 
     def reduce_leaf(self, d, r, tc, ctx: ReduceCtx):
         d = constrain_to_spec(d, ctx.leaf_spec, ctx)
+        if isinstance(self.inner, Int8Wire):
+            # the rs/ag exchange owns reduction AND layout: run it, then
+            # pin the delivered payload and both residuals back to the
+            # leaf's auto-axis spec so the outer state stays shard-resident
+            d, rr = self.inner.reduce_leaf(d, r, tc, ctx)
+            d = constrain_to_spec(d, ctx.leaf_spec, ctx)
+            if isinstance(rr, tuple):
+                rr = tuple(
+                    constrain_to_spec(x, ctx.leaf_spec, ctx)
+                    if x is not None else None for x in rr)
+            elif rr is not None:
+                rr = constrain_to_spec(rr, ctx.leaf_spec, ctx)
+            return d, rr
         if isinstance(self.inner, Quantized):
             block = self.inner.block
             if d.size % (block * max(ctx.auto_size(), 1)) == 0:
                 d, r = self._compress_sharded(d, r, ctx)
+            elif _can_pad_in_manual():
+                # modern jax: pad the flat payload to whole per-shard
+                # blocks in-graph and take the shard-local path anyway
+                d, r = self._compress_sharded(d, r, ctx, pad=True)
             else:
-                # Ragged leaf: padding (or slicing) the flat payload
-                # inside the partial-manual region trips an XLA
-                # partitioner CHECK on jaxlib 0.4.x
+                # Ragged leaf on jaxlib 0.4.x: padding (or slicing) the
+                # flat payload inside the partial-manual region trips an
+                # XLA partitioner CHECK
                 # (hlo_sharding_util IsManualSubgroup — the same class
                 # of CHECK that gates md_dryrun_mini), so leaves that
                 # don't divide into whole per-shard blocks keep the
@@ -345,14 +557,19 @@ class Sharded(OuterSyncStrategy):
         d = constrain_to_spec(d, ctx.leaf_spec, ctx)
         return d, r
 
-    def _compress_sharded(self, d, r, ctx: ReduceCtx):
+    def _compress_sharded(self, d, r, ctx: ReduceCtx, *, pad: bool = False):
         """Shard-local blockwise quantize/dequantize with error feedback.
 
         Works on the flat payload constrained to one combined auto-axis
-        dim; the caller guarantees the leaf divides into whole per-shard
-        blocks (``n % (block·shards) == 0``), so the quantize/dequantize
-        round trip never crosses a shard boundary and no in-graph
-        pad/slice is needed.
+        dim. Without ``pad`` the caller guarantees the leaf divides into
+        whole per-shard blocks (``n % (block·shards) == 0``), so the
+        quantize/dequantize round trip never crosses a shard boundary and
+        no in-graph pad/slice is needed. With ``pad`` (ragged leaves on
+        modern jax — :func:`_can_pad_in_manual`) the flat payload is
+        zero-padded to the next whole per-shard block multiple first and
+        the round trip sliced back; zero padding quantizes to zero scales
+        and dequantizes to exact zeros, so the blocks covering real data
+        are bitwise unchanged.
         """
         from jax.sharding import PartitionSpec as P
 
@@ -365,12 +582,19 @@ class Sharded(OuterSyncStrategy):
         if r is not None:
             c = c + r.astype(jnp.float32)
         flat = c.reshape(-1)
+        n = flat.shape[0]
+        if pad:
+            unit = block * max(ctx.auto_size(), 1)
+            flat = jnp.pad(flat, (0, -n % unit))
         row = P(tuple(ctx.auto_axes)) if ctx.auto_axes else None
         flat = constrain_to_spec(flat, row, ctx)
         q, s = quant(flat)
         q = constrain_to_spec(q, row, ctx)
         s = constrain_to_spec(s, row, ctx)
-        payload = dequant(q, s).reshape(c.shape)
+        payload = dequant(q, s)
+        if pad:  # keep the divisible path's graph byte-identical: no slice
+            payload = payload[:n]
+        payload = payload.reshape(c.shape)
         payload = constrain_to_spec(payload, ctx.leaf_spec, ctx)
         new_r = constrain_to_spec(c - payload, ctx.leaf_spec, ctx)
         return payload, new_r
@@ -402,6 +626,15 @@ class Hierarchical(OuterSyncStrategy):
 
     two_stage = True
 
+    def __post_init__(self):
+        if getattr(self.inner, "needs_residual2", False):
+            raise ValueError(
+                "Hierarchical cannot compose the reduce-scatter wire "
+                "path: the rs/ag exchange already owns the slow-axis "
+                "layout (its shards ARE the endpoints); use the plain "
+                "int8-wire ring under Hierarchical, or rs-ag flat / "
+                "under Sharded")
+
     @property
     def name(self) -> str:
         return f"hierarchical[{self.inner.name}]"
@@ -417,6 +650,9 @@ class Hierarchical(OuterSyncStrategy):
     @property
     def sharded_state(self) -> bool:  # type: ignore[override]
         return self.inner.sharded_state
+
+    def wire_bytes_per_param(self, tc) -> float:
+        return self.inner.wire_bytes_per_param(tc)
 
     def transport_name(self, mesh=None) -> str:
         return self.inner.transport_name(mesh)
@@ -502,6 +738,14 @@ class Chunked(OuterSyncStrategy):
     inner: OuterSyncStrategy = FlatFP32()
     num_chunks: int = 2
 
+    def __post_init__(self):
+        if getattr(self.inner, "needs_residual2", False):
+            raise ValueError(
+                "Chunked cannot (yet) compose the reduce-scatter wire "
+                "path: per-chunk threading of the second residual is a "
+                "recorded follow-up (DESIGN.md §14); use rs-ag with "
+                "chunks=1")
+
     @property
     def name(self) -> str:
         return f"chunked({self.num_chunks})[{self.inner.name}]"
@@ -521,6 +765,9 @@ class Chunked(OuterSyncStrategy):
     @property
     def sharded_state(self) -> bool:  # type: ignore[override]
         return self.inner.sharded_state
+
+    def wire_bytes_per_param(self, tc) -> float:
+        return self.inner.wire_bytes_per_param(tc)
 
     def transport_name(self, mesh=None) -> str:
         return self.inner.transport_name(mesh)
@@ -584,6 +831,9 @@ def resolve_strategy(cfg) -> OuterSyncStrategy:
         core = Quantized(bits=comm.bits, block=comm.block)
     elif comm.compression == "int8-wire":
         core = Int8Wire(bits=comm.bits, block=comm.block)
+    elif comm.compression == "rs-ag":
+        core = Int8Wire(bits=comm.bits, block=comm.block,
+                        reduce_scatter=True)
     elif comm.compression == "none":
         core = FlatFP32()
     else:
@@ -599,12 +849,19 @@ def resolve_strategy(cfg) -> OuterSyncStrategy:
 
 def strategy_name(*, bits: int = 32, block: int = 256,
                   hierarchical: bool = False, chunks: int = 1,
-                  sharded: bool = False) -> str:
-    """Resolved-strategy name for benchmark knobs (bits >= 32 = fp32)."""
+                  sharded: bool = False,
+                  compression: Optional[str] = None) -> str:
+    """Resolved-strategy name for benchmark knobs (bits >= 32 = fp32).
+
+    ``compression`` pins the wire format explicitly (``"int8-wire"``,
+    ``"rs-ag"``, ...); when ``None`` it is inferred from ``bits`` the
+    legacy way (fp32 vs blockwise quantize)."""
     from repro.config import OuterCommConfig
 
+    if compression is None:
+        compression = "none" if bits >= 32 else "quantize"
     comm = OuterCommConfig(
-        compression="none" if bits >= 32 else "quantize",
+        compression=compression,
         bits=bits if bits < 32 else 8, block=block,
         hierarchical=hierarchical, chunks=chunks, sharded=sharded)
     return resolve_strategy(comm).name

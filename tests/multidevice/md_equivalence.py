@@ -306,3 +306,80 @@ print("sharded dispatch buffers per-device bytes:",
       f"target {t_per_dev}/{t_total} snapshot {s_per_dev}/{s_total}")
 
 print("MD_EQUIVALENCE_OK")
+
+
+# ---- quantized reduce-scatter + all-gather wire path (DESIGN.md §14):
+# each group ships only its 1/E shard of the quantized payload across
+# data_outer, re-quantizes the reduced shard (second error-feedback
+# residual), and all-gathers the re-quantized slots. The simulator runs
+# the identical rs_ag_qs_ref subgraph, so while the two engines feed the
+# exchange bitwise-identical inputs (through the first two syncs, before
+# shard_map-vs-vmap inner-step fusion noise creeps in) the params AND
+# both residuals stay exactly equal. After that, ~1e-6 of inner noise can
+# land on a quantization rounding boundary and flip one int8 level —
+# one quant step at the leaf's scale — so the long-run bound is
+# quant-step-scaled rather than the fp32 5e-4. ----
+def _worst_rs(sim_x, trainer_x, *trees):
+    worst = 0.0
+    pairs = [(jax.tree.map(lambda g: g[0], sim_x.state.group_params),
+              jax.tree.map(lambda x: x[0], trainer_x.state.params)),
+             (sim_x.state.outer.residual, trainer_x.outer.residual),
+             (sim_x.state.outer.residual2, trainer_x.outer.residual2)]
+    for sa, sb in pairs:
+        for a, b in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
+            worst = max(worst, float(jnp.abs(jnp.asarray(a, jnp.float32)
+                                             - jnp.asarray(b,
+                                                           jnp.float32)).max()))
+    return worst
+
+
+def _drive_rs(tc_x, label):
+    sim_x = SimulatedRun(mc, tc_x, num_groups=2, seed=0)
+    trainer_x = Trainer(mc, tc_x, pc, mesh)
+    assert trainer_x.bundle.plan.needs_residual2
+    for step in range(8):  # two syncs (3, 7) on bitwise-identical inputs
+        batch = sim_x._global_batch(step)
+        dist_batch = jax.device_put(
+            batch, trainer_x.bundle.batch_sharding(batch))
+        trainer_x.train_step(dist_batch)
+        sim_x.run(1)
+    exact = _worst_rs(sim_x, trainer_x)
+    print(f"divergence through sync 2 ({label}):", exact)
+    assert exact == 0.0, exact
+    for step in range(8, 16):  # two more syncs on noise-perturbed inputs
+        batch = sim_x._global_batch(step)
+        dist_batch = jax.device_put(
+            batch, trainer_x.bundle.batch_sharding(batch))
+        trainer_x.train_step(dist_batch)
+        sim_x.run(1)
+    worst = _worst_rs(sim_x, trainer_x)
+    print(f"max divergence (sim vs dist, {label}):", worst)
+    assert worst < 5e-2, worst  # <= a few int8 steps at leaf scale
+    assert any(float(jnp.abs(r).max()) > 0
+               for r in jax.tree.leaves(trainer_x.outer.residual))
+    assert any(float(jnp.abs(r).max()) > 0
+               for r in jax.tree.leaves(trainer_x.outer.residual2))
+    assert any(float(jnp.abs(r).max()) > 0
+               for r in jax.tree.leaves(sim_x.state.outer.residual2))
+    return trainer_x
+
+
+tc_rs = tc.replace(outer_comm=OuterCommConfig(
+    compression="rs-ag", bits=8, block=64))
+trainer_rs = _drive_rs(tc_rs, "rs-ag int8")
+
+# ---- Sharded(Int8Wire): the wire core composes with the sharded outer
+# exchange — Sharded force-normalizes the inner onto the rs-ag path so
+# each lane ships only slot-sized buffers. Same bitwise-then-bounded
+# contract; outer state keeps the §10 sharded layout alongside both
+# residuals. ----
+tc_sw = tc.replace(outer_comm=OuterCommConfig(
+    compression="int8-wire", bits=8, block=64, sharded=True))
+trainer_sw = _drive_rs(tc_sw, "sharded int8-wire rs-ag")
+assert trainer_sw.strategy.inner.reduce_scatter
+for name, tree in [("momentum", trainer_sw.outer.momentum),
+                   ("anchor", trainer_sw.outer.anchor)]:
+    total, per_dev, min_ratio = _per_device_bytes(tree)
+    assert min_ratio == 0.25, (name, min_ratio)
+    assert per_dev < 0.6 * total, (name, per_dev, total)
+print("MD_RS_AG_OK")

@@ -286,22 +286,23 @@ def test_warmup_windows_feed_measured_controller():
     assert mdc.t_comm is not None
 
 
-def test_warmup_measurement_skipped_for_compressed_wire():
-    """The accumulate always reduces fp32, which says nothing about a
-    packed int8 wire's timing — strategies whose plan declares a
-    non-fp32 ``wire_format`` start measuring at the first outer window,
-    as before. (``Quantized`` is NOT such a strategy: its collective is
-    the fp32 exact wire model, so it measures during warmup too.)"""
+def test_warmup_measurement_rescaled_for_compressed_wire():
+    """The accumulate always reduces fp32, which over-estimates a packed
+    int8 wire's collective by the payload-width ratio — so compressed
+    strategies now measure during warmup too, with ``warmup=True``
+    samples scaled by ``warmup_scale`` (wire bytes/param over fp32's
+    4.0; the scale value itself is unit-tested in test_rs_ag_wire.py).
+    Before DESIGN.md §14 these windows were skipped outright and d*
+    deferred to the fallback until post-warmup syncs were paid for."""
     tc = _tc(total_steps=24, sync_interval=4, warmup_frac=0.5,
              sync_delay=0,
              outer_comm=OuterCommConfig(compression="int8-wire", bits=8,
                                         block=BLOCK))
     tr, mdc = _measured_trainer(tc)
     _run_trainer(tr, 12)
-    assert mdc.windows == 0  # warmup said nothing about the int8 wire
-    assert mdc.wants_measurement
-    _run_trainer(tr, 12)  # outer syncs at 15/19/23 measure as before
-    assert mdc.windows == 3
+    assert mdc.windows == 3  # warmup windows sampled like fp32's
+    assert not mdc.wants_measurement  # max_windows reached inside warmup
+    assert mdc.t_comm is not None
 
 
 # ---------------------------------------------------------------------------

@@ -148,11 +148,17 @@ def test_sharded_resolution_and_names():
     assert not Quantized().sharded_state
 
 
-def test_sharded_rejects_wire_strategies():
-    with pytest.raises(ValueError, match="int8"):
-        OuterCommConfig(compression="int8-wire", sharded=True)
-    with pytest.raises(ValueError, match="Sharded composes"):
-        Sharded(Int8Wire())
+def test_sharded_composes_wire_cores_rejects_combinators():
+    # Sharded(Int8Wire) now composes (DESIGN.md §14): the wire core is
+    # force-normalized onto the rs-ag path so each lane's exchange ships
+    # only slot-sized buffers.
+    s = Sharded(Int8Wire())
+    assert s.inner.reduce_scatter and s.needs_residual2
+    assert Sharded(Int8Wire(reduce_scatter=True)).inner.reduce_scatter
+    comm = OuterCommConfig(compression="int8-wire", sharded=True)
+    r = resolve_strategy(comm)
+    assert isinstance(r, Sharded) and r.inner.reduce_scatter
+    # nested combinators still cannot ride inside the sharded exchange
     with pytest.raises(ValueError, match="Sharded composes"):
         Sharded(Sharded(FlatFP32()))
 
